@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, CSV emission, scaled dataset sizes.
+
+The paper's experiments run multi-million-point datasets on an M1 laptop
+for minutes-to-hours.  This container is a single CPU core shared with
+the test suite, so every benchmark exposes a ``scale`` knob; the default
+sizes keep each figure under a few minutes while preserving the paper's
+qualitative relationships (the full-size invocations are documented in
+EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "bench_results")
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    return path

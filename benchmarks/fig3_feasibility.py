@@ -1,0 +1,79 @@
+"""Paper Fig. 3 — feasibility of the exact dynamic algorithm.
+
+Protocol (scaled): build the exact dynamic structure over a Gaussian
+Mixtures dataset, then apply 1%–10% insertions and deletions, measuring
+per-update-batch runtime against a static recompute; decompose runtime
+into kNN-maintenance vs MST-update time and track Borůvka component
+counts (Fig. 3b–d).
+
+Paper finding to reproduce: update cost grows steeply with the update
+fraction; beyond a few % of deletions the static recompute wins."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dynamic import DynamicHDBSCAN
+from repro.core.hdbscan import hdbscan
+from repro.data.synthetic import gaussian_mixtures
+
+from .common import Timer, emit, save_json
+
+
+def run(n: int = 4000, d: int = 10, min_pts: int = 10, seed: int = 0):
+    X, _ = gaussian_mixtures(n + n // 5, d=d, k=20, seed=seed)
+    base, extra = X[:n], X[n:]
+    dyn = DynamicHDBSCAN(min_pts=min_pts, dim=d, capacity=2 * n)
+    with Timer() as t_build:
+        for p in base:
+            dyn.insert(p)
+    with Timer() as t_static:
+        hdbscan(base, min_pts=min_pts)
+    rows = []
+    for frac in (0.01, 0.02, 0.04, 0.06, 0.08, 0.10):
+        m = int(frac * n)
+        # fresh copy of stats for decomposition
+        dyn.stats = {"knn_time": 0.0, "mst_time": 0.0, "rknn_sizes": [], "boruvka_components": []}
+        with Timer() as t_ins:
+            for p in extra[:m]:
+                dyn.insert(p)
+        ins_knn, ins_mst = dyn.stats["knn_time"], dyn.stats["mst_time"]
+        dyn.stats = {"knn_time": 0.0, "mst_time": 0.0, "rknn_sizes": [], "boruvka_components": []}
+        alive = np.nonzero(dyn.alive)[0]
+        with Timer() as t_del:
+            for i in alive[:m]:
+                dyn.delete(int(i))
+        comp = dyn.stats["boruvka_components"]
+        rows.append(
+            {
+                "frac": frac,
+                "insert_s": t_ins.seconds,
+                "delete_s": t_del.seconds,
+                "insert_knn_s": ins_knn,
+                "insert_mst_s": ins_mst,
+                "delete_knn_s": dyn.stats["knn_time"],
+                "delete_mst_s": dyn.stats["mst_time"],
+                "mean_boruvka_components": float(np.mean(comp)) if comp else 0.0,
+                "static_s": t_static.seconds,
+                "dynamic_beats_static_insert": t_ins.seconds < t_static.seconds,
+                "dynamic_beats_static_delete": t_del.seconds < t_static.seconds,
+            }
+        )
+        emit(
+            f"fig3/update_{int(frac * 100)}pct",
+            t_ins.seconds + t_del.seconds,
+            f"ins={t_ins.seconds:.2f}s del={t_del.seconds:.2f}s static={t_static.seconds:.2f}s "
+            f"comp={rows[-1]['mean_boruvka_components']:.0f}",
+        )
+    out = {"n": n, "d": d, "min_pts": min_pts, "build_s": t_build.seconds, "static_s": t_static.seconds, "rows": rows}
+    save_json("fig3_feasibility", out)
+    # the paper's qualitative claims
+    del_times = [r["delete_s"] for r in rows]
+    assert del_times[-1] > del_times[0], "delete cost should grow with update fraction"
+    return out
+
+
+if __name__ == "__main__":
+    run()

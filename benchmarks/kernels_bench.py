@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp reference.
+
+On CPU the interpret path is *slower* than jnp (it executes the kernel
+body in Python) — the numbers here document correctness-path overhead and
+give the jnp-reference throughput; TPU wall-clock comes from the roofline
+model (the kernels are MXU matmul + VPU epilogue, compute-bound at
+2·n·m·d flops over (n+m)·d·4 bytes)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import Timer, emit, save_json
+
+
+def _bench(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n: int = 2048, d: int = 16, k: int = 16, L: int = 64, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    R = rng.normal(size=(L, d)).astype(np.float32)
+    cd = np.abs(rng.normal(size=n)).astype(np.float32)
+    import jax.numpy as jnp
+
+    Xj = jnp.asarray(X)
+    rep = {}
+    flops_pw = 2.0 * n * n * d
+    jref = jax.jit(ref.pairwise_sqdist)
+    t = _bench(jref, Xj, Xj)
+    rep["pairwise_ref_jnp"] = {"s": t, "gflops": flops_pw / t / 1e9}
+    emit("kernels/pairwise_ref", t, f"{flops_pw / t / 1e9:.1f} GF/s (n={n}, d={d})")
+    jknn = jax.jit(lambda a: ref.knn(a, a, k))
+    t = _bench(jknn, Xj)
+    rep["knn_ref_jnp"] = {"s": t}
+    emit("kernels/knn_ref", t, f"k={k}")
+    jass = jax.jit(ref.assign)
+    t = _bench(jass, Xj, jnp.asarray(R))
+    rep["assign_ref_jnp"] = {"s": t}
+    emit("kernels/assign_ref", t, f"L={L}")
+    jbmr = jax.jit(lambda r, nn, e: ops.bubble_mutual_reachability(r, nn, e, 10))
+    nb = np.abs(rng.normal(size=L)).astype(np.float32) + 1
+    eb = np.abs(rng.normal(size=L)).astype(np.float32)
+    t = _bench(jbmr, jnp.asarray(R), jnp.asarray(nb), jnp.asarray(eb))
+    rep["bubble_mr"] = {"s": t}
+    emit("kernels/bubble_mutual_reach", t, f"L={L}")
+    # interpret-mode spot check (tiny shapes; full sweep lives in tests/)
+    Xs = X[:256]
+    with Timer() as ti:
+        ops.pairwise_sqdist(Xs, Xs)
+    rep["pairwise_pallas_interpret_256"] = {"s": ti.seconds}
+    emit("kernels/pairwise_pallas_interpret", ti.seconds, "n=256 (CPU interpret mode)")
+    save_json("kernels_bench", rep)
+    return rep
+
+
+if __name__ == "__main__":
+    run()

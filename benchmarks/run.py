@@ -1,0 +1,77 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+the roofline report.  Emits ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything (scaled)
+  PYTHONPATH=src python -m benchmarks.run --only fig5,fig6
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list: fig3,fig4,fig5,fig6,fig7,kernels,roofline")
+    ap.add_argument("--dryrun", default="dryrun_results.json")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    failures = []
+    t_all = time.time()
+
+    if want("fig3"):
+        from . import fig3_feasibility
+
+        _guard(fig3_feasibility.run, failures, "fig3")
+    if want("fig4"):
+        from . import fig4_quality_toy
+
+        _guard(fig4_quality_toy.run, failures, "fig4")
+    if want("fig5"):
+        from . import fig5_latency
+
+        _guard(fig5_latency.run, failures, "fig5")
+    if want("fig6"):
+        from . import fig6_nmi
+
+        _guard(fig6_nmi.run, failures, "fig6")
+    if want("fig7"):
+        from . import fig7_scalability
+
+        _guard(fig7_scalability.run, failures, "fig7")
+    if want("kernels"):
+        from . import kernels_bench
+
+        _guard(kernels_bench.run, failures, "kernels")
+    if want("roofline"):
+        if os.path.exists(args.dryrun):
+            from . import roofline
+
+            _guard(lambda: roofline.main(["--dryrun", args.dryrun]), failures, "roofline")
+        else:
+            print(f"roofline/skipped,0,no {args.dryrun} (run repro.launch.dryrun first)")
+
+    dt = time.time() - t_all
+    print(f"\ntotal,{dt * 1e6:.0f},{'OK' if not failures else 'FAILURES: ' + ','.join(failures)}")
+    return 1 if failures else 0
+
+
+def _guard(fn, failures, name):
+    try:
+        fn()
+    except Exception:
+        failures.append(name)
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Serving example: continuous batching over a reduced zoo model.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch qwen1.5-0.5b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import model as M
+from repro.serving import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = C.get_smoke(args.arch)
+    values, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, values, slots=args.slots, cache_len=96)
+
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i in range(args.requests):
+        reqs.append(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 20))).astype(np.int32),
+                max_new_tokens=int(rng.integers(4, 12)),
+            )
+        )
+        eng.submit(reqs[-1])
+
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    assert all(r.done for r in reqs)
+    print(f"served {len(reqs)} variable-length requests on {args.slots} slots")
+    print(f"{eng.tokens_out} tokens in {eng.steps} engine steps, {dt:.1f}s "
+          f"({eng.tokens_out / dt:.1f} tok/s on CPU)")
+    occ = eng.tokens_out / (eng.steps * args.slots)
+    print(f"slot occupancy: {100 * occ:.0f}% (continuous batching keeps slots busy)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: {len(r.prompt)}-token prompt -> {r.generated}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

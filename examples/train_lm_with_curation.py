@@ -1,0 +1,84 @@
+"""End-to-end driver (deliverable b): train a reduced LM for a few hundred
+steps with the paper's Bubble-tree summarizer curating the data stream.
+
+This is the paper-technique-as-framework-feature integration: the curator
+ingests one embedding per training sequence (fully dynamic — old
+sequences retire as the window slides), and at checkpoint boundaries the
+offline HDBSCAN pass over ≤ L data bubbles reports cluster structure and
+drift, at O(L²) cost regardless of how many sequences streamed through.
+
+  PYTHONPATH=src python examples/train_lm_with_curation.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.data.curation import StreamCurator
+from repro.data.pipeline import TokenPipeline
+from repro.models import model as M
+from repro.train.optim import AdamWConfig, adamw_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--window", type=int, default=64, help="curation window (sequences)")
+    args = ap.parse_args(argv)
+
+    cfg = C.get_smoke(args.arch)  # ~100M-class reduced config on CPU
+    values, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"{args.arch} (reduced): {M.count_params(values):,} params")
+
+    step_fn = jax.jit(M.make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)),
+                      donate_argnums=(0, 1))
+    opt_state = adamw_init(values)
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    model = M.build_model(cfg)
+    embed_fn = jax.jit(lambda p, t: model.forward(p, {"tokens": t, "labels": t}).mean(axis=1))
+
+    curator = StreamCurator(dim=16, min_pts=8, compression=0.1, drift_tol=0.4)
+    seq_ids = []
+
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        batch = next(pipe)
+        jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+        values, opt_state, m = step_fn(values, opt_state, jbatch)
+        losses.append(float(m["loss"]))
+
+        # --- curation plane: pooled logits as sequence embeddings ---
+        if step % 5 == 0:
+            emb = np.asarray(embed_fn(values, jbatch["tokens"]).astype(jnp.float32))[:, :16]
+            ids = [f"s{step}.{i}" for i in range(emb.shape[0])]
+            curator.observe_block(ids, emb)
+            seq_ids.extend(ids)
+            while len(seq_ids) > args.window:      # slide: retire oldest
+                curator.retire(seq_ids.pop(0))
+
+        if (step + 1) % 50 == 0:
+            rep = curator.curate(step=step + 1)
+            print(
+                f"step {step + 1:4d} loss {np.mean(losses[-50:]):.4f} | curation: "
+                f"{rep.n_clusters} clusters / {rep.n_bubbles} bubbles over "
+                f"{rep.n_examples} seqs, drift {rep.drift:.2f}"
+                + (" <-- DRIFT ALARM" if rep.drifted else "")
+            )
+
+    dt = time.time() - t0
+    print(f"\n{args.steps} steps in {dt:.1f}s; loss {losses[0]:.3f} -> {np.mean(losses[-20:]):.3f}")
+    assert np.mean(losses[-20:]) < losses[0], "training should reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

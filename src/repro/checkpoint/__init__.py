@@ -1,0 +1,3 @@
+from .store import CheckpointStore, latest_step, restore, save
+
+__all__ = ["CheckpointStore", "save", "restore", "latest_step"]

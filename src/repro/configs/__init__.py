@@ -1,0 +1,9 @@
+"""repro.configs — one module per assigned architecture (+ paper-native
+clustering configs in `paper.py`)."""
+
+from .base import ARCH_IDS, SHAPES, LONG_CONTEXT_OK, ArchConfig, ShapeConfig, cells, get, get_smoke
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "LONG_CONTEXT_OK", "ArchConfig", "ShapeConfig",
+    "cells", "get", "get_smoke",
+]

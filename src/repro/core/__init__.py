@@ -1,0 +1,40 @@
+"""repro.core — the paper's contribution: dynamic data summarization for
+hierarchical spatial clustering (Bubble-tree + exact dynamic HDBSCAN)."""
+
+from .baselines import ClusTreeLite, IncrementalBubbles
+from .bubble_tree import BubbleTree
+from .bubbles import DataBubbles, bubble_mutual_reachability, bubbles_from_cf
+from .cf import CFTable, cf_extent, cf_nn_dist, cf_of_points, cf_rep
+from .dynamic import DynamicHDBSCAN
+from .hdbscan import HDBSCANResult, core_distances, hdbscan, mutual_reachability
+from .metrics import ari, nmi
+from .mst import UnionFind, boruvka_dense, boruvka_jax, kruskal_edges
+from .summarizer import BubbleTreeSummarizer, assign_points, cluster_bubbles
+
+__all__ = [
+    "BubbleTree",
+    "BubbleTreeSummarizer",
+    "CFTable",
+    "ClusTreeLite",
+    "DataBubbles",
+    "DynamicHDBSCAN",
+    "HDBSCANResult",
+    "IncrementalBubbles",
+    "UnionFind",
+    "ari",
+    "assign_points",
+    "boruvka_dense",
+    "boruvka_jax",
+    "bubble_mutual_reachability",
+    "bubbles_from_cf",
+    "cf_extent",
+    "cf_nn_dist",
+    "cf_of_points",
+    "cf_rep",
+    "cluster_bubbles",
+    "core_distances",
+    "hdbscan",
+    "kruskal_edges",
+    "mutual_reachability",
+    "nmi",
+]

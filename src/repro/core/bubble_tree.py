@@ -1,0 +1,520 @@
+"""Bubble-tree (paper §4.1) — fully-dynamic balanced CF tree with a
+compression-factor-steered leaf count (Algorithm 1).
+
+Layout: flat structure-of-arrays (DESIGN.md §2).  Node statistics
+(LS/SS/n) live in dense numpy arrays indexed by node id, so the offline
+phase extracts the leaf CF table as an array *view* with zero copies and
+hands it straight to the JAX/Pallas bubble pipeline.  Tree topology
+(children lists, parent, height) is host-side — descent touches
+height × M ≈ tens of CFs and is latency-bound, far below any device
+dispatch threshold; the throughput path (`insert_block`) vectorizes
+point→leaf assignment over the whole leaf table instead.
+
+Properties maintained (paper Properties 1–4):
+  1. root has 2..M children (or is a leaf while the tree is small),
+  2. internal nodes have m..M children,
+  3. leaf CFs summarize actual points; internal CFs summarize children,
+  4. the number of leaves is steered to L = compression × N.
+
+Differences vs. ClusTree (§2.3): no decay, deletions are exact (CFs are
+sums), leaf count is *actively* rebalanced (split most-overfilled /
+dissolve most-underfilled / reorganize), making the summary
+order-independent — the property §5.1 demonstrates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .bubbles import DataBubbles, bubbles_from_cf
+from .cf import CFTable
+
+__all__ = ["BubbleTree"]
+
+
+class BubbleTree:
+    def __init__(
+        self,
+        dim: int,
+        M: int = 10,
+        m: int | None = None,
+        compression: float = 0.01,
+        min_leaves: int = 2,
+        capacity: int = 256,
+        reorg_every: int = 1,
+        assign_fn=None,
+    ):
+        if m is None:
+            m = max(2, M // 2 - 1)
+        assert 2 * m <= M + 1, "fanout invariant 2m <= M+1"
+        self.dim = dim
+        self.M = int(M)
+        self.m = int(m)
+        self.compression = float(compression)
+        self.min_leaves = int(min_leaves)
+        self.reorg_every = int(reorg_every)
+        self._op_count = 0
+        self._assign_fn = assign_fn  # optional accelerated point->leaf argmin
+
+        # --- node SoA ---
+        cap = capacity
+        self.LS = np.zeros((cap, dim), dtype=np.float64)
+        self.SS = np.zeros(cap, dtype=np.float64)
+        self.N = np.zeros(cap, dtype=np.float64)
+        self.parent = np.full(cap, -1, dtype=np.int64)
+        self.height = np.zeros(cap, dtype=np.int64)  # leaves: 0
+        self.node_alive = np.zeros(cap, dtype=bool)
+        self.is_leaf = np.zeros(cap, dtype=bool)
+        self.children: list[list[int]] = [[] for _ in range(cap)]
+        self.leaf_points: list[list[int]] = [[] for _ in range(cap)]
+        self._node_free = list(range(cap - 1, -1, -1))
+
+        # --- point store ---
+        pcap = capacity * 4
+        self.PX = np.zeros((pcap, dim), dtype=np.float64)
+        self.point_alive = np.zeros(pcap, dtype=bool)
+        self.point_leaf = np.full(pcap, -1, dtype=np.int64)
+        self._point_free = list(range(pcap - 1, -1, -1))
+        self.n_points = 0
+
+        self.root = self._new_node(leaf=True, height=0)
+
+    # ------------------------------------------------------------------
+    # storage
+    # ------------------------------------------------------------------
+
+    def _new_node(self, leaf: bool, height: int) -> int:
+        if not self._node_free:
+            cap = self.LS.shape[0]
+            self.LS = np.concatenate([self.LS, np.zeros((cap, self.dim))])
+            self.SS = np.concatenate([self.SS, np.zeros(cap)])
+            self.N = np.concatenate([self.N, np.zeros(cap)])
+            self.parent = np.concatenate([self.parent, np.full(cap, -1, dtype=np.int64)])
+            self.height = np.concatenate([self.height, np.zeros(cap, dtype=np.int64)])
+            self.node_alive = np.concatenate([self.node_alive, np.zeros(cap, dtype=bool)])
+            self.is_leaf = np.concatenate([self.is_leaf, np.zeros(cap, dtype=bool)])
+            self.children.extend([[] for _ in range(cap)])
+            self.leaf_points.extend([[] for _ in range(cap)])
+            self._node_free.extend(range(2 * cap - 1, cap - 1, -1))
+        nid = self._node_free.pop()
+        self.LS[nid] = 0.0
+        self.SS[nid] = 0.0
+        self.N[nid] = 0.0
+        self.parent[nid] = -1
+        self.height[nid] = height
+        self.node_alive[nid] = True
+        self.is_leaf[nid] = leaf
+        self.children[nid] = []
+        self.leaf_points[nid] = []
+        return nid
+
+    def _free_node(self, nid: int):
+        self.node_alive[nid] = False
+        self.children[nid] = []
+        self.leaf_points[nid] = []
+        self._node_free.append(nid)
+
+    def _new_point(self, p: np.ndarray) -> int:
+        if not self._point_free:
+            cap = self.PX.shape[0]
+            self.PX = np.concatenate([self.PX, np.zeros((cap, self.dim))])
+            self.point_alive = np.concatenate([self.point_alive, np.zeros(cap, dtype=bool)])
+            self.point_leaf = np.concatenate([self.point_leaf, np.full(cap, -1, dtype=np.int64)])
+            self._point_free.extend(range(2 * cap - 1, cap - 1, -1))
+        pid = self._point_free.pop()
+        self.PX[pid] = p
+        self.point_alive[pid] = True
+        self.point_leaf[pid] = -1
+        return pid
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    @property
+    def num_leaves(self) -> int:
+        return int(np.sum(self.node_alive & self.is_leaf))
+
+    @property
+    def target_L(self) -> int:
+        return max(self.min_leaves, int(round(self.compression * self.n_points)))
+
+    def alive_leaf_ids(self) -> np.ndarray:
+        return np.nonzero(self.node_alive & self.is_leaf)[0]
+
+    def leaf_cfs(self) -> CFTable:
+        ids = self.alive_leaf_ids()
+        return CFTable(LS=self.LS[ids], SS=self.SS[ids], n=self.N[ids])
+
+    def to_bubbles(self) -> DataBubbles:
+        t = self.leaf_cfs()
+        return bubbles_from_cf(t.LS, t.SS, t.n)
+
+    def alive_points(self):
+        ids = np.nonzero(self.point_alive)[0]
+        return ids, self.PX[ids]
+
+    def insert(self, p) -> int:
+        """Single-point insertion (paper §4.1 insertion algorithm)."""
+        p = np.asarray(p, dtype=np.float64)
+        pid = self._new_point(p)
+        self._insert_point_into_tree(pid)
+        self.n_points += 1
+        self._maintain()
+        return pid
+
+    def delete(self, pid: int):
+        """Single-point deletion (exact — CFs are subtractable sums)."""
+        if not self.point_alive[pid]:
+            raise KeyError(f"point {pid} not alive")
+        leaf = int(self.point_leaf[pid])
+        p = self.PX[pid]
+        self.leaf_points[leaf].remove(pid)
+        self._cf_update_path(leaf, -p, -float(p @ p), -1.0)
+        self.point_alive[pid] = False
+        self.point_leaf[pid] = -1
+        self._point_free.append(pid)
+        self.n_points -= 1
+        if len(self.leaf_points[leaf]) < self.m and self.num_leaves > 1:
+            self._dissolve_leaf(leaf)
+        self._maintain()
+
+    def insert_block(self, X) -> list[int]:
+        """Throughput path: vectorized point→leaf assignment for a block,
+        then CF bulk update + maintenance.  Matches repeated insert() up to
+        maintenance scheduling (CF additivity makes the stats identical)."""
+        X = np.asarray(X, dtype=np.float64)
+        if X.shape[0] == 0:
+            return []
+        if self.n_points == 0 or self.num_leaves <= 1:
+            # bootstrap sequentially until structure exists
+            head = [self.insert(p) for p in X[: self.M]]
+            if X.shape[0] <= self.M:
+                return head
+            return head + self.insert_block(X[self.M:])
+        leaf_ids = self.alive_leaf_ids()
+        reps = self.LS[leaf_ids] / np.maximum(self.N[leaf_ids], 1.0)[:, None]
+        if self._assign_fn is not None:
+            assign = np.asarray(self._assign_fn(X, reps))
+        else:
+            sq = (
+                np.einsum("id,id->i", X, X)[:, None]
+                + np.einsum("jd,jd->j", reps, reps)[None, :]
+                - 2.0 * X @ reps.T
+            )
+            assign = np.argmin(sq, axis=1)
+        pids = []
+        for row, p in enumerate(X):
+            pid = self._new_point(p)
+            leaf = int(leaf_ids[assign[row]])
+            self.leaf_points[leaf].append(pid)
+            self.point_leaf[pid] = leaf
+            pids.append(pid)
+        # bulk CF update per leaf, then fix ancestors bottom-up
+        for row, pid in enumerate(pids):
+            leaf = int(self.point_leaf[pid])
+            p = X[row]
+            self.LS[leaf] += p
+            self.SS[leaf] += float(p @ p)
+            self.N[leaf] += 1.0
+        self._recompute_internal_cfs()
+        self.n_points += len(pids)
+        deficit = abs(self.target_L - self.num_leaves) + 2
+        for _ in range(deficit):
+            if not self._maintain(single_step=True):
+                break
+        return pids
+
+    def delete_block(self, pids):
+        for pid in pids:
+            self.delete(int(pid))
+
+    # ------------------------------------------------------------------
+    # insertion internals
+    # ------------------------------------------------------------------
+
+    def _choose_child(self, nid: int, p: np.ndarray) -> int:
+        kids = self.children[nid]
+        ids = np.asarray(kids, dtype=np.int64)
+        reps = self.LS[ids] / np.maximum(self.N[ids], 1.0)[:, None]
+        diff = reps - p[None, :]
+        j = int(np.argmin(np.einsum("kd,kd->k", diff, diff)))
+        return kids[j]
+
+    def _descend_to_height(self, p: np.ndarray, h: int) -> int:
+        nid = self.root
+        while self.height[nid] > h:
+            nid = self._choose_child(nid, p)
+        return nid
+
+    def _cf_update_path(self, nid: int, dLS, dSS: float, dN: float):
+        while nid != -1:
+            self.LS[nid] += dLS
+            self.SS[nid] += dSS
+            self.N[nid] += dN
+            nid = int(self.parent[nid])
+
+    def _insert_point_into_tree(self, pid: int):
+        p = self.PX[pid]
+        leaf = self._descend_to_height(p, 0)
+        self.leaf_points[leaf].append(pid)
+        self.point_leaf[pid] = leaf
+        self._cf_update_path(leaf, p, float(p @ p), 1.0)
+
+    def _attach_node(self, child: int, target_parent: int):
+        self.children[target_parent].append(child)
+        self.parent[child] = target_parent
+        self._cf_update_path(
+            target_parent, self.LS[child].copy(), float(self.SS[child]), float(self.N[child])
+        )
+        if len(self.children[target_parent]) > self.M:
+            self._split_internal(target_parent)
+
+    def _insert_node_at_height(self, child: int):
+        """Reinsert a detached subtree at its proper depth (R*-style)."""
+        want_parent_h = int(self.height[child]) + 1
+        if self.height[self.root] < want_parent_h:
+            # tree shrank below the subtree height: graft by raising a root
+            self._raise_root(want_parent_h)
+        rep = self.LS[child] / max(float(self.N[child]), 1.0)
+        nid = self.root
+        while self.height[nid] > want_parent_h:
+            nid = self._choose_child(nid, rep)
+        self._attach_node(child, nid)
+
+    def _raise_root(self, h: int):
+        while self.height[self.root] < h:
+            new_root = self._new_node(leaf=False, height=int(self.height[self.root]) + 1)
+            self.children[new_root] = [self.root]
+            self.parent[self.root] = new_root
+            self.LS[new_root] = self.LS[self.root].copy()
+            self.SS[new_root] = self.SS[self.root]
+            self.N[new_root] = self.N[self.root]
+            self.root = new_root
+
+    # ------------------------------------------------------------------
+    # splits
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _two_seeds(P: np.ndarray) -> tuple[int, int]:
+        """Approximate farthest pair: farthest-from-centroid, then
+        farthest-from-seed1 (linear-time; paper uses farthest pair)."""
+        c = P.mean(axis=0)
+        d0 = np.einsum("nd,nd->n", P - c, P - c)
+        s1 = int(np.argmax(d0))
+        d1 = np.einsum("nd,nd->n", P - P[s1], P - P[s1])
+        s2 = int(np.argmax(d1))
+        if s1 == s2:
+            s2 = (s1 + 1) % P.shape[0]
+        return s1, s2
+
+    def _partition_by_seeds(self, P: np.ndarray, min_each: int):
+        s1, s2 = self._two_seeds(P)
+        d1 = np.einsum("nd,nd->n", P - P[s1], P - P[s1])
+        d2 = np.einsum("nd,nd->n", P - P[s2], P - P[s2])
+        side = d1 <= d2
+        # enforce minimum group sizes by moving boundary entries
+        margin = d1 - d2
+        order = np.argsort(margin)  # most side-1-ish first
+        side = np.zeros(P.shape[0], dtype=bool)
+        n1 = max(min_each, int((d1 <= d2).sum()))
+        n1 = min(n1, P.shape[0] - min_each)
+        side[order[:n1]] = True
+        return side
+
+    def _split_leaf(self, leaf: int) -> int | None:
+        pts = self.leaf_points[leaf]
+        if len(pts) < 2 * self.m:
+            return None
+        P = self.PX[np.asarray(pts, dtype=np.int64)]
+        side = self._partition_by_seeds(P, self.m)
+        keep = [pid for pid, s in zip(pts, side) if s]
+        move = [pid for pid, s in zip(pts, side) if not s]
+        sib = self._new_node(leaf=True, height=0)
+        self.leaf_points[sib] = move
+        for pid in move:
+            self.point_leaf[pid] = sib
+        self.leaf_points[leaf] = keep
+        Pm = self.PX[np.asarray(move, dtype=np.int64)]
+        mLS = Pm.sum(axis=0)
+        mSS = float(np.einsum("nd,nd->", Pm, Pm))
+        mN = float(len(move))
+        self.LS[sib] = mLS
+        self.SS[sib] = mSS
+        self.N[sib] = mN
+        # shrink the original leaf and its ancestors by the moved mass
+        self._cf_update_path(leaf, -mLS, -mSS, -mN)
+        # attach sibling (restores the mass from the split point upward)
+        par = int(self.parent[leaf])
+        if par == -1:
+            new_root = self._new_node(leaf=False, height=1)
+            self.children[new_root] = [leaf]
+            self.parent[leaf] = new_root
+            self.LS[new_root] = self.LS[leaf].copy()
+            self.SS[new_root] = self.SS[leaf]
+            self.N[new_root] = self.N[leaf]
+            self.root = new_root
+            par = new_root
+        self._attach_node(sib, par)
+        return sib
+
+    def _split_internal(self, nid: int):
+        kids = list(self.children[nid])
+        ids = np.asarray(kids, dtype=np.int64)
+        reps = self.LS[ids] / np.maximum(self.N[ids], 1.0)[:, None]
+        side = self._partition_by_seeds(reps, self.m)
+        keep = [k for k, s in zip(kids, side) if s]
+        move = [k for k, s in zip(kids, side) if not s]
+        sib = self._new_node(leaf=False, height=int(self.height[nid]))
+        self.children[sib] = move
+        for k in move:
+            self.parent[k] = sib
+        self.children[nid] = keep
+        mids = np.asarray(move, dtype=np.int64)
+        mLS = self.LS[mids].sum(axis=0)
+        mSS = float(self.SS[mids].sum())
+        mN = float(self.N[mids].sum())
+        self.LS[sib] = mLS
+        self.SS[sib] = mSS
+        self.N[sib] = mN
+        self._cf_update_path(nid, -mLS, -mSS, -mN)
+        par = int(self.parent[nid])
+        if par == -1:
+            new_root = self._new_node(leaf=False, height=int(self.height[nid]) + 1)
+            self.children[new_root] = [nid]
+            self.parent[nid] = new_root
+            self.LS[new_root] = self.LS[nid].copy()
+            self.SS[new_root] = self.SS[nid]
+            self.N[new_root] = self.N[nid]
+            self.root = new_root
+            par = new_root
+        self._attach_node(sib, par)
+
+    # ------------------------------------------------------------------
+    # dissolution / condensation
+    # ------------------------------------------------------------------
+
+    def _detach_child(self, nid: int):
+        par = int(self.parent[nid])
+        if par == -1:
+            return
+        self.children[par].remove(nid)
+        self._cf_update_path(par, -self.LS[nid], -float(self.SS[nid]), -float(self.N[nid]))
+        self.parent[nid] = -1
+        # condense upward
+        if par != self.root and len(self.children[par]) < self.m:
+            orphans = list(self.children[par])
+            self.children[par] = []
+            self._detach_child(par)
+            self._free_node(par)
+            for o in orphans:
+                self._insert_node_at_height(o)
+        elif par == self.root and not self.is_leaf[par] and len(self.children[par]) == 1:
+            only = self.children[par][0]
+            self.children[par] = []
+            self._free_node(par)
+            self.parent[only] = -1
+            self.root = only
+
+    def _dissolve_leaf(self, leaf: int):
+        pts = list(self.leaf_points[leaf])
+        self.leaf_points[leaf] = []
+        self._cf_update_path(
+            leaf,
+            -self.LS[leaf].copy(),
+            -float(self.SS[leaf]),
+            -float(self.N[leaf]),
+        )
+        # the path update zeroed this leaf's own stats too via first hop
+        self._detach_child(leaf)
+        self._free_node(leaf)
+        for pid in pts:
+            self._insert_point_into_tree(pid)
+
+    # ------------------------------------------------------------------
+    # Algorithm 1 — MaintainCompression
+    # ------------------------------------------------------------------
+
+    def _most_underfilled(self) -> int:
+        ids = self.alive_leaf_ids()
+        return int(ids[np.argmin(self.N[ids])])
+
+    def _most_overfilled(self) -> int:
+        ids = self.alive_leaf_ids()
+        return int(ids[np.argmax(self.N[ids])])
+
+    def _maintain(self, single_step: bool = False) -> bool:
+        """One application of Algorithm 1.  Returns True if a structural
+        change was made (used by insert_block's deficit loop)."""
+        L = self.target_L
+        nl = self.num_leaves
+        self._op_count += 1
+        if nl > L and nl > 1:
+            u = self._most_underfilled()
+            self._dissolve_leaf(u)
+            return True
+        if nl < L:
+            o = self._most_overfilled()
+            return self._split_leaf(o) is not None
+        if self.reorg_every and (self._op_count % self.reorg_every == 0):
+            # dynamic reorganization: extract + reinsert m farthest points
+            # of the most overfilled leaf
+            o = self._most_overfilled()
+            pts = self.leaf_points[o]
+            if len(pts) >= 2 * self.m:
+                ids = np.asarray(pts, dtype=np.int64)
+                rep = self.LS[o] / max(float(self.N[o]), 1.0)
+                diff = self.PX[ids] - rep[None, :]
+                far = np.argsort(-np.einsum("nd,nd->n", diff, diff))[: self.m]
+                far_pids = [pts[int(j)] for j in far]
+                for pid in far_pids:
+                    self.leaf_points[o].remove(pid)
+                    p = self.PX[pid]
+                    self._cf_update_path(o, -p, -float(p @ p), -1.0)
+                    self.point_leaf[pid] = -1
+                for pid in far_pids:
+                    self._insert_point_into_tree(pid)
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    # consistency checking (tests)
+    # ------------------------------------------------------------------
+
+    def _recompute_internal_cfs(self):
+        order = np.nonzero(self.node_alive & ~self.is_leaf)[0]
+        order = order[np.argsort(self.height[order])]
+        for nid in order:
+            ids = np.asarray(self.children[nid], dtype=np.int64)
+            self.LS[nid] = self.LS[ids].sum(axis=0)
+            self.SS[nid] = float(self.SS[ids].sum())
+            self.N[nid] = float(self.N[ids].sum())
+
+    def check_invariants(self):
+        assert self.node_alive[self.root]
+        total = 0
+        for leaf in self.alive_leaf_ids():
+            pts = self.leaf_points[int(leaf)]
+            total += len(pts)
+            ids = np.asarray(pts, dtype=np.int64)
+            P = self.PX[ids] if len(pts) else np.zeros((0, self.dim))
+            np.testing.assert_allclose(self.LS[leaf], P.sum(axis=0), atol=1e-6)
+            np.testing.assert_allclose(
+                self.SS[leaf], float(np.einsum("nd,nd->", P, P)), atol=1e-6
+            )
+            assert self.N[leaf] == len(pts)
+            assert self.height[leaf] == 0
+        assert total == self.n_points, (total, self.n_points)
+        # internal fanout + CF consistency + uniform leaf depth
+        for nid in np.nonzero(self.node_alive & ~self.is_leaf)[0]:
+            kids = self.children[int(nid)]
+            assert kids, f"internal node {nid} with no children"
+            if nid != self.root:
+                assert self.m <= len(kids) <= self.M, (nid, len(kids))
+            else:
+                assert len(kids) <= self.M
+            ids = np.asarray(kids, dtype=np.int64)
+            np.testing.assert_allclose(self.LS[nid], self.LS[ids].sum(axis=0), atol=1e-6)
+            assert all(self.parent[k] == nid for k in kids)
+            assert all(self.height[k] == self.height[nid] - 1 for k in kids)

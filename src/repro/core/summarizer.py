@@ -1,0 +1,124 @@
+"""Online–offline orchestration (paper §4.2).
+
+  1. *Dynamic data summarization* (online): point insertions/deletions on
+     a Bubble-tree; at any time extract the L leaf clustering features.
+  2. *Pre-processing* (offline): leaf CFs → data bubbles; assign original
+     points to their closest bubble.
+  3. *Clustering* (offline): static HDBSCAN over the bubbles using the
+     bubble-aware distances (Eqs. 6–7), weighted flat extraction; original
+     points inherit their bubble's label.
+
+The offline pass is where the FLOPs are (L×L distance matrix + MST) and
+runs through `repro.kernels.ops` when ``use_jax=True`` (Pallas kernels,
+interpret-mode on CPU) or through the numpy reference otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .bubble_tree import BubbleTree
+from .bubbles import DataBubbles, bubble_mutual_reachability
+from .hdbscan import HDBSCANResult, hdbscan
+
+__all__ = ["OfflineResult", "cluster_bubbles", "assign_points", "BubbleTreeSummarizer"]
+
+
+@dataclasses.dataclass
+class OfflineResult:
+    bubbles: DataBubbles
+    bubble_labels: np.ndarray  # (L,)
+    point_ids: np.ndarray  # (N,) ids in the tree's point store
+    point_labels: np.ndarray  # (N,)
+    hdbscan: HDBSCANResult
+
+
+def cluster_bubbles(
+    b: DataBubbles,
+    min_pts: int,
+    min_cluster_size: float | None = None,
+    extent_adjusted: bool = False,
+    use_jax: bool = False,
+    allow_single_cluster: bool = False,
+) -> HDBSCANResult:
+    """Static HDBSCAN on data bubbles (offline step 3)."""
+    if use_jax:
+        from repro.kernels import ops
+
+        W = np.asarray(ops.bubble_mutual_reachability(b.rep, b.n, b.extent, min_pts))
+    else:
+        W, _ = bubble_mutual_reachability(b, min_pts, extent_adjusted=extent_adjusted)
+    eff_mcs = float(min_pts if min_cluster_size is None else min_cluster_size)
+    return hdbscan(
+        b.rep,
+        min_pts=min_pts,
+        min_cluster_size=eff_mcs,
+        weights=b.n,
+        precomputed=W,
+        allow_single_cluster=allow_single_cluster,
+    )
+
+
+def assign_points(X: np.ndarray, b: DataBubbles, use_jax: bool = False) -> np.ndarray:
+    """Offline step 2: nearest-bubble assignment for original points."""
+    if use_jax:
+        from repro.kernels import ops
+
+        return np.asarray(ops.assign(X, b.rep))
+    sq = (
+        np.einsum("id,id->i", X, X)[:, None]
+        + np.einsum("jd,jd->j", b.rep, b.rep)[None, :]
+        - 2.0 * X @ b.rep.T
+    )
+    return np.argmin(sq, axis=1)
+
+
+class BubbleTreeSummarizer:
+    """User-facing online–offline pipeline around a BubbleTree."""
+
+    def __init__(
+        self,
+        dim: int,
+        min_pts: int = 10,
+        compression: float = 0.01,
+        M: int = 10,
+        use_jax: bool = False,
+        **tree_kw,
+    ):
+        self.tree = BubbleTree(dim=dim, M=M, compression=compression, **tree_kw)
+        self.min_pts = int(min_pts)
+        self.use_jax = bool(use_jax)
+
+    # online ------------------------------------------------------------
+    def insert(self, p) -> int:
+        return self.tree.insert(p)
+
+    def delete(self, pid: int):
+        self.tree.delete(pid)
+
+    def insert_block(self, X) -> list[int]:
+        return self.tree.insert_block(X)
+
+    def delete_block(self, pids):
+        self.tree.delete_block(pids)
+
+    # offline -----------------------------------------------------------
+    def cluster(self, min_cluster_size: float | None = None) -> OfflineResult:
+        b = self.tree.to_bubbles()
+        res = cluster_bubbles(
+            b,
+            self.min_pts,
+            min_cluster_size=min_cluster_size,
+            use_jax=self.use_jax,
+        )
+        pids, X = self.tree.alive_points()
+        a = assign_points(X, b, use_jax=self.use_jax)
+        return OfflineResult(
+            bubbles=b,
+            bubble_labels=res.labels,
+            point_ids=pids,
+            point_labels=res.labels[a],
+            hdbscan=res,
+        )

@@ -1,0 +1,11 @@
+from .curation import StreamCurator
+from .pipeline import TokenPipeline
+from .synthetic import gaussian_mixtures, sliding_window_workload, token_stream
+
+__all__ = [
+    "StreamCurator",
+    "TokenPipeline",
+    "gaussian_mixtures",
+    "sliding_window_workload",
+    "token_stream",
+]

@@ -1,0 +1,8 @@
+"""repro.kernels — Pallas TPU kernels for the clustering hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a pure-jnp oracle in
+ref.py, and a padded/jit'd public wrapper in ops.py.  Validated with
+interpret=True on CPU; BlockSpecs sized for TPU v5e VMEM.
+"""
+
+from . import ops, ref  # noqa: F401

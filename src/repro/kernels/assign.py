@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: nearest-bubble assignment (offline step 2, §4.2).
+
+For every original point, the index of the closest data-bubble
+representative.  Grid over point row-tiles; the (L, D) representative
+table is small by construction (L = compression · N) and stays resident
+in VMEM across the row sweep, so each tile is one MXU matmul + a masked
+argmin epilogue — the same shape PagedAttention-style lookup tables use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 256
+
+
+def _assign_kernel(x_ref, rep_ref, out_ref, *, bn, L):
+    x = x_ref[...]
+    r = rep_ref[...]
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)
+    rr = jnp.sum(r * r, axis=-1, keepdims=True).T
+    xr = jax.lax.dot_general(
+        x, r, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    sq = jnp.maximum(xx + rr - 2.0 * xr, 0.0)  # (bn, L)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, L), 1)
+    row_min = jnp.min(sq, axis=1, keepdims=True)
+    win = jnp.min(jnp.where(sq == row_min, cols, L), axis=1)
+    out_ref[...] = win
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def assign(
+    x: jax.Array,
+    reps: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n,d),(L,d) -> (n,) int32 index of nearest representative."""
+    n, d = x.shape
+    L = reps.shape[0]
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    kernel = functools.partial(_assign_kernel, bn=bn, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((L, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), reps.astype(jnp.float32))

@@ -1,0 +1,258 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * shape padding: callers pass arbitrary (n, d); tiles need row counts
+    that are block multiples and a lane-aligned feature axis.  Padded rows
+    sit at +inf distance (never selected); padded features are zeros
+    (distance-neutral).
+  * platform policy: Pallas runs compiled on TPU and in interpret mode on
+    CPU (`interpret=True` executes the kernel body in Python — the
+    validation mode this container uses).  Set ``REPRO_FORCE_REF=1`` to
+    bypass Pallas entirely (pure-jnp reference path).
+  * composition: `bubble_mutual_reachability` chains kernel pairwise →
+    jnp sort/cumsum (Eq. 6's weighted-rank scan) → fused mutual-reach
+    kernel, all under one jit.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import assign as _assign_k
+from . import knn as _knn_k
+from . import mutual_reach as _mr_k
+from . import pairwise as _pw_k
+from . import ref as _ref
+
+__all__ = [
+    "pairwise_sqdist",
+    "mutual_reachability",
+    "knn",
+    "core_distances",
+    "assign",
+    "bubble_mutual_reachability",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _use_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def _pad_rows(a: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
+    n = a.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return a
+    pad = [(0, p)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad, constant_values=fill)
+
+
+def _pad_feats(a: jax.Array, mult: int = 128) -> jax.Array:
+    d = a.shape[1]
+    p = (-d) % mult
+    if p == 0:
+        return a
+    return jnp.pad(a, [(0, 0), (0, p)])
+
+
+def pairwise_sqdist(x, y, bn: int | None = None, bm: int | None = None):
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if _use_ref():
+        return _ref.pairwise_sqdist(x, y)
+    n, m = x.shape[0], y.shape[0]
+    bn = bn or min(_pw_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
+    bm = bm or min(_pw_k.DEFAULT_BM, max(8, 1 << (max(m - 1, 1)).bit_length()))
+    xp = _pad_feats(_pad_rows(x, bn))
+    yp = _pad_feats(_pad_rows(y, bm))
+    out = _pw_k.pairwise_sqdist(xp, yp, bn=bn, bm=bm, interpret=_interpret())
+    return out[:n, :m]
+
+
+def mutual_reachability(x, y, cd_x, cd_y, zero_diag: bool = True):
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    cd_x, cd_y = jnp.asarray(cd_x), jnp.asarray(cd_y)
+    if _use_ref():
+        return _ref.mutual_reachability(x, y, cd_x, cd_y, zero_diag=zero_diag)
+    n, m = x.shape[0], y.shape[0]
+    bn = min(_mr_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
+    bm = min(_mr_k.DEFAULT_BM, max(8, 1 << (max(m - 1, 1)).bit_length()))
+    xp = _pad_feats(_pad_rows(x, bn))
+    yp = _pad_feats(_pad_rows(y, bm))
+    cdxp = _pad_rows(cd_x, bn)
+    cdyp = _pad_rows(cd_y, bm)
+    out = _mr_k.mutual_reachability(
+        xp, yp, cdxp, cdyp, bn=bn, bm=bm, zero_diag=zero_diag, interpret=_interpret()
+    )
+    return out[:n, :m]
+
+
+# Above this reference-set size the single-tile VMEM strategy stops being
+# appropriate; fall back to a two-stage jnp top-k over kernel distance tiles.
+_KNN_VMEM_LIMIT = 1 << 14
+
+
+def knn(x, y, k: int):
+    """k nearest distances (ascending) and indices of y for each x row.
+
+    Rows of x that also appear in y return themselves at distance 0 —
+    callers exclude self-matches (hdbscan's convention counts the point
+    itself inside minPts, so this is what core_distances wants).
+    """
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    n, m = x.shape[0], y.shape[0]
+    k = min(k, m)
+    if _use_ref() or m > _KNN_VMEM_LIMIT:
+        return _ref.knn(x, y, k)
+    bn = min(_knn_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
+    xp = _pad_feats(_pad_rows(x, bn))
+    # pad reference rows at +inf distance: zero features collide with real
+    # points at the origin, so pad then mask via a giant coordinate
+    p = (-m) % 8
+    if p:
+        far = jnp.full((p, y.shape[1]), 1e18, dtype=y.dtype)
+        yp = jnp.concatenate([y, far], axis=0)
+    else:
+        yp = y
+    yp = _pad_feats(yp)
+    dists, idx = _knn_k.knn(xp, yp, k, bn=bn, interpret=_interpret())
+    return dists[:n], idx[:n]
+
+
+def core_distances(x, min_pts: int):
+    """cd(p) per Def. 1 (self-inclusive convention)."""
+    d, _ = knn(x, x, min_pts)
+    return d[:, min(min_pts, x.shape[0]) - 1]
+
+
+def assign(x, reps):
+    x, reps = jnp.asarray(x), jnp.asarray(reps)
+    if _use_ref():
+        return _ref.assign(x, reps)
+    n = x.shape[0]
+    bn = min(_assign_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
+    xp = _pad_feats(_pad_rows(x, bn))
+    L = reps.shape[0]
+    p = (-L) % 8
+    if p:
+        far = jnp.full((p, reps.shape[1]), 1e18, dtype=reps.dtype)
+        rp = jnp.concatenate([reps, far], axis=0)
+    else:
+        rp = reps
+    rp = _pad_feats(rp)
+    out = _assign_k.assign(xp, rp, bn=bn, interpret=_interpret())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("min_pts",))
+def _bubble_cd(rep, n_b, extent, min_pts: int):
+    return _ref.bubble_core_distances(rep, n_b, extent, min_pts, rep.shape[1])
+
+
+def bubble_mutual_reachability(rep, n_b, extent, min_pts: int):
+    """Offline phase: (L,L) bubble d_m matrix (Eqs. 6–7).
+
+    The Eq. 6 weighted-rank scan (sort + cumsum) is jnp (sort-dominated,
+    not MXU work); the output matrix uses the fused mutual-reach kernel.
+    """
+    rep = jnp.asarray(rep)
+    n_b = jnp.asarray(n_b)
+    extent = jnp.asarray(extent)
+    cd = _bubble_cd(rep, n_b, extent, min_pts)
+    return mutual_reachability(rep, rep, cd, cd, zero_diag=True)
+
+
+def flash_attention(q, k, v, qpos=None, kpos=None, *, causal=True, window=None,
+                    bq: int = 512, bk: int = 512):
+    """Batched GQA flash attention over model-layout tensors.
+
+    q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh).  Each query head is paired
+    with its kv head by index mapping (no KV duplication in HBM); heads ×
+    batch fold into the kernel's grid axis.  Falls back to ref on
+    non-128-divisible sequence tails after padding (dead-key masking).
+    """
+    from . import flash_attention as _fa
+
+    q, k, v = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if qpos is None:
+        qpos = jnp.arange(Sq, dtype=jnp.int32)
+    if kpos is None:
+        kpos = jnp.arange(Sk, dtype=jnp.int32)
+    qpos = jnp.broadcast_to(jnp.asarray(qpos, jnp.int32), (B, Sq)) if qpos.ndim <= 1 else qpos
+    kpos = jnp.broadcast_to(jnp.asarray(kpos, jnp.int32), (B, Sk)) if kpos.ndim <= 1 else kpos
+    bq = min(bq, 1 << (max(Sq - 1, 1)).bit_length())
+    bk = min(bk, 1 << (max(Sk - 1, 1)).bit_length())
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pq)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pk)), constant_values=-1)
+    # (B, S, H, D) -> (B*H, S, D); kv head of query head h is h // G
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq + pq, Dh)
+    kv_idx = jnp.arange(H) // G
+    kh = jnp.moveaxis(k, 2, 1)[:, kv_idx].reshape(B * H, Sk + pk, Dh)
+    vh = jnp.moveaxis(v, 2, 1)[:, kv_idx].reshape(B * H, Sk + pk, Dh)
+    qp = jnp.repeat(qpos, H, axis=0)
+    kp = jnp.repeat(kpos, H, axis=0)
+    out = _fa.flash_attention(
+        qh, kh, vh, qp, kp, causal=causal, window=window, bq=bq, bk=bk,
+        interpret=_interpret(),
+    )
+    out = out.reshape(B, H, Sq + pq, Dh)[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)
+
+
+def bubble_mutual_reachability_sharded(rep, n_b, extent, min_pts: int, mesh, axis: str = "data"):
+    """Mesh-distributed offline pass (DESIGN.md §2): the (L,L) d_m tile
+    computation is row-block sharded over `axis` with shard_map — each
+    device computes its (L/k, L) strip against the replicated (small, by
+    construction ≤ L) bubble table; the only communication is the initial
+    broadcast of the table.  This is how the curation offline pass rides
+    the training mesh at negligible step-time cost.
+
+    Rows are padded to the axis size; callers slice [:L].
+    """
+    from jax.sharding import PartitionSpec as P
+
+    rep = jnp.asarray(rep, jnp.float32)
+    n_b = jnp.asarray(n_b, jnp.float32)
+    extent = jnp.asarray(extent, jnp.float32)
+    L = rep.shape[0]
+    k = mesh.shape[axis]
+    pad = (-L) % k
+    cd = _bubble_cd(rep, n_b, extent, min_pts)
+    rep_p = jnp.pad(rep, ((0, pad), (0, 0)))
+    cd_p = jnp.pad(cd, (0, pad))
+
+    def strip(rep_blk, cd_blk):
+        # local (L/k, L) strip; global row offset for the zero diagonal
+        i = jax.lax.axis_index(axis)
+        m = _ref.mutual_reachability(rep_blk, rep, cd_blk, cd, zero_diag=False)
+        rows = i * rep_blk.shape[0] + jnp.arange(rep_blk.shape[0])
+        cols = jnp.arange(L)
+        return jnp.where(rows[:, None] == cols[None, :], 0.0, m)
+
+    f = jax.shard_map(
+        strip,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False,
+    )
+    out = f(rep_p, cd_p)
+    return out[:L]

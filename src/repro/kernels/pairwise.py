@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: tiled pairwise squared Euclidean distances.
+
+The compute hot spot of the whole system (DESIGN.md §2): every stage —
+core distances, mutual reachability, bubble assignment, RkNN predicates —
+reduces to blocks of ``||x - y||² = ||x||² + ||y||² − 2·x·yᵀ``, i.e. one
+MXU matmul per (BN × BM) tile plus a VPU epilogue.
+
+Tiling: grid (⌈n/BN⌉, ⌈m/BM⌉); each program loads an (BN, D) X-tile and a
+(BM, D) Y-tile into VMEM, runs the MXU contraction, and writes the
+(BN, BM) tile.  With BN = BM = 256 and D ≤ 512 (f32) the VMEM working set
+is 2·256·512·4 B + 256·256·4 B ≈ 1.3 MB — far below the ~128 MB/core v5e
+budget, so the feature dimension stays untiled (clustering feature spaces
+in the paper are 2–34 dims; the framework's curation embeddings ≤ 4k).
+MXU alignment: BN/BM are multiples of 128; callers (ops.py) pad rows and
+the D axis to lane multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 256
+DEFAULT_BM = 256
+
+
+def _pairwise_kernel(x_ref, y_ref, out_ref):
+    """out[i, j] = ||x_i||² + ||y_j||² − 2 x_i·y_j, clamped at 0."""
+    x = x_ref[...]
+    y = y_ref[...]
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)  # (BN, 1)
+    yy = jnp.sum(y * y, axis=-1, keepdims=True).T  # (1, BM)
+    xy = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def pairwise_sqdist(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bm: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n, d), (m, d) -> (n, m) squared distances.  n, m must be multiples
+    of the block sizes (ops.py handles padding)."""
+    n, d = x.shape
+    m = y.shape[0]
+    assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(x, y):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    return jnp.maximum(xx + yy - 2.0 * x @ y.T, 0.0)
+
+
+def mutual_reachability(x, y, cd_x, cd_y, zero_diag=True):
+    d = jnp.sqrt(pairwise_sqdist(x, y))
+    m = jnp.maximum(d, jnp.maximum(cd_x.astype(jnp.float32)[:, None], cd_y.astype(jnp.float32)[None, :]))
+    if zero_diag:
+        n, mm = m.shape
+        rows = jax.lax.broadcasted_iota(jnp.int32, (n, mm), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (n, mm), 1)
+        m = jnp.where(rows == cols, 0.0, m)
+    return m
+
+
+def knn(x, y, k):
+    """Ascending k smallest distances + indices, min-index tie-break
+    (jax.lax.top_k already orders equal keys by ascending index)."""
+    d = jnp.sqrt(pairwise_sqdist(x, y))
+    neg_d, idx = jax.lax.top_k(-d, k)
+    return -neg_d, idx.astype(jnp.int32)
+
+
+def assign(x, reps):
+    sq = pairwise_sqdist(x, reps)
+    return jnp.argmin(sq, axis=1).astype(jnp.int32)
+
+
+def bubble_core_distances(rep, n_b, extent, min_pts, dim):
+    """Eq. 6 in pure jnp (vectorized over all bubbles)."""
+    L = rep.shape[0]
+    d = jnp.sqrt(pairwise_sqdist(rep, rep))
+    d = d.at[jnp.arange(L), jnp.arange(L)].set(0.0)
+    order = jnp.argsort(d, axis=1, stable=True)
+    d_sorted = jnp.take_along_axis(d, order, axis=1)
+    n_sorted = n_b.astype(jnp.float32)[order]
+    csum = jnp.cumsum(n_sorted, axis=1)
+    reach = csum >= float(min_pts)
+    idx = jnp.where(reach.any(axis=1), jnp.argmax(reach, axis=1), L - 1)
+    rows = jnp.arange(L)
+    before = jnp.where(idx > 0, csum[rows, jnp.maximum(idx - 1, 0)], 0.0)
+    k_resid = jnp.maximum(float(min_pts) - before, 1.0)
+    C = order[rows, idx]
+    nC = jnp.maximum(n_b.astype(jnp.float32)[C], 1.0)
+    k_resid = jnp.clip(k_resid, 0.0, nC)
+    nnd = jnp.power(k_resid / nC, 1.0 / float(dim)) * extent.astype(jnp.float32)[C]
+    return d_sorted[rows, idx] + nnd
+
+
+def bubble_mutual_reachability(rep, n_b, extent, min_pts):
+    cd = bubble_core_distances(rep, n_b, extent, min_pts, rep.shape[1])
+    return mutual_reachability(rep, rep, cd, cd, zero_diag=True)
+
+
+def flash_attention(q, k, v, qpos, kpos, causal=True, window=None):
+    """Oracle for kernels.flash_attention: masked softmax attention over
+    (H, S, D) head-major tensors with positional masking (kpos<0 dead)."""
+    d = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    mask = kpos[:, None, :] < 0
+    if causal:
+        mask = mask | (kpos[:, None, :] > qpos[:, :, None])
+    if window is not None:
+        mask = mask | (kpos[:, None, :] <= qpos[:, :, None] - window)
+    s = jnp.where(mask, -1e30, s)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)).astype(q.dtype)

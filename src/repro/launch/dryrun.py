@@ -1,0 +1,389 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, build the appropriate step
+function (train_step / prefill / serve_step), shard it over the production
+mesh, ``.lower().compile()``, and record:
+
+  * memory analysis (per-device argument/output/temp/peak bytes),
+  * cost analysis (HLO FLOPs, bytes accessed),
+  * the collective inventory parsed from the post-SPMD optimized HLO,
+  * sharding demotions the rule engine had to apply.
+
+Results are cached per (cell, mesh, config-fingerprint) in a JSON file so
+the roofline benchmark and EXPERIMENTS.md read from one artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out dryrun_results.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+"""
+
+import argparse
+import hashlib
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get
+from repro.launch import sharding as SH
+from repro.launch.hlo_stats import analyze_module, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train.optim import AdamWConfig, adamw_init
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def _axes_in(mesh, names):
+    return tuple(a for a in names if a in mesh.shape and mesh.shape[a] > 1)
+
+
+def _prod(mesh, axes):
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def batch_specs(mesh, specs, kind):
+    """NamedShardings for a batch dict of ShapeDtypeStructs."""
+    baxes = _axes_in(mesh, ("pod", "data")) if kind in ("train", "prefill") else _axes_in(mesh, ("data",))
+    out = {}
+    for name, sds in specs.items():
+        shp = sds.shape
+        parts = [None] * len(shp)
+        if len(shp) >= 1 and baxes and shp[0] % _prod(mesh, baxes) == 0:
+            parts[0] = baxes if len(baxes) > 1 else baxes[0]
+        out[name] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def cache_sharding(mesh, caches_sds, *, B, cache_len, kind):
+    """Sharding heuristic for KV caches / recurrent states (DESIGN.md §4).
+
+    KV caches (…, B, S, KV, Dh): batch→data; seq→model (decode) so the
+    32k×128 caches tile down to ~GB/device (flash-decoding layout).  When
+    batch can't shard (long_500k, B=1) the sequence takes both axes.
+    Recurrent states: batch→data, largest remaining dim→model.
+    """
+    data = _axes_in(mesh, ("data",))
+    model_ax = _axes_in(mesh, ("model",))
+    pod_data = _axes_in(mesh, ("pod", "data")) if kind == "prefill" else data
+
+    def spec_of(path, sds):
+        shp = sds.shape
+        nd = len(shp)
+        if nd <= 1:
+            return NamedSharding(mesh, P())
+        parts = [None] * nd
+        used: set[str] = set()
+
+        def assign(dim, axes):
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                return False
+            size = _prod(mesh, axes)
+            if size <= 1 or shp[dim] % size != 0:
+                return False
+            parts[dim] = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+            return True
+
+        if nd >= 4 and cache_len and cache_len >= 1024 and shp[nd - 3] == cache_len:
+            bdim, sdim = nd - 4, nd - 3
+            got_b = shp[bdim] > 1 and assign(bdim, pod_data)
+            if cache_len >= 8192:
+                if got_b:
+                    assign(sdim, model_ax)
+                else:
+                    assign(sdim, data + model_ax) or assign(sdim, model_ax)
+            return NamedSharding(mesh, P(*parts))
+        # recurrent state / misc: batch then largest dim on model
+        bdim = next((i for i, d in enumerate(shp) if d == B), None)
+        if bdim is not None and B > 1:
+            assign(bdim, data)
+        for i in sorted(range(nd), key=lambda i: -shp[i]):
+            if parts[i] is None and shp[i] >= 2 and assign(i, model_ax):
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches_sds)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def default_microbatches(cfg, shape, mesh):
+    """Baseline grad-accumulation: cap the per-device microbatch at ~8k
+    tokens for big/MoE models and ~16k for small dense ones (§Perf iter 3:
+    mb=1 on a 152k-vocab model leaves 16-sample fp32 logit blocks live —
+    61 GB peaks; MoE dispatch buffers scale with per-microbatch tokens)."""
+    baxes = _axes_in(mesh, ("pod", "data"))
+    per_dev = shape.global_batch // max(_prod(mesh, baxes), 1)
+    big = cfg.d_model >= 3000 or cfg.n_experts > 0
+    tok_target = 8192 if big else 16384
+    per_dev_mb = max(1, tok_target // shape.seq_len)
+    mb = max(1, per_dev // per_dev_mb)
+    while shape.global_batch % mb:
+        mb -= 1
+    return mb
+
+
+def _cast_params(pvals, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else s,
+        pvals,
+    )
+
+
+def build_cell(cfg, shape, mesh, microbatches=None, serve_dtype=jnp.bfloat16):
+    """Returns (fn, args, in_shardings, out_shardings, donate, meta)."""
+    kind = shape.kind
+    specs = M.input_specs(cfg, shape)
+    pvals, paxes = M.abstract_params(cfg)
+    meta = {}
+    if kind == "train":
+        mb = microbatches or default_microbatches(cfg, shape, mesh)
+        meta["microbatches"] = mb
+        param_sh = SH.tree_shardings(paxes, pvals)
+        opt_sds = jax.eval_shape(adamw_init, pvals)
+        opt_sh = {"mu": param_sh, "nu": param_sh, "step": NamedSharding(mesh, P())}
+        b_sh = batch_specs(mesh, specs, kind)
+        step = M.make_train_step(cfg, AdamWConfig(), microbatches=mb)
+        return (
+            step,
+            (pvals, opt_sds, specs),
+            (param_sh, opt_sh, b_sh),
+            (param_sh, opt_sh, None),
+            (0, 1),
+            meta,
+        )
+    # inference params: bf16 copies (serving memory plan)
+    pvals = _cast_params(pvals, serve_dtype)
+    param_sh = SH.tree_shardings(paxes, pvals)
+    if kind == "prefill":
+        b_sh = batch_specs(mesh, specs, kind)
+        fn = M.make_prefill(cfg)
+        out_sds = jax.eval_shape(fn, pvals, specs)
+        logits_sh = replicated(mesh, out_sds[0])
+        cache_sh = cache_sharding(
+            mesh, out_sds[1], B=shape.global_batch, cache_len=shape.seq_len, kind=kind
+        )
+        return fn, (pvals, specs), (param_sh, b_sh), (logits_sh, cache_sh), (), meta
+    # decode
+    caches_sds = specs["caches"]
+    cache_len = cfg.sliding_window and min(shape.seq_len, cfg.sliding_window) or shape.seq_len
+    cache_sh = cache_sharding(mesh, caches_sds, B=shape.global_batch, cache_len=cache_len, kind=kind)
+    tok_sh = batch_specs(mesh, {"token": specs["token"]}, kind)["token"]
+    pos_sh = NamedSharding(mesh, P())
+    extras = {}
+    extras_sh = {}
+    for key in ("media", "enc"):
+        if key in specs:
+            extras[key] = specs[key]
+            extras_sh[key] = batch_specs(mesh, {key: specs[key]}, kind)[key]
+    serve = M.make_serve_step(cfg)
+
+    def fn(params, caches, token, pos, extras):
+        return serve(params, caches, token, pos, extras or None)
+
+    out_sds = jax.eval_shape(fn, pvals, caches_sds, specs["token"], specs["pos"], extras)
+    logits_sh = replicated(mesh, out_sds[0])
+    out_cache_sh = cache_sharding(mesh, out_sds[1], B=shape.global_batch, cache_len=cache_len, kind=kind)
+    return (
+        fn,
+        (pvals, caches_sds, specs["token"], specs["pos"], extras),
+        (param_sh, cache_sh, tok_sh, pos_sh, extras_sh),
+        (logits_sh, out_cache_sh),
+        (1,),
+        meta,
+    )
+
+
+def run_cell(arch, shape_name, mesh, mesh_name, *, microbatches=None, verbose=True, overrides=None):
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "ok": False,
+    }
+    t0 = time.time()
+    try:
+        with SH.use_mesh(mesh, rules=overrides) as ctx:
+            fn, args, in_sh, out_sh, donate, meta = build_cell(
+                cfg, shape, mesh, microbatches=microbatches
+            )
+            rec.update(meta)
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+            rec["demotions"] = sorted({f"{a}: {why}" for a, why in ctx.demotions})
+
+        # ---- analysis ----
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            rec["hlo_flops"] = float(cost.get("flops", -1.0))
+            rec["hlo_bytes"] = float(cost.get("bytes accessed", -1.0))
+        except Exception as e:  # pragma: no cover
+            rec["cost_error"] = repr(e)
+        try:
+            mem = compiled.memory_analysis()
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+                "host_temp_size_in_bytes",
+            ):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+            if "argument_size_in_bytes" in rec and "temp_size_in_bytes" in rec:
+                rec["peak_bytes_per_device"] = (
+                    rec["argument_size_in_bytes"]
+                    + rec["output_size_in_bytes"]
+                    + rec["temp_size_in_bytes"]
+                )
+        except Exception as e:  # pragma: no cover
+            rec["memory_error"] = repr(e)
+        hlo = compiled.as_text()
+        rec["hlo_len"] = len(hlo)
+        pod = 256 if mesh_name == "multi" else 1 << 30
+        costs = analyze_module(hlo, rec["devices"], pod_size=pod)
+        rec["graph_flops_per_device"] = float(costs.flops)
+        rec["graph_bytes_per_device"] = float(costs.bytes)
+        rec["collectives"] = costs.collectives
+        rec["top_collectives"] = costs.top[:8]
+        link, xpod = costs.link_bytes, costs.xpod_bytes
+        rec["link_bytes_per_device"] = int(link)
+        rec["xpod_bytes_per_device"] = int(xpod)
+        # model flops (per step over the whole batch)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        fpt = M.model_flops_per_token(cfg)
+        mf = fpt * tokens
+        if shape.kind == "train":
+            pass  # 6ND already counts fwd+bwd
+        else:
+            mf = mf / 3.0  # forward only ≈ 2ND
+        rec["model_flops"] = float(mf)
+        rec["tokens_per_step"] = tokens
+        if costs.flops > 0:
+            rec["useful_flops_ratio"] = float(mf / (costs.flops * rec["devices"]))
+            rec["roofline"] = roofline_terms(
+                flops=costs.flops,
+                hbm_bytes=costs.bytes,
+                link_bytes=link,
+                xpod_bytes=xpod,
+            )
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    if verbose:
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = (
+            f"flops={rec.get('hlo_flops', 0):.3g} link={rec.get('link_bytes_per_device', 0):.3g}B"
+            if rec["ok"]
+            else rec.get("error", "")[:120]
+        )
+        print(
+            f"[{status}] {arch:22s} {shape_name:12s} {mesh_name:6s} "
+            f"lower={rec.get('lower_s', 0):6.1f}s compile={rec.get('compile_s', 0):6.1f}s {extra}",
+            flush=True,
+        )
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def cell_key(arch, shape, mesh_name):
+    return f"{arch}|{shape}|{mesh_name}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all valid)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both", "small"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    todo = [(a, s) for a, s, _ in cells()]
+    if args.arch:
+        todo = [c for c in todo if c[0] == args.arch]
+    if args.shape:
+        todo = [c for c in todo if c[1] == args.shape]
+    if args.list:
+        for a, s in todo:
+            print(a, s)
+        return 0
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+    if args.mesh == "small":
+        # CI-scale mesh (8 placeholder devices) — exercises the full
+        # lower/compile/analyze path without 512-way partitioning cost
+        meshes.append(("small", jax.make_mesh((4, 2), ("data", "model"))))
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_done = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape_name in todo:
+            key = cell_key(arch, shape_name, mesh_name)
+            if not args.force and results.get(key, {}).get("ok"):
+                continue
+            rec = run_cell(
+                arch, shape_name, mesh, mesh_name, microbatches=args.microbatches
+            )
+            rec.pop("traceback", None) if rec["ok"] else None
+            results[key] = rec
+            n_done += 1
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+    ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{ok}/{len(results)} cells OK (ran {n_done} now) -> {args.out}")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,369 @@
+"""Post-SPMD HLO analysis: call-graph cost model + collective inventory.
+
+The dry-run's "profile" (no real hardware) is the compiled HLO module.
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified
+empirically: a 10-trip scan reports 1/10th of the true flops), so scanned
+models (scan-over-layers, grad-accumulation) are badly under-reported.
+This module re-derives per-device costs from the optimized HLO *text*,
+walking the call graph and scaling loop bodies by their
+``known_trip_count``:
+
+  * flops   — 2·out_elems·contract for every ``dot`` (batch dims included
+              in out_elems), approximate conv flops; fusions are traversed
+              for dots, loop bodies multiplied by trip count.
+  * bytes   — per top-level instruction: operands + outputs (the standard
+              HloCostAnalysis HBM traffic model; fusion internals are
+              registers and not counted).
+  * link    — per collective op, ring-model per-device bytes:
+                all-gather      out·(g−1)/g
+                all-reduce      2·payload·(g−1)/g
+                reduce-scatter  out·(g−1)          (out is the scattered shape)
+                all-to-all      payload·(g−1)/g
+                collective-permute  payload
+              scaled by enclosing loop trip counts; cross-pod groups
+              (device ids spanning a pod boundary) are tracked separately.
+
+IMPORTANT: post-SPMD shapes are per-DEVICE local shapes, so every number
+here is already per-device — roofline terms divide only by hardware rates:
+
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes / HBM_BW
+    collective = link_bytes / ICI_BW + xpod_bytes / DCI_BW
+
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI; DCI taken at 25 GB/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+DCI_BW = 25e9  # cross-pod effective
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes over every array shape inside the string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    """Dims of the FIRST array shape in the string."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def shape_elems(shape_str: str) -> int:
+    n = 1
+    for d in shape_dims(shape_str):
+        n *= d
+    return n
+
+
+def last_array_bytes(shape_str: str) -> int:
+    """Bytes of the LAST array in a (possibly tuple) shape — the result
+    buffer of async -start ops."""
+    ms = list(_SHAPE_RE.finditer(shape_str))
+    for m in reversed(ms):
+        if m.group(1) in _DTYPE_BYTES:
+            n = 1
+            if m.group(2):
+                for d in m.group(2).split(","):
+                    n *= int(d)
+            return n * _DTYPE_BYTES[m.group(1)]
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+# '  ROOT %name = SHAPE opcode(operands), attrs'
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\("
+)
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_CALL_ATTR_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id",
+}
+_COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+}
+_CALL_OPS = {"while", "fusion", "call", "conditional", "async-start"}
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # full line tail (operands + attrs)
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list = dataclasses.field(default_factory=list)
+    symtab: dict = dataclasses.field(default_factory=dict)
+
+
+def _parse_computations(hlo_text: str) -> tuple[dict, str | None]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, opcode = m.group(1), m.group(2), m.group(3)
+            rest = line[m.end():]
+            cur.instrs.append(_Instr(name, shape, opcode, rest))
+            cur.symtab[name] = shape
+        elif "parameter(" in s:
+            # '  %p = f32[8]{0} parameter(0)' matches _INSTR_RE; fallback noop
+            pass
+    return comps, entry
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _first_group(rest: str):
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return [int(x) for x in m.group(1).split(",")]
+    return None
+
+
+def _dot_flops(ins: _Instr, symtab: dict) -> float:
+    out_elems = shape_elems(ins.shape)
+    ops = _OPERAND_RE.findall(ins.rest.split(")", 1)[0] + ")")
+    # operand regex may catch attr refs; operands come first
+    lhs_shape = symtab.get(ops[0]) if ops else None
+    contract = 1
+    m = _LHS_CONTRACT_RE.search(ins.rest)
+    if lhs_shape is not None and m and m.group(1):
+        dims = shape_dims(lhs_shape)
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: _Instr, symtab: dict) -> float:
+    out_elems = shape_elems(ins.shape)
+    ops = _OPERAND_RE.findall(ins.rest.split(")", 1)[0] + ")")
+    if len(ops) < 2:
+        return 0.0
+    rhs = symtab.get(ops[1])
+    if rhs is None:
+        return 0.0
+    kdims = shape_dims(rhs)
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    # dim_labels=...->..._Nio : output-features dim divides out
+    mo = re.search(r"dim_labels=\w+_(\w+)->", ins.rest)
+    ofeat = 1
+    if mo and kdims:
+        labels = mo.group(1)
+        if "o" in labels:
+            ofeat = kdims[labels.index("o")]
+    return 2.0 * out_elems * kelems / max(ofeat, 1)
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    link_bytes: float = 0.0
+    xpod_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    top: list = dataclasses.field(default_factory=list)
+
+
+def analyze_module(hlo_text: str, n_devices: int, pod_size: int = 1 << 30) -> ModuleCosts:
+    comps, entry = _parse_computations(hlo_text)
+    memo: dict[str, tuple] = {}
+    out = ModuleCosts()
+    coll_rows: list[dict] = []
+
+    def visit(name: str, mult: float, count_bytes: bool) -> tuple[float, float]:
+        """Returns (flops, bytes) of one execution of computation `name`;
+        collectives are accumulated into module state scaled by `mult`."""
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0, 0.0
+        flops = bytes_ = 0.0
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                flops += _dot_flops(ins, comp.symtab)
+            elif op == "convolution":
+                flops += _conv_flops(ins, comp.symtab)
+            if op in _COLLECTIVE_OPS and not op.endswith("-done"):
+                base = op.replace("-start", "")
+                payload = (
+                    last_array_bytes(ins.shape) if op.endswith("-start") else shape_bytes(ins.shape)
+                )
+                g = _group_size(ins.rest, n_devices)
+                grp = _first_group(ins.rest)
+                cross = (
+                    len({d // pod_size for d in grp}) > 1
+                    if grp is not None
+                    else g > pod_size
+                )
+                if base == "all-gather":
+                    link = payload * (g - 1) / max(g, 1)
+                elif base in ("all-reduce",):
+                    link = 2.0 * payload * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    link = payload * (g - 1)
+                elif base == "all-to-all":
+                    link = payload * (g - 1) / max(g, 1)
+                else:
+                    link = float(payload)
+                key = base + ("/xpod" if cross else "")
+                st = out.collectives.setdefault(
+                    key, {"count": 0.0, "payload_bytes": 0.0, "link_bytes": 0.0, "cross_pod": cross}
+                )
+                st["count"] += mult
+                st["payload_bytes"] += payload * mult
+                st["link_bytes"] += link * mult
+                if cross:
+                    out.xpod_bytes += link * mult
+                else:
+                    out.link_bytes += link * mult
+                coll_rows.append(
+                    {"op": base, "payload": payload, "group": g, "link": link * mult,
+                     "mult": mult, "cross_pod": cross}
+                )
+            if op in _CALL_OPS:
+                callees = _CALL_ATTR_RE.findall(ins.rest)
+                mb = _BRANCH_RE.search(ins.rest)
+                if mb:
+                    callees += _OPERAND_RE.findall(mb.group(1))
+                trip = 1
+                if op == "while":
+                    mt = _TRIP_RE.search(ins.rest)
+                    trip = int(mt.group(1)) if mt else 1
+                for c in callees:
+                    key = (c, count_bytes and op != "fusion")
+                    if key in memo:
+                        f, b = memo[key]
+                    else:
+                        # fusion internals: flops yes, bytes no (registers)
+                        f, b = visit(c, mult * trip, count_bytes and op != "fusion")
+                        memo[key] = (f, b)
+                    flops += f * trip
+                    bytes_ += b * trip
+            if count_bytes and op not in _FREE_OPS and op not in _CALL_OPS:
+                b = shape_bytes(ins.shape)
+                opers = _OPERAND_RE.findall(ins.rest.split(")", 1)[0] + ")")
+                for o in opers:
+                    b += shape_bytes(comp.symtab.get(o, ""))
+                bytes_ += b
+        return flops, bytes_
+
+    # NOTE on memoization + collectives: memoizing a computation skips
+    # re-accumulating its collectives at other call sites.  Model bodies are
+    # each called from exactly one while/fusion site (XLA clones shared
+    # computations), so in practice every computation has one caller; we
+    # keep memoization for speed and accept the rare under-count.
+    f, b = visit(entry, 1.0, True)
+    out.flops = f
+    out.bytes = b
+    coll_rows.sort(key=lambda d: -d["link"])
+    out.top = coll_rows[:20]
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    return [int(m.group(1)) for m in _TRIP_RE.finditer(hlo_text)]
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(
+    *,
+    flops: float,
+    hbm_bytes: float,
+    link_bytes: float,
+    xpod_bytes: float = 0.0,
+):
+    """All inputs are PER-DEVICE (post-SPMD local shapes); terms in seconds."""
+    compute = flops / PEAK_FLOPS
+    memory = hbm_bytes / HBM_BW
+    coll = link_bytes / ICI_BW + xpod_bytes / DCI_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", coll), key=lambda kv: kv[1]
+    )[0]
+    total = max(compute, memory, coll)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": (compute / total) if total > 0 else 0.0,
+    }

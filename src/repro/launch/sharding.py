@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate tensors with *logical* axis names; a rule table maps each
+logical axis to zero or more mesh axes.  `constrain` applies
+``jax.lax.with_sharding_constraint`` when a mesh context is active and is
+a no-op otherwise (so the same model code runs single-device tests and
+512-way dry-runs).
+
+Divisibility fallback: if a tensor dim is not divisible by the product of
+its mapped mesh axes, the mapping for that dim is demoted to replicated
+and the demotion is recorded (surfaced in the roofline table; e.g.
+qwen2-1.5b's 12 query heads vs the 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default rule table: logical axis -> tuple of mesh axes (tried in order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),  # pod present only on the multi-pod mesh
+    "seq": (),
+    "kv_seq": (),
+    "embed": (),
+    "embed_fsdp": ("data",),  # FSDP parameter shard axis
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_capacity": ("data",),
+    "conv": (),
+    "state": (),
+    "media": (),
+    "frames": (),
+    "layers": (),
+}
+
+_local = threading.local()
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]]
+    demotions: list[tuple[str, str]] = dataclasses.field(default_factory=list)
+
+    def axis_size(self, names: tuple[str, ...]) -> int:
+        s = 1
+        for n in names:
+            s *= self.mesh.shape.get(n, 1)
+        return s
+
+
+def current() -> ShardingContext | None:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    """Activate a mesh + rule table for model-internal constraints."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes that don't exist on this mesh (e.g. "pod" on single-pod)
+    merged = {
+        k: tuple(a for a in v if a in mesh.shape) for k, v in merged.items()
+    }
+    ctx = ShardingContext(mesh=mesh, rules=merged)
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = ctx
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _local.ctx = prev
+
+
+def spec_for(logical: tuple[str | None, ...], shape: tuple[int, ...] | None = None) -> P:
+    """PartitionSpec for logical axes with two fallbacks:
+
+    * divisibility — a dim not divisible by its mapped mesh-axis product is
+      demoted to replicated (recorded in ctx.demotions);
+    * conflict — a mesh axis may appear only once per spec (e.g. MoE expert
+      weights map both "experts" and "ffn" to "model"; the later dim is
+      demoted).  Dims are processed left to right.
+    """
+    ctx = current()
+    if ctx is None:
+        return P()
+    parts = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        if name is None:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in ctx.rules.get(name, ()) if a not in used)
+        if not mesh_axes:
+            if ctx.rules.get(name, ()):
+                ctx.demotions.append((name, "mesh-axis conflict"))
+            parts.append(None)
+            continue
+        if shape is not None:
+            size = ctx.axis_size(mesh_axes)
+            if size > 1 and shape[i] % size != 0:
+                ctx.demotions.append((name, f"dim {shape[i]} % {size} != 0"))
+                parts.append(None)
+                continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical: tuple[str | None, ...]) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = spec_for(logical, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(logical: tuple[str | None, ...], shape: tuple[int, ...] | None = None):
+    ctx = current()
+    assert ctx is not None, "named_sharding requires an active use_mesh()"
+    return NamedSharding(ctx.mesh, spec_for(logical, shape))
+
+
+def tree_shardings(logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples + ShapeDtypeStructs to
+    NamedShardings (for jit in_shardings/out_shardings)."""
+    return jax.tree.map(
+        lambda log, sds: named_sharding(log, tuple(sds.shape)),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )

@@ -1,0 +1,19 @@
+"""repro.models — architecture zoo (dense/moe/vlm/ssm/hybrid/audio)."""
+
+from .model import (
+    abstract_params,
+    build_model,
+    count_params,
+    init_params,
+    input_specs,
+    make_prefill,
+    make_serve_step,
+    make_train_step,
+    model_flops_per_token,
+)
+
+__all__ = [
+    "abstract_params", "build_model", "count_params", "init_params",
+    "input_specs", "make_prefill", "make_serve_step", "make_train_step",
+    "model_flops_per_token",
+]

@@ -1,0 +1,424 @@
+"""Shared model layers — functional JAX, no framework dependency.
+
+Parameters are pytrees of `Leaf(value, axes)` where `axes` are logical
+sharding axes consumed by launch/sharding.py.  `split(tree)` separates the
+two; `jax.eval_shape` over `init` gives allocation-free dry-run params.
+
+Attention supports: GQA (n_kv < n_heads), QKV biases (qwen1.5/qwen2),
+qk-norm (qwen3), sliding windows (danube), bidirectional (whisper
+encoder), cross-attention (whisper decoder, llama-3.2-vision), and a
+double-chunked online-softmax ("flash-style") path that keeps the score
+working set block-sized for 32k+ sequences.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+Pytree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Leaf:
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def leaf(value, axes):
+    return Leaf(value, tuple(axes))
+
+
+def split(tree):
+    """Leaf tree -> (value tree, axes tree)."""
+    vals = jax.tree.map(lambda l: l.value, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    return vals, axes
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+
+
+def dense_init(key, d_in, d_out, axes, scale=None, bias=False, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": leaf(_normal(key, (d_in, d_out), scale, dtype), axes)}
+    if bias:
+        p["b"] = leaf(jnp.zeros((d_out,), dtype), (axes[-1],))
+    return p
+
+
+def norm_init(d, dtype=jnp.float32, bias=False):
+    p = {"scale": leaf(jnp.ones((d,), dtype), (None,))}
+    if bias:
+        p["bias"] = leaf(jnp.zeros((d,), dtype), (None,))
+    return p
+
+
+# --------------------------------------------------------------------------
+# primitive ops
+# --------------------------------------------------------------------------
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm(p, x, kind="rmsnorm"):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True), "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------------
+# rotary embedding
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta=10_000.0):
+    """x: (B, S, H, Dh), positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask_bias(qpos, kpos, causal, window):
+    """(..., Sq, Sk) additive bias from positions."""
+    m = jnp.zeros(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]), jnp.float32)
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    m = jnp.where(k < 0, NEG_INF, m)  # unwritten ring-buffer slots
+    if causal:
+        m = jnp.where(k > q, NEG_INF, m)
+    if window is not None:
+        m = jnp.where(k <= q - window, NEG_INF, m)
+    return m
+
+
+def _sdpa(q, k, v, bias):
+    """q: (B,Sq,H,Dh) k/v: (B,Sk,KV,Dh); GQA by head grouping."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh)
+    scores = scores + bias[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def _flash_sdpa(q, k, v, qpos, kpos, causal, window, cq=1024, ck=1024):
+    """Double-chunked online-softmax attention (TPU-friendly lax loops).
+
+    Memory per step is O(cq·ck) scores instead of O(Sq·Sk); the standard
+    FlashAttention recurrence carried over KV chunks.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    cq = min(cq, Sq)
+    ck = min(ck, Sk)
+    if qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos[None], (B, Sq))
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None], (B, Sk))
+    # pad ragged tails to block multiples; padded keys sit at kpos=-1
+    # (masked as "unwritten slots"), padded queries are sliced off below.
+    pq, pk = (-Sq) % cq, (-Sk) % ck
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pk)), constant_values=-1)
+        Sk += pk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pq)), constant_values=0)
+        Sq += pq
+    orig_Sq = Sq - pq
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, Sk, cq, ck)
+    G = H // KV
+    nq, nk = Sq // cq, Sk // ck
+    qg = q.reshape(B, nq, cq, KV, G, Dh)
+    kc = k.reshape(B, nk, ck, KV, Dh)
+    vc = v.reshape(B, nk, ck, KV, Dh)
+    qp = qpos.reshape(B, nq, cq) if qpos.ndim == 2 else jnp.broadcast_to(qpos.reshape(1, nq, cq), (B, nq, cq))
+    kp = kpos.reshape(B, nk, ck) if kpos.ndim == 2 else jnp.broadcast_to(kpos.reshape(1, nk, ck), (B, nk, ck))
+    scale = 1.0 / math.sqrt(Dh)
+
+    def q_block(qi):
+        qb = qg[:, qi]  # (B, cq, KV, G, Dh)
+        qpb = qp[:, qi]  # (B, cq)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kc[:, ki]
+            vb = vc[:, ki]
+            kpb = kp[:, ki]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32) * scale
+            bias = _mask_bias(qpb, kpb, causal, window)  # (B, cq, ck)
+            s = s + bias[:, None, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(qb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, cq, Dh) -> (B, cq, H, Dh)
+        return jnp.moveaxis(out, 3, 1).reshape(B, cq, H, Dh).astype(q.dtype)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, cq, H, Dh)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H, Dh)
+    return out[:, :orig_Sq]
+
+
+def attention_core(
+    q,
+    k,
+    v,
+    *,
+    qpos,
+    kpos,
+    causal=True,
+    window=None,
+    flash_threshold=8192 * 2048,
+    cq=1024,
+    ck=1024,
+):
+    """Dispatch naive vs chunked by score-tile size."""
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    if Sq * Sk <= flash_threshold or Sq == 1:
+        if qpos.ndim == 1:
+            qpos = jnp.broadcast_to(qpos[None], (B, Sq))
+        if kpos.ndim == 1:
+            kpos = jnp.broadcast_to(kpos[None], (B, Sk))
+        bias = _mask_bias(qpos, kpos, causal, window)
+        return _sdpa(q, k, v, bias)
+    return _flash_sdpa(q, k, v, qpos, kpos, causal, window, cq=cq, ck=ck)
+
+
+# --------------------------------------------------------------------------
+# attention block (params + forward)
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg, cross=False, dtype=jnp.float32):
+    d, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, H * dh, ("embed_fsdp", "heads"), bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], d, KV * dh, ("embed_fsdp", "kv_heads"), bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], d, KV * dh, ("embed_fsdp", "kv_heads"), bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], H * dh, d, ("heads", "embed_fsdp"), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(dh, dtype)
+        p["k_norm"] = norm_init(dh, dtype)
+    return p
+
+
+def attn_apply(
+    p,
+    x,
+    cfg,
+    *,
+    kv_src=None,
+    qpos,
+    kpos=None,
+    causal=True,
+    window=None,
+    cache=None,
+    cache_pos=None,
+    use_rope=True,
+):
+    """Self- or cross-attention.
+
+    cache: optional dict {k: (B, Sc, KV, Dh), v: ...} for decode; when
+    given with `cache_pos`, new K/V are written at that slot (ring-buffer
+    semantics for windowed caches: slot = pos % Sc) and attention runs
+    over the whole cache with position masking.
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_src is None else kv_src
+    q = dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = dense(p["wk"], src).reshape(B, src.shape[1], KV, Dh)
+    v = dense(p["wv"], src).reshape(B, src.shape[1], KV, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if use_rope:
+        q = rope(q, qpos, cfg.rope_theta)
+        if kpos is None and kv_src is None:
+            k = rope(k, qpos, cfg.rope_theta)
+        elif kpos is not None:
+            k = rope(k, kpos, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "kv_seq", "kv_heads", None))
+    v = constrain(v, ("batch", "kv_seq", "kv_heads", None))
+    new_cache = None
+    if cache is not None:
+        Sc = cache["k"].shape[1]
+        # cache_pos: scalar (dry-run / lockstep decode) or (B,) per-row
+        # write heads (continuous-batching serving engine)
+        per_row = jnp.ndim(cache_pos) >= 1
+        slot = cache_pos % Sc if window is not None else cache_pos
+        if per_row:
+            dus = jax.vmap(
+                lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+            )
+            ck_ = dus(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv_ = dus(cache["v"], v.astype(cache["v"].dtype), slot)
+        else:
+            ck_ = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+            )
+            cv_ = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+            )
+        new_cache = {"k": ck_, "v": cv_, "pos": cache_pos + S}
+        k, v = ck_.astype(x.dtype), cv_.astype(x.dtype)
+        if window is not None:
+            # ring buffer: key positions relative to the write head
+            idx = jnp.arange(Sc)
+            head = slot[:, None] if per_row else slot
+            cp = cache_pos[:, None] if per_row else cache_pos
+            kpos_eff = cp + S - 1 - ((head + S - 1 - idx) % Sc)
+        else:
+            kpos_eff = jnp.arange(Sc)
+            if per_row:
+                kpos_eff = jnp.broadcast_to(kpos_eff[None], (B, Sc))
+        kpos = kpos_eff
+    if kpos is None:
+        kpos = qpos if kv_src is None else jnp.arange(src.shape[1])
+    out = attention_core(
+        q,
+        k,
+        v,
+        qpos=qpos,
+        kpos=kpos,
+        causal=causal,
+        window=window,
+        flash_threshold=getattr(cfg, "flash_threshold", 8192 * 2048),
+        cq=getattr(cfg, "flash_block_q", 1024),
+        ck=getattr(cfg, "flash_block_k", 1024),
+    )
+    out = constrain(out, ("batch", "seq", "heads", None))
+    y = dense(p["wo"], out.reshape(B, S, H * Dh))
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff, gated=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(ks[0], d, d_ff, ("embed_fsdp", "ffn"), dtype=dtype),
+        "down": dense_init(ks[1], d_ff, d, ("ffn", "embed_fsdp"), dtype=dtype),
+    }
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff, ("embed_fsdp", "ffn"), dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, act="silu"):
+    h = dense(p["up"], x)
+    if "gate" in p:
+        h = act_fn(act)(dense(p["gate"], x)) * h
+    else:
+        h = act_fn(act)(h)
+    h = constrain(h, ("batch", "seq", "ffn"))
+    return dense(p["down"], h)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+def padded_vocab(v, mult):
+    return ((v + mult - 1) // mult) * mult
+
+
+def embed_init(key, vocab, d, pad_multiple=128, dtype=jnp.float32):
+    vp = padded_vocab(vocab, pad_multiple)
+    return {"table": leaf(_normal(key, (vp, d), 0.02, dtype), ("vocab", "embed_fsdp"))}
+
+
+def embed_apply(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed_apply(p, x):
+    """Logits against the (padded) vocab table; sharded over 'vocab'."""
+    logits = x @ p["table"].astype(x.dtype).T
+    return constrain(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,248 @@
+"""Model facade: build any zoo architecture and its train/serve steps.
+
+  model = build_model(cfg)                 # family-dispatched backbone
+  params = init_params(cfg, key)           # Leaf tree (values + axes)
+  aparams, axes = abstract_params(cfg)     # eval_shape (dry-run, no alloc)
+  train_step = make_train_step(cfg, opt)   # grad-accum + AdamW
+  serve_step = make_serve_step(cfg)        # one decode step over caches
+  prefill    = make_prefill(cfg)
+  input_specs(cfg, shape)                  # ShapeDtypeStructs per cell
+
+MODEL_FLOPS accounting (6·N·D dense / 6·N_active·D MoE) lives here too so
+the roofline table and the tests share one source of truth.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+from . import layers as L
+from .transformer import FAMILIES
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    return FAMILIES[cfg.family](cfg)
+
+
+def init_params(cfg: ArchConfig, key):
+    model = build_model(cfg)
+    tree = model.init(key)
+    values, axes = L.split(tree)
+    return values, axes
+
+
+def abstract_params(cfg: ArchConfig):
+    """Shape-only params via eval_shape (dry-run path, no allocation)."""
+    model = build_model(cfg)
+    tree = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    # eval_shape keeps the Leaf structure: values are ShapeDtypeStructs
+    values, axes = L.split(tree)
+    return values, axes
+
+
+def count_params(values) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(values)))
+
+
+def model_flops_per_token(cfg: ArchConfig, values=None) -> float:
+    """6·N_active, N_active = params participating per token (embedding
+    gather excluded, MoE experts scaled by k/E, shared-attn weights counted
+    once per *application*)."""
+    if values is None:
+        values, _ = abstract_params(cfg)
+    total = count_params(values)
+    # subtract embedding / unembedding tables (gather + final matmul —
+    # the unembed matmul IS compute; keep unembed, drop input embed)
+    vp = L.padded_vocab(cfg.vocab_size, cfg.vocab_pad_multiple)
+    embed = vp * cfg.d_model
+    n_active = total - embed  # input embed gather ~0 flops
+    if cfg.tie_embeddings:
+        n_active += embed  # the tied table still does the output matmul
+    if cfg.n_experts > 0:
+        dff = cfg.moe_d_ff or cfg.d_ff
+        expert = 3 * cfg.d_model * dff
+        routed_total = cfg.n_layers * cfg.n_experts * expert
+        routed_active = cfg.n_layers * cfg.n_experts_per_tok * expert
+        n_active = n_active - routed_total + routed_active
+    if cfg.family == "hybrid":
+        # shared attention block applied n_groups times with one param copy
+        G = cfg.hybrid_group
+        n_groups = (cfg.n_layers - cfg.hybrid_tail) // (G + 1)
+        dh = cfg.head_dim
+        attn_block = (
+            cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+            + cfg.n_heads * dh * cfg.d_model
+            + 3 * cfg.d_model * cfg.d_ff
+        )
+        n_active += (n_groups - 1) * attn_block
+    return 6.0 * n_active
+
+
+# ---------------------------------------------------------------------------
+# loss + train step
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits, labels, vocab_size):
+    """Mean token cross-entropy; padded-vocab columns are masked out."""
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0)
+        logits = jnp.where(col[None, None, :] >= vocab_size, -1e9, logits)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(model, params, batch, cfg):
+    logits = model.forward(params, batch)
+    return xent_loss(logits, batch["labels"], cfg.vocab_size)
+
+
+def _cast_compute(params, dtype):
+    """fp32 master params -> compute-dtype working copy at step entry.
+
+    The cast happens on the *sharded* leaves, so every downstream FSDP
+    weight all-gather moves compute-dtype (bf16) bytes — half the link
+    traffic of gathering fp32 and casting after (§Perf iteration 2).
+    Gradients flow back through the cast and accumulate in fp32."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p, params
+    )
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig | None = None, microbatches: int = 1):
+    """(params, opt_state, batch, rng) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch is split into `microbatches`
+    scanned slices; grads are averaged in fp32 before one AdamW update —
+    the standard memory/throughput lever (§Perf).
+    """
+    opt = opt or AdamWConfig()
+    model = build_model(cfg)
+    # axes tree for constraining the grad accumulator to the params'
+    # (FSDP) sharding — turns the per-microbatch gradient all-reduce into
+    # a reduce-scatter (§Perf iteration 3: 2× less grad-sync traffic)
+    _, axes = abstract_params(cfg)
+
+    def _constrain_grads(g):
+        from repro.launch import sharding as SH
+
+        if SH.current() is None:
+            return g
+        return jax.tree.map(
+            lambda gl, ax: SH.constrain(gl, ax), g, axes
+        )
+
+    def fwd(params, mb):
+        return loss_fn(model, _cast_compute(params, cfg.compute_dtype), mb, cfg)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(fwd)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            def micro(accum, mb):
+                l, g = jax.value_and_grad(fwd)(params, mb)
+                g = _constrain_grads(g)
+                acc_l, acc_g = accum
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            sliced = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches) + a.shape[1:]),
+                batch,
+            )
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_g = _constrain_grads(zero_g)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros((), jnp.float32), zero_g), sliced)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state, metrics = adamw_update(opt, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def prefill(params, batch):
+        if cfg.family == "audio":
+            return model.prefill(params, batch["tokens"], batch["frames"])
+        if cfg.family == "vlm":
+            return model.prefill(params, batch["tokens"], batch["media"])
+        return model.prefill(params, batch["tokens"])
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step: (params, caches, token, pos, extras) -> (logits, caches)."""
+    model = build_model(cfg)
+
+    def serve_step(params, caches, token, pos, extras=None):
+        if cfg.family == "audio":
+            return model.decode(params, caches, token, pos, extras["enc"])
+        if cfg.family == "vlm":
+            return model.decode(params, caches, token, pos, extras["media"])
+        return model.decode(params, caches, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch × shape) cell — ShapeDtypeStructs only
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Stand-ins for every model input of the given cell (weak-type
+    correct, shardable, no allocation).  For decode cells the KV cache /
+    recurrent state is part of the inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    if shape.kind == "train":
+        spec = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            spec["media"] = _sds((B, cfg.n_media_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            spec["frames"] = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            spec["media"] = _sds((B, cfg.n_media_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            spec["frames"] = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        return spec
+    # decode: one new token against a cache of length S
+    cache_len = S if cfg.sliding_window is None else min(S, cfg.sliding_window)
+    caches = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+    spec = {
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.family == "vlm":
+        spec["media"] = _sds((B, cfg.n_media_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        spec["enc"] = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return spec

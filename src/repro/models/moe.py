@@ -1,0 +1,164 @@
+"""Top-k routed Mixture-of-Experts with sort-based capacity dispatch.
+
+TPU/GSPMD-idiomatic dropping MoE (MaxText/Switch lineage):
+
+  1. router: (T, E) logits → top-k probs, renormalized,
+  2. sort token-slots by expert id; rank-in-expert via segment offsets,
+  3. scatter into an (E, C, D) buffer — E sharded on "model" (expert
+     parallelism: XLA inserts the all_to_all), C on "data",
+  4. per-expert batched GLU matmuls (one einsum over the E axis),
+  5. gather back + weighted combine; dropped slots (rank ≥ C) contribute 0.
+
+Capacity C = ceil(T·k/E · capacity_factor).  dbrx-132b: 16 experts top-4;
+qwen2-moe-a2.7b: 60 routed top-4 + 4 shared experts (fused as one dense
+GLU of width 4·d_ff_expert per the config sheet).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+from .layers import dense_init, leaf, mlp_apply, mlp_init, _normal
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    dff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, ("embed_fsdp", None), dtype=dtype),
+        "gate": leaf(_normal(ks[1], (E, d, dff), scale, dtype), ("experts", "embed_fsdp", "ffn")),
+        "up": leaf(_normal(ks[2], (E, d, dff), scale, dtype), ("experts", "embed_fsdp", "ffn")),
+        "down": leaf(_normal(ks[3], (E, dff, d), 1.0 / math.sqrt(dff), dtype), ("experts", "ffn", "embed_fsdp")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared_experts * dff, gated=True, dtype=dtype)
+    return p
+
+
+def _group_count(T: int, target: int = 8192) -> int:
+    """G is the *dispatch group* axis, sharded on "data": every scatter
+    and gather in the dispatch path is vmapped over G, so GSPMD keeps
+    them local to a group shard instead of replicating the (E·C, D)
+    buffer and all-reducing it over the whole mesh (§Perf iteration 1).
+    The only cross-device traffic left is the (G,E,C,D)→(E,G,C,D)
+    resharding — an all-to-all of exactly the routed-token bytes.
+
+    G must be a multiple of the mesh's batch-sharding size (else the
+    group axis can't shard and the buffers replicate again); on top of
+    that, grow G while groups stay ≥ `target` tokens."""
+    from repro.launch.sharding import current
+
+    ctx = current()
+    dp = 1
+    if ctx is not None:
+        dp = ctx.axis_size(ctx.rules.get("batch", ()))
+    g = dp if (dp > 1 and T % dp == 0 and T // dp >= 8) else 1
+    while g < 64 and T % (2 * g) == 0 and T // (2 * g) >= target:
+        g *= 2
+    return g
+
+
+def moe_apply(p, x, cfg, act=jax.nn.silu):
+    """x: (B, S, D) -> (B, S, D).  Grouped sort-based capacity dispatch."""
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.n_experts
+    k = cfg.n_experts_per_tok
+    G = _group_count(T)
+    Tg = T // G
+    C = int(math.ceil(Tg * k / E * cfg.capacity_factor))
+    C = max(8, ((C + 7) // 8) * 8)  # small multiple: decode's T_g is tiny
+
+    xf = x.reshape(G, Tg, D)
+    xf = constrain(xf, ("batch", None, None))  # G on the data axis
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"]["w"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- per-group sort-based rank-in-expert (vmapped over G) ---
+    # Build the INVERSE maps (slot -> token, slot -> weight) so that both
+    # dispatch and combine are expert-local gathers/scatter-adds with the
+    # expert axis sharded on "model" end-to-end (§Perf iteration 4): the
+    # only cross-device activation traffic is one bf16 psum of (G,Tg,D)
+    # partials over "model" per direction — the textbook TP-MoE pattern —
+    # instead of resharding (and, in backward, all-reducing) the full
+    # (E·C, D) buffer.
+    def route(top_e_g, top_p_g):
+        flat_e = top_e_g.reshape(Tg * k)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+        rank = jnp.arange(Tg * k) - seg_start[sorted_e]
+        keep = rank < C
+        dest = jnp.where(keep, sorted_e * C + rank, E * C)  # E*C = trash
+        src_tok = order // k
+        w_sorted = top_p_g.reshape(Tg * k)[order]
+        # slot -> source token (Tg = padded "no token" row), slot -> weight
+        tok_idx = jnp.full((E * C + 1,), Tg, jnp.int32).at[dest].set(src_tok.astype(jnp.int32))
+        w_slot = jnp.zeros((E * C + 1,), jnp.float32).at[dest].set(w_sorted)
+        return tok_idx[: E * C].reshape(E, C), w_slot[: E * C].reshape(E, C)
+
+    tok_idx, w_slot = jax.vmap(route)(top_e, top_p)  # (G, E, C) each
+    w_slot = w_slot.astype(x.dtype)
+
+    # --- dispatch: expert-local gather (G,E,C,D), E on "model", G on "data"
+    xf_pad = jnp.concatenate([xf, jnp.zeros((G, 1, D), x.dtype)], axis=1)
+    xs = jnp.take_along_axis(xf_pad[:, None, :, :], tok_idx[..., None], axis=2)
+    # serving layout (§Perf iteration 3b): with few tokens (decode), keep
+    # the experts WEIGHT-STATIONARY — co-shard the contraction dim D with
+    # the weights' fsdp axis so the matmul runs on local weight shards and
+    # all-reduces the tiny activations, instead of all-gathering 30 GB of
+    # expert weights per decoded token.
+    weight_stationary = T <= 4096
+    if weight_stationary:
+        xs = constrain(xs, (None, "experts", None, "embed_fsdp"))
+    else:
+        xs = constrain(xs, ("batch", "experts", None, None))
+
+    # --- expert GLU ---
+    g_ = jnp.einsum("gecd,edf->gecf", xs, p["gate"].astype(x.dtype))
+    u_ = jnp.einsum("gecd,edf->gecf", xs, p["up"].astype(x.dtype))
+    h = act(g_) * u_
+    h = constrain(
+        h,
+        (None, "experts", None, "ffn") if weight_stationary else ("batch", "experts", None, "ffn"),
+    )
+    ys = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(x.dtype))
+    ys = constrain(
+        ys,
+        (None, "experts", None, "embed_fsdp") if weight_stationary else ("batch", "experts", None, None),
+    )
+
+    # --- combine: one scatter-ADD per group over the flattened (E·C) slot
+    # axis.  Updates are sharded on "model" through E while the (Tg+1, D)
+    # output is model-replicated: GSPMD keeps each column's contribution
+    # local (add is associative) and finishes with one activation psum —
+    # the textbook TP-MoE combine, no (G,E,Tg,D) materialization.
+    def comb(ys_g, tok_g, w_g):
+        upd = (ys_g * w_g[..., None]).reshape(E * C, D)
+        return jnp.zeros((Tg + 1, D), x.dtype).at[tok_g.reshape(E * C)].add(upd)
+
+    out = jax.vmap(comb)(ys, tok_idx, w_slot)[:, :Tg]  # (G, Tg, D)
+    out = constrain(out, ("batch", None, None))
+    out = out.reshape(T, D)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act="silu").reshape(T, D)
+    return out.reshape(B, S, D)
+
+
+def aux_load_balance_loss(logits, top_e, E):
+    """Switch-style load-balance auxiliary loss (returned by train loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32)
+    ce = onehot.mean(axis=0)
+    return E * jnp.sum(me * ce)

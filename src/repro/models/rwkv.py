@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent
+per-channel decay linear recurrence.
+
+Recurrence per head (dk = dv = head_size):
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+
+Training uses the chunkwise-parallel form (the TPU adaptation of the
+original CUDA wkv kernel — DESIGN.md hardware-adaptation): within a chunk
+of size C the intra-chunk part is a masked (C × C) matmul of
+decay-weighted r/k (MXU work), and the state is carried across chunks
+with one `lax.scan` — O(T·C·d) instead of a length-T serial loop.
+Log-decay accumulations are clamped to [-30, 0]; entries beyond e⁻³⁰
+underflow to 0 which matches the mathematical limit.
+
+Decode keeps O(1) state per layer: (token-shift vectors, S) — why this
+arch runs the 500k-token cell natively.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+from .layers import dense_init, layernorm, leaf, norm_init, _normal
+
+LORA_MIX = 32
+LORA_DECAY = 64
+CHUNK = 64
+
+
+def rwkv_block_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.rwkv_heads
+    dh = cfg.rwkv_head_size
+    dff = cfg.d_ff
+    ks = jax.random.split(key, 16)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "ln1": norm_init(d, dtype, bias=True),
+        "ln2": norm_init(d, dtype, bias=True),
+        "tm": {
+            "mu": leaf(jnp.zeros((5, d), dtype), (None, None)),
+            "maa_w1": leaf(_normal(ks[0], (d, 5 * LORA_MIX), s, dtype), ("embed_fsdp", None)),
+            "maa_w2": leaf(_normal(ks[1], (5, LORA_MIX, d), 0.01, dtype), (None, None, "embed_fsdp")),
+            "decay_mu": leaf(jnp.full((H * dh,), -6.0, dtype), (None,)),
+            "decay_w1": leaf(_normal(ks[2], (d, LORA_DECAY), s, dtype), ("embed_fsdp", None)),
+            "decay_w2": leaf(_normal(ks[3], (LORA_DECAY, H * dh), 0.01, dtype), (None, "heads")),
+            "bonus_u": leaf(jnp.zeros((H, dh), dtype), ("heads", None)),
+            "wr": dense_init(ks[4], d, H * dh, ("embed_fsdp", "heads"), dtype=dtype),
+            "wk": dense_init(ks[5], d, H * dh, ("embed_fsdp", "heads"), dtype=dtype),
+            "wv": dense_init(ks[6], d, H * dh, ("embed_fsdp", "heads"), dtype=dtype),
+            "wg": dense_init(ks[7], d, H * dh, ("embed_fsdp", "heads"), dtype=dtype),
+            "wo": dense_init(ks[8], H * dh, d, ("heads", "embed_fsdp"), dtype=dtype),
+            "ln_x": norm_init(H * dh, dtype, bias=True),
+        },
+        "cm": {
+            "mu_k": leaf(jnp.ones((d,), dtype), (None,)),
+            "mu_r": leaf(jnp.ones((d,), dtype), (None,)),
+            "wk": dense_init(ks[9], d, dff, ("embed_fsdp", "ffn"), dtype=dtype),
+            "wv": dense_init(ks[10], dff, d, ("ffn", "embed_fsdp"), dtype=dtype),
+            "wr": dense_init(ks[11], d, d, ("embed_fsdp", "embed_fsdp"), dtype=dtype),
+        },
+    }
+    return p
+
+
+def _token_shift(x, x_prev_last):
+    """x: (B, T, D); returns x_{t-1} with x_prev_last filling slot 0."""
+    return jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inputs(p_tm, x, xs):
+    """RWKV6 data-dependent lerp: five mixed streams (r, k, v, w, g)."""
+    xx = xs - x  # (B, T, D)
+    base = x + xx * p_tm["mu"][:, None, None, :].astype(x.dtype)  # (5, B, T, D)
+    low = jnp.tanh(x @ p_tm["maa_w1"].astype(x.dtype))  # (B, T, 5*r)
+    B, T, _ = x.shape
+    low = low.reshape(B, T, 5, LORA_MIX).transpose(2, 0, 1, 3)  # (5, B, T, r)
+    delta = jnp.einsum("nbtr,nrd->nbtd", low, p_tm["maa_w2"].astype(x.dtype))
+    mixed = base + xx[None] * delta
+    return mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]  # r,k,v,w,g streams
+
+
+def _decay(p_tm, xw, H, dh):
+    """log-decay lw in (-inf, 0): w = exp(-exp(decay))."""
+    dec = p_tm["decay_mu"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p_tm["decay_w1"].astype(xw.dtype)).astype(jnp.float32)
+        @ p_tm["decay_w2"].astype(jnp.float32)
+    )
+    lw = -jnp.exp(dec)  # (B, T, H*dh), strictly negative
+    B, T = xw.shape[:2]
+    return lw.reshape(B, T, H, dh)
+
+
+def _wkv_chunked(r, k, v, lw, u, S0):
+    """Chunkwise-parallel WKV.
+
+    r/k/v: (B, T, H, dh); lw: (B, T, H, dh) log decays; u: (H, dh);
+    S0: (B, H, dh, dh).  Returns (o: (B, T, H, dh), S_T).
+    """
+    B, T, H, dh = r.shape
+    C = min(CHUNK, T)
+    assert T % C == 0, (T, C)
+    n = T // C
+    rc = r.reshape(B, n, C, H, dh)
+    kc = k.reshape(B, n, C, H, dh)
+    vc = v.reshape(B, n, C, H, dh)
+    lwc = lw.reshape(B, n, C, H, dh).astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        rb, kb, vb, lwb = inp  # (B, C, H, dh)
+        cum = jnp.cumsum(lwb, axis=1)  # inclusive
+        cum = jnp.clip(cum, -30.0, 0.0)
+        cum_prev = cum - lwb  # exclusive prefix (cum_{i-1})
+        cum_prev = jnp.clip(cum_prev, -30.0, 0.0)
+        r_t = (rb.astype(jnp.float32) * jnp.exp(cum_prev)).astype(rb.dtype)
+        k_t = (kb.astype(jnp.float32) * jnp.exp(-cum)).astype(kb.dtype)
+        # intra-chunk: A[i,j] = r̃_i · k̃_j, strictly lower triangular
+        A = jnp.einsum("bihd,bjhd->bhij", r_t, k_t).astype(jnp.float32)
+        ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+        A = jnp.where(jj < ii, A, 0.0)
+        # diagonal bonus: (r_i ⊙ u) · k_i
+        diag = jnp.einsum("bihd,hd,bihd->bhi", rb.astype(jnp.float32), u.astype(jnp.float32), kb.astype(jnp.float32))
+        o_intra = jnp.einsum("bhij,bjhd->bihd", A.astype(vb.dtype), vb)
+        o_intra = o_intra + diag.transpose(0, 2, 1)[..., None].astype(vb.dtype) * vb
+        # inter-chunk: r̃ against carried state
+        o_inter = jnp.einsum("bihd,bhde->bihe", r_t, S.astype(r_t.dtype))
+        # state update
+        decay_tail = jnp.exp(jnp.clip(cum[:, -1:, :, :] - cum, -30.0, 0.0))  # (B, C, H, dh)
+        k_tail = (kb.astype(jnp.float32) * decay_tail).astype(kb.dtype)
+        S_new = S * jnp.exp(cum[:, -1, :, :])[..., None] + jnp.einsum(
+            "bjhd,bjhe->bhde", k_tail, vb
+        ).astype(jnp.float32)
+        return S_new, (o_intra + o_inter).astype(rb.dtype)
+
+    inp = (
+        rc.transpose(1, 0, 2, 3, 4),
+        kc.transpose(1, 0, 2, 3, 4),
+        vc.transpose(1, 0, 2, 3, 4),
+        lwc.transpose(1, 0, 2, 3, 4),
+    )
+    S_T, oc = jax.lax.scan(chunk_step, S0.astype(jnp.float32), inp)
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(B, T, H, dh)
+    return o, S_T
+
+
+def rwkv_time_mix(p_tm, x, cfg, state=None):
+    """state: None (train, zero init) or dict with shift (B,D), S (B,H,dh,dh)."""
+    B, T, D = x.shape
+    H, dh = cfg.rwkv_heads, cfg.rwkv_head_size
+    shift_in = state["shift_tm"] if state is not None else jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, shift_in)
+    xr, xk, xv, xw, xg = _time_mix_inputs(p_tm, x, xs)
+    r = (xr @ p_tm["wr"]["w"].astype(x.dtype)).reshape(B, T, H, dh)
+    k = (xk @ p_tm["wk"]["w"].astype(x.dtype)).reshape(B, T, H, dh)
+    v = (xv @ p_tm["wv"]["w"].astype(x.dtype)).reshape(B, T, H, dh)
+    g = jax.nn.silu(xg @ p_tm["wg"]["w"].astype(x.dtype))
+    lw = _decay(p_tm, xw, H, dh)
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, dh, dh), jnp.float32)
+    r = constrain(r, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "heads", None))
+    o, S_T = _wkv_chunked(r, k, v, lw, p_tm["bonus_u"], S0)
+    o = layernorm(p_tm["ln_x"], o.reshape(B, T, H * dh))
+    y = (o * g) @ p_tm["wo"]["w"].astype(x.dtype)
+    new_state = {"shift_tm": x[:, -1, :], "S": S_T}
+    return y, new_state
+
+
+def rwkv_channel_mix(p_cm, x, cfg, state=None):
+    B, T, D = x.shape
+    shift_in = state["shift_cm"] if state is not None else jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, shift_in)
+    xx = xs - x
+    xk = x + xx * p_cm["mu_k"].astype(x.dtype)
+    xr = x + xx * p_cm["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p_cm["wk"]["w"].astype(x.dtype)))
+    kk = constrain(kk, ("batch", "seq", "ffn"))
+    vv = kk @ p_cm["wv"]["w"].astype(x.dtype)
+    rr = jax.nn.sigmoid(xr @ p_cm["wr"]["w"].astype(x.dtype))
+    return rr * vv, {"shift_cm": x[:, -1, :]}
+
+
+def rwkv_block_apply(p, x, cfg, state=None):
+    """Full RWKV block: LN → time-mix → residual → LN → channel-mix."""
+    h, st_tm = rwkv_time_mix(p["tm"], layernorm(p["ln1"], x), cfg, state)
+    x = x + h
+    h, st_cm = rwkv_channel_mix(p["cm"], layernorm(p["ln2"], x), cfg, state)
+    x = x + h
+    new_state = None
+    if state is not None or True:
+        new_state = {**st_tm, **st_cm}
+    return x, new_state
+
+
+def rwkv_init_state(cfg, batch, dtype=jnp.bfloat16):
+    H, dh, D = cfg.rwkv_heads, cfg.rwkv_head_size, cfg.d_model
+    return {
+        "shift_tm": jnp.zeros((batch, D), dtype),
+        "shift_cm": jnp.zeros((batch, D), dtype),
+        "S": jnp.zeros((batch, H, dh, dh), jnp.float32),
+    }

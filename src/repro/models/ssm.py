@@ -1,0 +1,153 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) block — used by the zamba2 hybrid.
+
+State-space recurrence with scalar-per-head decay:
+    h_t = exp(Δ_t·A) h_{t-1} + Δ_t · x_t ⊗ B_t
+    y_t = C_t · h_t + D ⊙ x_t
+Training uses the chunked "state-space dual" form: within a chunk the
+output is a masked (C × C) matmul weighted by pairwise decay factors
+(computed as exp of *differences* of cumulative log-decays — never
+exponentiating a positive number), and chunk states are carried by one
+lax.scan.  Decode is an O(1)-state update — with the shared-attention
+blocks this is what makes zamba2 run the 500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+from .layers import leaf, norm_init, rmsnorm, _normal
+
+CHUNK = 64
+CONV_W = 4
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, H, conv_dim
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    g, ds = cfg.ssm_groups, cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    in_dim = 2 * d_inner + 2 * g * ds + H
+    return {
+        "in_proj": leaf(_normal(ks[0], (d, in_dim), s, dtype), ("embed_fsdp", "heads")),
+        "conv_w": leaf(_normal(ks[1], (CONV_W, conv_dim), 0.1, dtype), (None, "heads")),
+        "conv_b": leaf(jnp.zeros((conv_dim,), dtype), ("heads",)),
+        "A_log": leaf(jnp.zeros((H,), dtype), (None,)),
+        "D": leaf(jnp.ones((H,), dtype), (None,)),
+        "dt_bias": leaf(jnp.zeros((H,), dtype), (None,)),
+        "norm": norm_init(d_inner, dtype),
+        "out_proj": leaf(_normal(ks[2], (d_inner, d), 1.0 / math.sqrt(d_inner), dtype), ("heads", "embed_fsdp")),
+    }
+
+
+def _causal_conv(xBC, w, b, conv_state=None):
+    """Depthwise causal conv, width CONV_W. xBC: (B, T, C).
+
+    conv_state: (B, CONV_W-1, C) trailing context (decode); returns
+    (out, new_conv_state)."""
+    B, T, C = xBC.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, CONV_W - 1, C), xBC.dtype)
+    full = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    # depthwise: sum_w full[:, t+i, :] * w[i, :]
+    out = jnp.zeros((B, T, C), xBC.dtype)
+    for i in range(CONV_W):
+        out = out + full[:, i : i + T, :] * w[i][None, None, :].astype(xBC.dtype)
+    out = jax.nn.silu(out + b[None, None, :].astype(xBC.dtype))
+    return out, full[:, T:, :]
+
+
+def _segsum_decay(cum):
+    """L[i, j] = exp(cum_i − cum_j) for j ≤ i else 0.  cum: (..., C)."""
+    diff = cum[..., :, None] - cum[..., None, :]
+    C = cum.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    return jnp.where(jj <= ii, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+
+
+def _ssd_chunked(x, dt, Bm, Cm, A_log, h0):
+    """x: (B,T,H,P) dt: (B,T,H) Bm/Cm: (B,T,G,N); h0: (B,H,N,P)."""
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    C = min(CHUNK, T)
+    assert T % C == 0
+    n = T // C
+    A = -jnp.exp(A_log.astype(jnp.float32))  # (H,) negative
+    lg = dt.astype(jnp.float32) * A[None, None, :]  # (B,T,H) log decay
+    xd = x * dt[..., None].astype(x.dtype)  # Δ_t · x_t
+
+    def reshape_c(a):
+        return a.reshape((B, n, C) + a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    xs, lgs = reshape_c(xd), reshape_c(lg)
+    Bs, Cs = reshape_c(Bm), reshape_c(Cm)
+
+    def chunk_step(h, inp):
+        xb, lgb, Bb, Cb = inp  # (B,C,H,P), (B,C,H), (B,C,G,N)
+        cum = jnp.cumsum(lgb, axis=1)  # (B,C,H)
+        L = _segsum_decay(cum.transpose(0, 2, 1))  # (B,H,C,C)
+        # M[i,j] = C_i·B_j (group-broadcast to heads)
+        Bh = jnp.repeat(Bb, rep, axis=2) if G != H else Bb  # (B,C,H,N)
+        Ch = jnp.repeat(Cb, rep, axis=2) if G != H else Cb
+        M = jnp.einsum("bihn,bjhn->bhij", Ch, Bh).astype(jnp.float32)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", (M * L).astype(xb.dtype), xb)
+        # inter: y_i += exp(cum_i) C_i · h0
+        decay_in = jnp.exp(cum).astype(xb.dtype)  # (B,C,H)
+        y_inter = jnp.einsum("bihn,bhnp->bihp", Ch, h.astype(xb.dtype)) * decay_in[..., None]
+        # state update
+        tail = jnp.exp(jnp.minimum(cum[:, -1:, :] - cum, 0.0)).astype(xb.dtype)  # (B,C,H)
+        h_new = h * jnp.exp(cum[:, -1, :]).astype(jnp.float32)[..., None, None] + jnp.einsum(
+            "bjhn,bjhp->bhnp", Bh * tail[..., None], xb
+        ).astype(jnp.float32)
+        return h_new, (y_intra + y_inter)
+
+    h_T, yc = jax.lax.scan(chunk_step, h0.astype(jnp.float32), (xs, lgs, Bs, Cs))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, T, H, P)
+    return y, h_T
+
+
+def mamba2_apply(p, x, cfg, state=None):
+    """x: (B, T, D) -> (B, T, D); state carries conv + ssd state (decode)."""
+    B, T, D = x.shape
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    g, ds, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + g * ds], axis=-1)
+    xs = xs.reshape(B, T, H, P)
+    xs = constrain(xs, ("batch", "seq", "heads", None))
+    Bm = Bm.reshape(B, T, g, ds)
+    Cm = Cm.reshape(B, T, g, ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    h0 = state["ssd"] if state is not None else jnp.zeros((B, H, ds, P), jnp.float32)
+    y, h_T = _ssd_chunked(xs, dt, Bm, Cm, p["A_log"], h0)
+    y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, T, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"conv": new_conv, "ssd": h_T}
+    return out, new_state
+
+
+def mamba2_init_state(cfg, batch, dtype=jnp.bfloat16):
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }

@@ -1,0 +1,487 @@
+"""Decoder backbones for the architecture zoo.
+
+Five block layouts, all built from layers.py / moe.py / rwkv.py / ssm.py:
+
+  dense   — uniform [attn + MLP] blocks, lax.scan over stacked params
+  moe     — uniform [attn + MoE] blocks (dbrx, qwen2-moe)
+  vlm     — llama-3.2-vision: groups of (period−1) self blocks + 1 block
+            with an extra gated cross-attention into image embeddings
+            (two-level scan keeps the interleave exact and the HLO small)
+  ssm     — RWKV-6 stack (no attention, no KV cache)
+  hybrid  — zamba2: groups of G mamba2 blocks + one *shared-weight*
+            attention block application (weight sharing: the shared block's
+            params are closed over, not scanned)
+
+Every family exposes:  init(key, cfg) → params(Leaf tree)
+                       forward(params, batch, cfg) → logits       (train)
+                       prefill(params, tokens, …) → (logits, caches)
+                       decode(params, caches, token, pos) → (logits, caches)
+
+Scan-over-layers keeps lowered HLO size O(1) in depth — essential for the
+512-device dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+from . import layers as L
+from .moe import moe_apply, moe_init
+from .rwkv import rwkv_block_apply, rwkv_block_init, rwkv_init_state
+from .ssm import mamba2_apply, mamba2_init, mamba2_init_state
+
+
+# --------------------------------------------------------------------------
+# generic helpers
+# --------------------------------------------------------------------------
+
+def stack_init(key, n, init_fn):
+    """vmap an init over n keys -> stacked Leaf tree with leading axis n."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree.map(
+        lambda *xs: L.Leaf(jnp.stack([x.value for x in xs]), ("layers",) + xs[0].axes),
+        *trees,
+        is_leaf=lambda x: isinstance(x, L.Leaf),
+    )
+
+
+def _remat(fn, cfg):
+    if getattr(cfg, "remat", "full") == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+# --------------------------------------------------------------------------
+# standard decoder block (attn + mlp|moe)
+# --------------------------------------------------------------------------
+
+def block_init(key, cfg, moe=False, cross=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": L.norm_init(cfg.d_model, dtype, bias=cfg.norm == "layernorm"),
+        "attn": L.attn_init(ks[0], cfg, dtype=dtype),
+        "ln2": L.norm_init(cfg.d_model, dtype, bias=cfg.norm == "layernorm"),
+    }
+    if moe:
+        p["moe"] = moe_init(ks[1], cfg, dtype=dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, dtype=dtype)
+    if cross:
+        p["ln_x"] = L.norm_init(cfg.d_model, dtype, bias=cfg.norm == "layernorm")
+        p["xattn"] = L.attn_init(ks[2], cfg, cross=True, dtype=dtype)
+        p["xattn_gate"] = L.leaf(jnp.zeros((1,), dtype), (None,))
+    return p
+
+
+def block_apply(p, x, cfg, *, pos, cache=None, media=None, window=None):
+    """Returns (x, new_cache).  cache = {"self": {...}, "cross"?: {...}}."""
+    new_cache = {} if cache is not None else None
+    h = L.norm(p["ln1"], x, cfg.norm)
+    self_cache = cache.get("self") if cache is not None else None
+    a, sc = L.attn_apply(
+        p["attn"],
+        h,
+        cfg,
+        qpos=pos,
+        causal=True,
+        window=window,
+        cache=self_cache,
+        cache_pos=cache["pos"] if cache is not None else None,
+    )
+    if new_cache is not None:
+        new_cache["self"] = {"k": sc["k"], "v": sc["v"]}
+        new_cache["pos"] = sc["pos"]
+    x = x + a
+    if "xattn" in p and media is not None:
+        h = L.norm(p["ln_x"], x, cfg.norm)
+        a, _ = L.attn_apply(
+            p["xattn"], h, cfg, kv_src=media, qpos=pos, causal=False, use_rope=False
+        )
+        x = x + jnp.tanh(p["xattn_gate"]).astype(x.dtype) * a
+    h = L.norm(p["ln2"], x, cfg.norm)
+    if "moe" in p:
+        m = moe_apply(p["moe"], h, cfg)
+    else:
+        m = L.mlp_apply(p["mlp"], h, act=cfg.act)
+    x = x + m
+    x = constrain(x, ("batch", "seq", None))
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# family: dense / moe (uniform stack)
+# --------------------------------------------------------------------------
+
+class UniformDecoder:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.moe = cfg.n_experts > 0
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+            "blocks": stack_init(k2, cfg.n_layers, lambda k: block_init(k, cfg, moe=self.moe)),
+            "final_norm": L.norm_init(cfg.d_model, bias=cfg.norm == "layernorm"),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.embed_init(k3, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple)
+        return p
+
+    def _run_blocks(self, params, x, pos, caches=None, window=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            blk, cache = xs
+            h, nc = block_apply(blk, h, cfg, pos=pos, cache=cache, window=window)
+            return h, nc
+
+        fn = _remat(body, cfg)
+        if caches is None:
+            xs = (params["blocks"], None)
+            x, _ = jax.lax.scan(lambda c, b: fn(c, (b, None)), x, params["blocks"])
+            return x, None
+        x, new_caches = jax.lax.scan(fn, x, (params["blocks"], caches))
+        return x, new_caches
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        x = constrain(x, ("batch", "seq", None))
+        pos = jnp.arange(S)
+        x, _ = self._run_blocks(params, x, pos, window=cfg.sliding_window)
+        x = L.norm(params["final_norm"], x, cfg.norm)
+        table = params.get("unembed", params["embed"])
+        return L.unembed_apply(table, x)
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
+        """cache_len is caller-chosen: decode cells size it to the window
+        (ring buffer); prefill always uses a full-length cache (the window
+        only masks attention)."""
+        cfg = self.cfg
+        kv = lambda: jnp.zeros((cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        # per-row write heads: (layers, B) so the serving engine can run
+        # continuous batching with unaligned request positions
+        return {"self": {"k": kv(), "v": kv()}, "pos": jnp.zeros((cfg.n_layers, batch_size), jnp.int32)}
+
+    def prefill(self, params, tokens):
+        cfg = self.cfg
+        B, S = tokens.shape
+        caches = self.init_cache(B, S)
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        pos = jnp.arange(S)
+        x, caches = self._run_blocks(params, x, pos, caches=caches, window=cfg.sliding_window)
+        x = L.norm(params["final_norm"], x, cfg.norm)
+        table = params.get("unembed", params["embed"])
+        return L.unembed_apply(table, x[:, -1:, :]), caches
+
+    def decode(self, params, caches, token, pos):
+        """token: (B, 1) int32; pos: scalar int32 (lockstep) or (B,)
+        per-request positions (continuous-batching engine)."""
+        cfg = self.cfg
+        B = token.shape[0]
+        x = L.embed_apply(params["embed"], token, cfg.compute_dtype)
+        qpos = (jnp.zeros((B,), jnp.int32) + pos)[:, None]
+        x, new_caches = self._run_blocks(params, x, qpos, caches=caches, window=cfg.sliding_window)
+        x = L.norm(params["final_norm"], x, cfg.norm)
+        table = params.get("unembed", params["embed"])
+        return L.unembed_apply(table, x), new_caches
+
+
+# --------------------------------------------------------------------------
+# family: vlm (llama-3.2-vision interleave)
+# --------------------------------------------------------------------------
+
+class VisionDecoder(UniformDecoder):
+    """Groups of (period−1) self blocks + 1 cross-attn block."""
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        period = cfg.cross_attn_period
+        assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+        self.n_groups = cfg.n_layers // period
+        self.n_self = period - 1
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+            "self_blocks": stack_init(
+                k2, self.n_groups, lambda k: stack_init(k, self.n_self, lambda kk: block_init(kk, cfg))
+            ),
+            "cross_blocks": stack_init(k3, self.n_groups, lambda k: block_init(k, cfg, cross=True)),
+            "final_norm": L.norm_init(cfg.d_model, bias=False),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.embed_init(k4, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple)
+        return p
+
+    def _run_blocks(self, params, x, pos, caches=None, window=None, media=None):
+        cfg = self.cfg
+
+        def inner(h, xs):
+            blk, cache = xs
+            return block_apply(blk, h, cfg, pos=pos, cache=cache)
+
+        inner = _remat(inner, cfg)
+
+        def group(h, xs):
+            selfs, cross, s_caches, c_cache = xs
+            h, ns = jax.lax.scan(inner, h, (selfs, s_caches))
+            h, nc = block_apply(cross, h, cfg, pos=pos, cache=c_cache, media=media)
+            return h, (ns, nc)
+
+        if caches is None:
+            s_caches = c_caches = None
+            h, _ = jax.lax.scan(
+                lambda c, b: (group(c, (b[0], b[1], None, None))[0], None),
+                x,
+                (params["self_blocks"], params["cross_blocks"]),
+            )
+            return h, None
+        h, (ns, nc) = jax.lax.scan(
+            group, x, (params["self_blocks"], params["cross_blocks"], caches["self_groups"], caches["cross_groups"])
+        )
+        return h, {"self_groups": ns, "cross_groups": nc}
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        media = batch["media"].astype(cfg.compute_dtype)  # (B, n_media, d_model) stub embeds
+        B, S = tokens.shape
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        pos = jnp.arange(S)
+        x, _ = self._run_blocks(params, x, pos, media=media)
+        x = L.norm(params["final_norm"], x, cfg.norm)
+        table = params.get("unembed", params["embed"])
+        return L.unembed_apply(table, x)
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kv = lambda lead: jnp.zeros(lead + (batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return {
+            "self_groups": {
+                "self": {"k": kv((self.n_groups, self.n_self)), "v": kv((self.n_groups, self.n_self))},
+                "pos": jnp.zeros((self.n_groups, self.n_self, batch_size), jnp.int32),
+            },
+            "cross_groups": {
+                "self": {"k": kv((self.n_groups,)), "v": kv((self.n_groups,))},
+                "pos": jnp.zeros((self.n_groups, batch_size), jnp.int32),
+            },
+        }
+
+    def prefill(self, params, tokens, media=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        caches = self.init_cache(B, S)
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        pos = jnp.arange(S)
+        media = media if media is not None else jnp.zeros((B, cfg.n_media_tokens, cfg.d_model), cfg.compute_dtype)
+        x, caches = self._run_blocks(params, x, pos, caches=caches, media=media)
+        x = L.norm(params["final_norm"], x, cfg.norm)
+        table = params.get("unembed", params["embed"])
+        return L.unembed_apply(table, x[:, -1:, :]), caches
+
+    def decode(self, params, caches, token, pos, media=None):
+        cfg = self.cfg
+        B = token.shape[0]
+        x = L.embed_apply(params["embed"], token, cfg.compute_dtype)
+        qpos = (jnp.zeros((B,), jnp.int32) + pos)[:, None]
+        media = media if media is not None else jnp.zeros((B, cfg.n_media_tokens, cfg.d_model), cfg.compute_dtype)
+        x, new_caches = self._run_blocks(params, x, qpos, caches=caches, media=media)
+        x = L.norm(params["final_norm"], x, cfg.norm)
+        table = params.get("unembed", params["embed"])
+        return L.unembed_apply(table, x), new_caches
+
+
+# --------------------------------------------------------------------------
+# family: ssm (RWKV-6)
+# --------------------------------------------------------------------------
+
+class RWKVModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+            "ln0": L.norm_init(cfg.d_model, bias=True),
+            "blocks": stack_init(k2, cfg.n_layers, lambda k: rwkv_block_init(k, cfg)),
+            "final_norm": L.norm_init(cfg.d_model, bias=True),
+            "unembed": L.embed_init(k3, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+        }
+
+    def _run(self, params, x, states=None):
+        cfg = self.cfg
+
+        def body(h, xs):
+            blk, st = xs
+            h, ns = rwkv_block_apply(blk, h, cfg, st)
+            return h, ns
+
+        body = _remat(body, cfg)
+        if states is None:
+            x, _ = jax.lax.scan(lambda c, b: body(c, (b, None)), x, params["blocks"])
+            return x, None
+        return jax.lax.scan(body, x, (params["blocks"], states))
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], batch["tokens"], cfg.compute_dtype)
+        x = L.layernorm(params["ln0"], x)
+        x, _ = self._run(params, x)
+        x = L.layernorm(params["final_norm"], x)
+        return L.unembed_apply(params["unembed"], x)
+
+    def init_cache(self, batch_size, cache_len=0, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        st = rwkv_init_state(cfg, batch_size, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st)
+
+    def prefill(self, params, tokens):
+        cfg = self.cfg
+        B, S = tokens.shape
+        states = self.init_cache(B)
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        x = L.layernorm(params["ln0"], x)
+        x, states = self._run(params, x, states)
+        x = L.layernorm(params["final_norm"], x)
+        return L.unembed_apply(params["unembed"], x[:, -1:, :]), states
+
+    def decode(self, params, states, token, pos):
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], token, cfg.compute_dtype)
+        x = L.layernorm(params["ln0"], x)
+        x, states = self._run(params, x, states)
+        x = L.layernorm(params["final_norm"], x)
+        return L.unembed_apply(params["unembed"], x), states
+
+
+# --------------------------------------------------------------------------
+# family: hybrid (zamba2 — mamba2 + shared attention block)
+# --------------------------------------------------------------------------
+
+class HybridDecoder:
+    """cfg.hybrid_group mamba layers then one shared-attn application, ×
+    n_groups, plus cfg.hybrid_tail trailing mamba layers."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        G = cfg.hybrid_group
+        self.n_groups = (cfg.n_layers - cfg.hybrid_tail) // (G + 1)
+        assert self.n_groups * (G + 1) + cfg.hybrid_tail == cfg.n_layers
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+            "mamba_groups": stack_init(
+                k2, self.n_groups, lambda k: stack_init(k, cfg.hybrid_group, lambda kk: self._mamba_block(kk))
+            ),
+            "shared_attn": block_init(k3, cfg),  # ONE copy — weight sharing
+            "mamba_tail": stack_init(k4, cfg.hybrid_tail, lambda k: self._mamba_block(k)),
+            "final_norm": L.norm_init(cfg.d_model),
+            "unembed": L.embed_init(k5, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+        }
+
+    def _mamba_block(self, key):
+        cfg = self.cfg
+        return {"ln": L.norm_init(cfg.d_model), "mamba": mamba2_init(key, cfg)}
+
+    def _mamba_apply(self, blk, h, st):
+        y, ns = mamba2_apply(blk["mamba"], L.rmsnorm(blk["ln"], h), self.cfg, st)
+        return h + y, ns
+
+    def _run(self, params, x, pos, states=None):
+        cfg = self.cfg
+        shared = params["shared_attn"]
+
+        def mamba_step(h, xs):
+            blk, st = xs
+            return self._mamba_apply(blk, h, st)
+
+        mamba_step = _remat(mamba_step, cfg)
+
+        def group(h, xs):
+            blks, m_states, a_cache = xs
+            h, ns = jax.lax.scan(mamba_step, h, (blks, m_states))
+            h, nc = block_apply(shared, h, cfg, pos=pos, cache=a_cache)
+            return h, (ns, nc)
+
+        if states is None:
+            h, _ = jax.lax.scan(
+                lambda c, b: (group(c, (b, None, None))[0], None), x, params["mamba_groups"]
+            )
+            h, _ = jax.lax.scan(lambda c, b: (mamba_step(c, (b, None))[0], None), h, params["mamba_tail"])
+            return h, None
+        h, (ngm, ngc) = jax.lax.scan(
+            group, x, (params["mamba_groups"], states["mamba_groups"], states["attn"])
+        )
+        h, nt = jax.lax.scan(mamba_step, h, (params["mamba_tail"], states["mamba_tail"]))
+        return h, {"mamba_groups": ngm, "attn": ngc, "mamba_tail": nt}
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        pos = jnp.arange(tokens.shape[1])
+        x, _ = self._run(params, x, pos)
+        x = L.rmsnorm(params["final_norm"], x)
+        return L.unembed_apply(params["unembed"], x)
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        m = mamba2_init_state(cfg, batch_size, dtype)
+        kv = lambda: jnp.zeros((self.n_groups, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return {
+            "mamba_groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_groups, cfg.hybrid_group) + a.shape), m
+            ),
+            "attn": {"self": {"k": kv(), "v": kv()}, "pos": jnp.zeros((self.n_groups, batch_size), jnp.int32)},
+            "mamba_tail": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.hybrid_tail,) + a.shape), m),
+        }
+
+    def prefill(self, params, tokens):
+        cfg = self.cfg
+        B, S = tokens.shape
+        states = self.init_cache(B, S)
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        pos = jnp.arange(S)
+        x, states = self._run(params, x, pos, states)
+        x = L.rmsnorm(params["final_norm"], x)
+        return L.unembed_apply(params["unembed"], x[:, -1:, :]), states
+
+    def decode(self, params, states, token, pos):
+        cfg = self.cfg
+        B = token.shape[0]
+        x = L.embed_apply(params["embed"], token, cfg.compute_dtype)
+        qpos = (jnp.zeros((B,), jnp.int32) + pos)[:, None]
+        x, states = self._run(params, x, qpos, states)
+        x = L.rmsnorm(params["final_norm"], x)
+        return L.unembed_apply(params["unembed"], x), states
+
+
+FAMILIES = {
+    "dense": UniformDecoder,
+    "moe": UniformDecoder,
+    "vlm": VisionDecoder,
+    "ssm": RWKVModel,
+    "hybrid": HybridDecoder,
+}

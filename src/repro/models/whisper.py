@@ -1,0 +1,154 @@
+"""Whisper-style encoder–decoder backbone (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed log-mel frame embeddings (B, n_frames, d_model) directly into
+the encoder (bidirectional attention, learned positions).  The decoder is
+a causal transformer with cross-attention into the encoder output; decode
+carries a self-attention KV cache, the cross K/V are computed once at
+prefill and carried read-only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+from . import layers as L
+from .transformer import _remat, block_init, stack_init
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.norm_init(cfg.d_model, bias=True),
+        "attn": L.attn_init(ks[0], cfg),
+        "ln2": L.norm_init(cfg.d_model, bias=True),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, bias=True),
+        "attn": L.attn_init(ks[0], cfg),
+        "ln_x": L.norm_init(cfg.d_model, bias=True),
+        "xattn": L.attn_init(ks[1], cfg),
+        "ln2": L.norm_init(cfg.d_model, bias=True),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+class WhisperModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "enc_pos": L.leaf(
+                jax.random.normal(k1, (cfg.n_frames, cfg.d_model)) * 0.02, (None, None)
+            ),
+            "enc_blocks": stack_init(k2, cfg.encoder_layers, lambda k: _enc_block_init(k, cfg)),
+            "enc_norm": L.norm_init(cfg.d_model, bias=True),
+            "embed": L.embed_init(k3, cfg.vocab_size, cfg.d_model, cfg.vocab_pad_multiple),
+            "dec_pos": L.leaf(
+                jax.random.normal(k4, (cfg.max_dec_pos, cfg.d_model)) * 0.02, (None, None)
+            ),
+            "dec_blocks": stack_init(k5, cfg.n_layers, lambda k: _dec_block_init(k, cfg)),
+            "dec_norm": L.norm_init(cfg.d_model, bias=True),
+        }
+
+    # -- encoder ---------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype) + params["enc_pos"].astype(cfg.compute_dtype)[None]
+        x = constrain(x, ("batch", "frames", None))
+        pos = jnp.arange(x.shape[1])
+
+        def body(h, blk):
+            a, _ = L.attn_apply(
+                blk["attn"], L.layernorm(blk["ln1"], h), cfg, qpos=pos, causal=False, use_rope=False
+            )
+            h = h + a
+            h = h + L.mlp_apply(blk["mlp"], L.layernorm(blk["ln2"], h), act="gelu")
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_blocks"])
+        return L.layernorm(params["enc_norm"], x)
+
+    # -- decoder ---------------------------------------------------------
+    def _dec_blocks(self, params, x, enc, pos, caches=None):
+        cfg = self.cfg
+
+        def body(h, xs):
+            blk, cache = xs
+            sc = cache["self"] if cache is not None else None
+            a, nc = L.attn_apply(
+                blk["attn"],
+                L.layernorm(blk["ln1"], h),
+                cfg,
+                qpos=pos,
+                causal=True,
+                use_rope=False,
+                cache=sc,
+                cache_pos=cache["pos"] if cache is not None else None,
+            )
+            h = h + a
+            a, _ = L.attn_apply(
+                blk["xattn"], L.layernorm(blk["ln_x"], h), cfg, kv_src=enc, qpos=pos, causal=False, use_rope=False
+            )
+            h = h + a
+            h = h + L.mlp_apply(blk["mlp"], L.layernorm(blk["ln2"], h), act="gelu")
+            new_cache = {"self": {"k": nc["k"], "v": nc["v"]}, "pos": nc["pos"]} if cache is not None else None
+            return h, new_cache
+
+        body = _remat(body, cfg)
+        if caches is None:
+            x, _ = jax.lax.scan(lambda c, b: body(c, (b, None)), x, params["dec_blocks"])
+            return x, None
+        return jax.lax.scan(body, x, (params["dec_blocks"], caches))
+
+    def forward(self, params, batch):
+        """Training: frames (B, F, D) + text tokens (B, S) -> logits."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        x = x + params["dec_pos"].astype(x.dtype)[:S][None]
+        pos = jnp.arange(S)
+        x, _ = self._dec_blocks(params, x, enc, pos)
+        x = L.layernorm(params["dec_norm"], x)
+        return L.unembed_apply(params["embed"], x)
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kv = lambda: jnp.zeros((cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return {"self": {"k": kv(), "v": kv()}, "pos": jnp.zeros((cfg.n_layers, batch_size), jnp.int32)}
+
+    def prefill(self, params, tokens, frames):
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc = self.encode(params, frames)
+        caches = self.init_cache(B, S)
+        x = L.embed_apply(params["embed"], tokens, cfg.compute_dtype)
+        x = x + params["dec_pos"].astype(x.dtype)[:S][None]
+        pos = jnp.arange(S)
+        x, caches = self._dec_blocks(params, x, enc, pos, caches)
+        x = L.layernorm(params["dec_norm"], x)
+        return L.unembed_apply(params["embed"], x[:, -1:, :]), caches
+
+    def decode(self, params, caches, token, pos, enc):
+        cfg = self.cfg
+        B = token.shape[0]
+        x = L.embed_apply(params["embed"], token, cfg.compute_dtype)
+        qpos = (jnp.zeros((B,), jnp.int32) + pos)[:, None]
+        p_idx = jnp.minimum(qpos[:, 0], params["dec_pos"].shape[0] - 1)
+        x = x + params["dec_pos"].astype(x.dtype)[p_idx][:, None, :]
+        x, caches = self._dec_blocks(params, x, enc, qpos, caches)
+        x = L.layernorm(params["dec_norm"], x)
+        return L.unembed_apply(params["embed"], x), caches

@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; only launch/dryrun.py forces 512 placeholders."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_blobs(rng, centers=((0.0, 0.0), (6.0, 0.0), (0.0, 6.0)), n_per=60, d=2, scale=0.4):
+    """Well-separated Gaussian blobs + ground-truth labels."""
+    pts, labels = [], []
+    for i, c in enumerate(centers):
+        c = np.asarray(c, dtype=np.float64)
+        if c.shape[0] < d:
+            c = np.concatenate([c, np.zeros(d - c.shape[0])])
+        pts.append(rng.normal(loc=c, scale=scale, size=(n_per, d)))
+        labels.append(np.full(n_per, i))
+    X = np.concatenate(pts)
+    y = np.concatenate(labels)
+    perm = rng.permutation(X.shape[0])
+    return X[perm], y[perm]
+
+
+@pytest.fixture
+def blobs(rng):
+    return make_blobs(rng)

@@ -1,0 +1,143 @@
+"""Bubble-tree (paper §4.1, Algorithm 1) structural + behavioral tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bubble_tree import BubbleTree
+from repro.core.cf import cf_of_points
+
+
+def _fill(bt, X):
+    return [bt.insert(p) for p in X]
+
+
+class TestInvariants:
+    def test_invariants_after_inserts(self, rng):
+        bt = BubbleTree(dim=3, compression=0.1)
+        X = rng.normal(size=(300, 3))
+        _fill(bt, X)
+        bt.check_invariants()
+
+    def test_invariants_after_mixed(self, rng):
+        bt = BubbleTree(dim=2, compression=0.08)
+        X = rng.normal(size=(250, 2))
+        ids = _fill(bt, X)
+        drop = rng.choice(ids, size=100, replace=False)
+        for i in drop:
+            bt.delete(int(i))
+        bt.check_invariants()
+        assert bt.n_points == 150
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_invariants_random_workload(self, seed):
+        rng = np.random.default_rng(seed)
+        bt = BubbleTree(dim=2, compression=0.1)
+        ids = []
+        for _ in range(200):
+            if ids and rng.random() < 0.3:
+                j = rng.integers(len(ids))
+                bt.delete(ids.pop(j))
+            else:
+                ids.append(bt.insert(rng.normal(size=2) * rng.choice([1.0, 5.0])))
+        bt.check_invariants()
+
+    def test_root_cf_represents_everything(self, rng):
+        """Property 1: root CF == CF of the whole dataset."""
+        bt = BubbleTree(dim=4, compression=0.1)
+        X = rng.normal(size=(200, 4))
+        _fill(bt, X)
+        LS, SS, n = cf_of_points(X)
+        np.testing.assert_allclose(bt.LS[bt.root], LS, rtol=1e-9, atol=1e-7)
+        assert bt.SS[bt.root] == pytest.approx(SS, rel=1e-9)
+        assert bt.N[bt.root] == n
+
+    def test_exact_deletion_of_cf_stats(self, rng):
+        """CF sums support exact removal: insert+delete == never inserted."""
+        bt = BubbleTree(dim=3, compression=0.1)
+        X = rng.normal(size=(100, 3))
+        _fill(bt, X)
+        extra = rng.normal(size=(30, 3)) + 10.0
+        eids = _fill(bt, extra)
+        for i in eids:
+            bt.delete(i)
+        LS, SS, n = cf_of_points(X)
+        np.testing.assert_allclose(bt.LS[bt.root], LS, rtol=1e-8, atol=1e-6)
+        assert bt.N[bt.root] == n
+
+
+class TestCompressionSteering:
+    @pytest.mark.parametrize("compression", [0.05, 0.1, 0.2])
+    def test_leaf_count_tracks_target(self, rng, compression):
+        """Property 4 / Algorithm 1: num_leaves steered to L = c*N."""
+        bt = BubbleTree(dim=2, compression=compression)
+        X = rng.normal(size=(400, 2))
+        _fill(bt, X)
+        target = max(bt.min_leaves, int(round(compression * 400)))
+        assert abs(bt.num_leaves - target) <= max(2, 0.25 * target)
+
+    def test_leaf_count_shrinks_on_delete(self, rng):
+        bt = BubbleTree(dim=2, compression=0.1)
+        X = rng.normal(size=(300, 2))
+        ids = _fill(bt, X)
+        L_before = bt.num_leaves
+        for i in ids[:200]:
+            bt.delete(int(i))
+        assert bt.num_leaves < L_before
+        target = max(bt.min_leaves, int(round(0.1 * 100)))
+        assert abs(bt.num_leaves - target) <= max(2, 0.3 * target)
+
+    def test_to_bubbles_weights_sum_to_n(self, rng):
+        bt = BubbleTree(dim=3, compression=0.1)
+        X = rng.normal(size=(250, 3))
+        _fill(bt, X)
+        b = bt.to_bubbles()
+        assert b.n.sum() == pytest.approx(250.0)
+        assert b.size == bt.num_leaves
+
+
+class TestBlockOps:
+    def test_insert_block_matches_serial(self, rng):
+        """Throughput path: block insert keeps the same root CF and
+        steers to the same leaf count."""
+        X = rng.normal(size=(300, 2))
+        a = BubbleTree(dim=2, compression=0.1)
+        _fill(a, X)
+        b = BubbleTree(dim=2, compression=0.1)
+        b.insert_block(X)
+        np.testing.assert_allclose(a.LS[a.root], b.LS[b.root], rtol=1e-9)
+        assert a.N[a.root] == b.N[b.root]
+        assert abs(a.num_leaves - b.num_leaves) <= max(3, 0.3 * a.num_leaves)
+        b.check_invariants()
+
+    def test_delete_block(self, rng):
+        bt = BubbleTree(dim=2, compression=0.1)
+        X = rng.normal(size=(200, 2))
+        ids = bt.insert_block(X)
+        bt.delete_block(ids[:80])
+        assert bt.n_points == 120
+        bt.check_invariants()
+
+
+class TestOrderIndependence:
+    def test_summary_quality_insensitive_to_order(self, rng, blobs):
+        """The §5.1 claim: unlike ClusTree, the summary does not depend on
+        insertion order (up to small tolerance) — measured by how well leaf
+        reps cover the true blob structure."""
+        X, y = blobs
+        reps = []
+        for seed in (0, 1):
+            order = np.random.default_rng(seed).permutation(X.shape[0])
+            bt = BubbleTree(dim=2, compression=0.1)
+            _fill(bt, X[order])
+            b = bt.to_bubbles()
+            reps.append(b)
+        # compare total represented mass per true cluster
+        for b in reps:
+            assert b.n.sum() == X.shape[0]
+        # coverage: every blob center has a nearby leaf rep in both runs
+        centers = np.array([[0, 0], [6, 0], [0, 6.0]])
+        for b in reps:
+            d = np.sqrt(((centers[:, None] - b.rep[None]) ** 2).sum(-1)).min(axis=1)
+            assert (d < 1.0).all()

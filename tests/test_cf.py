@@ -1,0 +1,151 @@
+"""Clustering features (paper Def. 4, Eq. 2) and data bubbles (Def. 5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cf import (
+    cf_add_point,
+    cf_extent,
+    cf_merge,
+    cf_nn_dist,
+    cf_of_points,
+    cf_remove_point,
+    cf_rep,
+)
+from repro.core.bubbles import bubble_core_distances, bubble_mutual_reachability, bubbles_from_cf
+
+
+def _finite_points(n_max=40, d_max=6):
+    return st.integers(2, n_max).flatmap(
+        lambda n: st.integers(1, d_max).flatmap(
+            lambda d: st.lists(
+                st.lists(
+                    st.floats(-100, 100, allow_nan=False, width=32), min_size=d, max_size=d
+                ),
+                min_size=n,
+                max_size=n,
+            )
+        )
+    )
+
+
+class TestAdditivity:
+    @given(_finite_points())
+    @settings(max_examples=50, deadline=None)
+    def test_merge_equals_union(self, pts):
+        """Additivity theorem (Eq. 2): CF(A) + CF(B) == CF(A ∪ B)."""
+        X = np.asarray(pts, dtype=np.float64)
+        k = X.shape[0] // 2
+        a = cf_of_points(X[:k])
+        b = cf_of_points(X[k:])
+        merged = cf_merge(*a, *b)
+        whole = cf_of_points(X)
+        np.testing.assert_allclose(merged[0], whole[0], rtol=1e-9, atol=1e-6)
+        assert merged[1] == pytest.approx(whole[1], rel=1e-9, abs=1e-6)
+        assert merged[2] == whole[2]
+
+    @given(_finite_points())
+    @settings(max_examples=50, deadline=None)
+    def test_incremental_add_remove_roundtrip(self, pts):
+        """Exact removal (what enables FULLY dynamic maintenance)."""
+        X = np.asarray(pts, dtype=np.float64)
+        LS, SS, n = cf_of_points(X)
+        LS, SS, n = cf_add_point(LS, SS, n, X[0] + 1.0)
+        LS, SS, n = cf_remove_point(LS, SS, n, X[0] + 1.0)
+        ref = cf_of_points(X)
+        np.testing.assert_allclose(LS, ref[0], atol=1e-6)
+        assert n == ref[2]
+
+    def test_merge_order_independent(self, rng):
+        X = rng.normal(size=(30, 3))
+        parts = np.array_split(np.arange(30), 5)
+        cfs = [cf_of_points(X[p]) for p in parts]
+        f = cfs[0]
+        for c in cfs[1:]:
+            f = cf_merge(*f, *c)
+        r = cfs[-1]
+        for c in reversed(cfs[:-1]):
+            r = cf_merge(*r, *c)
+        np.testing.assert_allclose(f[0], r[0], rtol=1e-12)
+        assert f[1] == pytest.approx(r[1], rel=1e-12)
+
+
+class TestBubbleDerivation:
+    def test_rep_is_mean(self, rng):
+        X = rng.normal(size=(50, 4))
+        LS, SS, n = cf_of_points(X)
+        np.testing.assert_allclose(cf_rep(LS[None], np.array([n]))[0], X.mean(0), atol=1e-9)
+
+    def test_extent_matches_pairwise_rms(self, rng):
+        """Eq. 4: extent² == mean pairwise squared distance within P."""
+        X = rng.normal(size=(40, 3))
+        LS, SS, n = cf_of_points(X)
+        ext = cf_extent(LS[None], np.array([SS]), np.array([n]))[0]
+        diffs = X[:, None, :] - X[None, :, :]
+        sq = np.einsum("ijd,ijd->ij", diffs, diffs)
+        mean_sq = sq.sum() / (40 * 39)
+        assert ext == pytest.approx(np.sqrt(mean_sq), rel=1e-9)
+
+    def test_extent_degenerate(self):
+        assert cf_extent(np.zeros((1, 2)), np.zeros(1), np.ones(1))[0] == 0.0
+        assert cf_extent(np.zeros((1, 2)), np.zeros(1), np.zeros(1))[0] == 0.0
+
+    def test_nn_dist_monotone_in_k(self):
+        """Eq. 5: nnDist grows with k, capped at extent."""
+        ext = np.array([2.0])
+        n = np.array([100.0])
+        ks = [cf_nn_dist(ext, n, k, 3)[0] for k in (1, 5, 25, 100)]
+        assert all(a <= b + 1e-12 for a, b in zip(ks, ks[1:]))
+        assert ks[-1] == pytest.approx(2.0)
+
+    def test_bubbles_from_cf_drops_empty(self, rng):
+        LS = rng.normal(size=(5, 2))
+        SS = np.abs(rng.normal(size=5)) + 10
+        n = np.array([3.0, 0.0, 2.0, 0.0, 5.0])
+        b = bubbles_from_cf(LS, SS, n)
+        assert b.size == 3
+        assert (b.n > 0).all()
+
+
+class TestBubbleDistances:
+    def test_core_distance_self_contained(self, rng):
+        """A bubble already holding >= minPts points: cd = own nnDist."""
+        X = rng.normal(size=(200, 2))
+        LS, SS, n = cf_of_points(X)
+        # two far-apart heavy bubbles
+        b = bubbles_from_cf(
+            np.stack([LS, LS + 1e4]), np.array([SS, SS + 2e8]), np.array([n, n])
+        )
+        cd = bubble_core_distances(b, min_pts=10)
+        expected = b.nn_dist(10.0)
+        np.testing.assert_allclose(cd, expected + 0.0, atol=1e-6)
+
+    def test_core_distance_reaches_neighbor(self):
+        """Light bubble must reach into neighbor C: cd = d(B,C) + C.nnDist(k)."""
+        rep = np.array([[0.0, 0.0], [3.0, 0.0]])
+        n = np.array([2.0, 50.0])
+        ext = np.array([0.5, 1.0])
+        from repro.core.bubbles import DataBubbles
+
+        b = DataBubbles(rep=rep, n=n, extent=ext, dim=2)
+        cd = bubble_core_distances(b, min_pts=10)
+        # bubble 0: own 2 points, needs 8 more from bubble 1 at distance 3
+        k_resid = 8.0
+        expect0 = 3.0 + (k_resid / 50.0) ** 0.5 * 1.0
+        assert cd[0] == pytest.approx(expect0, rel=1e-9)
+
+    def test_mutual_reachability_symmetric_zero_diag(self, rng):
+        X = rng.normal(size=(30, 3))
+        splits = np.array_split(np.arange(30), 6)
+        LS = np.stack([cf_of_points(X[s])[0] for s in splits])
+        SS = np.array([cf_of_points(X[s])[1] for s in splits])
+        n = np.array([cf_of_points(X[s])[2] for s in splits])
+        b = bubbles_from_cf(LS, SS, n)
+        W, cd = bubble_mutual_reachability(b, min_pts=5)
+        np.testing.assert_allclose(W, W.T, atol=1e-12)
+        np.testing.assert_allclose(np.diag(W), 0.0)
+        # off-diagonal entries >= max of the two core distances
+        off = ~np.eye(b.size, dtype=bool)
+        pairmax = np.maximum(cd[:, None], cd[None, :])
+        assert (W[off] >= pairmax[off] - 1e-9).all()

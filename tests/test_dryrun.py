@@ -1,0 +1,55 @@
+"""Dry-run machinery on a CI-scale mesh (8 placeholder devices).
+
+The production 512-device sweep runs via
+``python -m repro.launch.dryrun --mesh both`` (artifact:
+dryrun_results.json); here we exercise the same lower/compile/analyze
+path end-to-end in a subprocess so the test suite never pollutes the
+main process's jax device count."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_dryrun(tmp_path, arch, shape):
+    out = str(tmp_path / "dr.json")
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--mesh", "small",
+         "--arch", arch, "--shape", shape, "--out", out],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    with open(out) as f:
+        return list(json.load(f).values())[0]
+
+
+@pytest.mark.slow
+class TestDryrunSmall:
+    def test_train_cell_compiles_and_analyzes(self, tmp_path):
+        rec = _run_dryrun(tmp_path, "qwen1.5-0.5b", "train_4k")
+        assert rec["ok"], rec.get("error")
+        assert rec["devices"] == 8
+        assert rec["graph_flops_per_device"] > 0
+        assert rec["link_bytes_per_device"] > 0
+        assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+        # trip-count scaling: a 24-layer scan must beat raw cost_analysis
+        assert rec["graph_flops_per_device"] > 2 * rec["hlo_flops"]
+        # model-flops accounting is sane: useful fraction in (0, 1.2]
+        assert 0.0 < rec["useful_flops_ratio"] <= 1.2
+
+    def test_decode_cell_compiles(self, tmp_path):
+        rec = _run_dryrun(tmp_path, "qwen2-1.5b", "decode_32k")
+        assert rec["ok"], rec.get("error")
+        assert rec["kind"] == "decode"
+        # decode flops per device should be tiny vs train
+        assert rec["graph_flops_per_device"] < 1e13
+
+    def test_moe_cell_compiles(self, tmp_path):
+        rec = _run_dryrun(tmp_path, "qwen2-moe-a2.7b", "prefill_32k")
+        assert rec["ok"], rec.get("error")
+        assert rec["collectives"], "MoE prefill must show collectives"

@@ -1,0 +1,147 @@
+"""Exact dynamic HDBSCAN (paper §3) — THE central correctness claim:
+
+after ANY sequence of point insertions and deletions, the dynamically
+maintained MST of the mutual-reachability graph has the same total weight
+as a static recomputation over the surviving points (MSTs may differ on
+ties; weight and the derived dendrogram are invariant)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dynamic import DynamicHDBSCAN
+from repro.core.hdbscan import core_distances, hdbscan, mutual_reachability, single_linkage
+from repro.core.metrics import nmi
+
+
+def _static_weight(X, min_pts):
+    if X.shape[0] < 2:
+        return 0.0
+    return hdbscan(X, min_pts=min_pts).total_mst_weight
+
+
+class TestInsertion:
+    def test_incremental_matches_static(self, rng):
+        X = rng.normal(size=(60, 3))
+        dyn = DynamicHDBSCAN(min_pts=5, dim=3)
+        for i, p in enumerate(X):
+            dyn.insert(p)
+            if i >= 5 and i % 10 == 0:
+                assert dyn.total_weight() == pytest.approx(
+                    _static_weight(X[: i + 1], 5), rel=1e-9
+                ), f"diverged after {i + 1} inserts"
+
+    def test_core_distances_maintained(self, rng):
+        X = rng.normal(size=(40, 2))
+        dyn = DynamicHDBSCAN(min_pts=4, dim=2)
+        for p in X:
+            dyn.insert(p)
+        cd_static = core_distances(X, 4)
+        ids = np.nonzero(dyn.alive)[0]
+        np.testing.assert_allclose(dyn.cd[ids], cd_static, atol=1e-9)
+
+    def test_rknn_sizes_bounded(self, rng):
+        """RkNN sizes stay O(minPts²)-ish (paper's practicality argument)."""
+        X = rng.normal(size=(200, 5))
+        dyn = DynamicHDBSCAN(min_pts=5, dim=5)
+        for p in X:
+            dyn.insert(p)
+        sizes = np.array(dyn.stats["rknn_sizes"][50:])
+        assert sizes.mean() < 5 * 5 * 3
+
+
+class TestDeletion:
+    def test_delete_matches_static(self, rng):
+        X = rng.normal(size=(50, 3))
+        dyn = DynamicHDBSCAN(min_pts=5, dim=3)
+        for p in X:
+            dyn.insert(p)
+        alive = list(np.nonzero(dyn.alive)[0])
+        drop = rng.choice(alive, size=15, replace=False)
+        for i in drop:
+            dyn.delete(int(i))
+            surv = dyn.X[dyn.alive]
+            assert dyn.total_weight() == pytest.approx(_static_weight(surv, 5), rel=1e-9)
+
+    def test_delete_to_empty(self, rng):
+        X = rng.normal(size=(6, 2))
+        dyn = DynamicHDBSCAN(min_pts=2, dim=2)
+        ids = [dyn.insert(p) for p in X]
+        for i in ids:
+            dyn.delete(i)
+        assert dyn.n == 0 and dyn.total_weight() == 0.0
+
+    def test_delete_hub(self):
+        """Deleting the center of a star (everyone's neighbor) still exact."""
+        rng = np.random.default_rng(3)
+        ring = rng.normal(size=(30, 2)) * 5.0
+        hub = np.zeros((1, 2))
+        X = np.concatenate([hub, ring])
+        dyn = DynamicHDBSCAN(min_pts=3, dim=2)
+        ids = [dyn.insert(p) for p in X]
+        dyn.delete(ids[0])
+        assert dyn.total_weight() == pytest.approx(_static_weight(ring, 3), rel=1e-9)
+
+    def test_delete_unknown_raises(self, rng):
+        dyn = DynamicHDBSCAN(min_pts=2, dim=2)
+        dyn.insert(rng.normal(size=2))
+        with pytest.raises(KeyError):
+            dyn.delete(55)
+
+
+class TestMixedWorkload:
+    @given(st.integers(0, 100_000), st.integers(2, 6))
+    @settings(max_examples=15, deadline=None)
+    def test_exactness_property(self, seed, min_pts):
+        """Hypothesis: random interleaved inserts/deletes == static weight."""
+        rng = np.random.default_rng(seed)
+        dyn = DynamicHDBSCAN(min_pts=min_pts, dim=2)
+        for _ in range(rng.integers(20, 60)):
+            alive = np.nonzero(dyn.alive)[0]
+            if alive.size > min_pts + 2 and rng.random() < 0.35:
+                dyn.delete(int(rng.choice(alive)))
+            else:
+                dyn.insert(rng.normal(size=2) * rng.choice([0.5, 3.0]))
+        surv = dyn.X[dyn.alive]
+        assert dyn.total_weight() == pytest.approx(_static_weight(surv, min_pts), rel=1e-9)
+
+    def test_dendrogram_invariant(self, rng, blobs):
+        """Beyond weight: the single-linkage merge distances agree."""
+        X, y = blobs
+        dyn = DynamicHDBSCAN(min_pts=5, dim=2)
+        for p in X[:120]:
+            dyn.insert(p)
+        ids = np.nonzero(dyn.alive)[0]
+        for i in ids[:20]:
+            dyn.delete(int(i))
+        surv = dyn.X[dyn.alive]
+        n = surv.shape[0]
+        u, v, w = dyn.mst_edges()
+        # remap to compact ids
+        remap = {int(o): i for i, o in enumerate(np.nonzero(dyn.alive)[0])}
+        u = np.array([remap[int(x)] for x in u])
+        v = np.array([remap[int(x)] for x in v])
+        slt_dyn = single_linkage(u, v, w, n)
+        res = hdbscan(surv, min_pts=5)
+        slt_static = res.slt
+        np.testing.assert_allclose(
+            np.sort(slt_dyn.merges[:, 2]), np.sort(slt_static.merges[:, 2]), atol=1e-9
+        )
+
+    def test_flat_clusters_match_static(self, blobs):
+        X, y = blobs
+        dyn = DynamicHDBSCAN(min_pts=5, dim=2)
+        for p in X:
+            dyn.insert(p)
+        surv = dyn.X[dyn.alive]
+        u, v, w = dyn.mst_edges()
+        remap = {int(o): i for i, o in enumerate(np.nonzero(dyn.alive)[0])}
+        u = np.array([remap[int(x)] for x in u])
+        v = np.array([remap[int(x)] for x in v])
+        from repro.core.hdbscan import condense_tree, extract_clusters, hdbscan_labels
+
+        slt = single_linkage(u, v, w, surv.shape[0])
+        ct = condense_tree(slt, min_cluster_size=5)
+        labels = hdbscan_labels(ct, extract_clusters(ct))
+        ref = hdbscan(surv, min_pts=5).labels
+        assert nmi(labels, ref) > 0.99

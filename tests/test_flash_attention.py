@@ -1,0 +1,89 @@
+"""Pallas flash-attention kernel vs oracles (interpret=True on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa
+from repro.models import layers as L
+
+
+def _heads(rng, H, Sq, Sk, D, dtype=np.float32):
+    q = rng.normal(size=(H, Sq, D)).astype(dtype)
+    k = rng.normal(size=(H, Sk, D)).astype(dtype)
+    v = rng.normal(size=(H, Sk, D)).astype(dtype)
+    qp = np.broadcast_to(np.arange(Sq, dtype=np.int32), (H, Sq))
+    kp = np.broadcast_to(np.arange(Sk, dtype=np.int32), (H, Sk))
+    return map(jnp.asarray, (q, k, v, qp, kp))
+
+
+class TestKernel:
+    @pytest.mark.parametrize("Sq,Sk,bq,bk", [(64, 64, 32, 16), (128, 256, 64, 64), (32, 32, 32, 32)])
+    @pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 9)])
+    def test_matches_ref(self, rng, Sq, Sk, bq, bk, causal, window):
+        q, k, v, qp, kp = _heads(rng, 3, Sq, Sk, 16)
+        got = fa.flash_attention(q, k, v, qp, kp, causal=causal, window=window,
+                                 bq=bq, bk=bk, interpret=True)
+        want = ref.flash_attention(q, k, v, qp, kp, causal=causal, window=window)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-4)
+
+    def test_dead_keys_masked(self, rng):
+        """kpos == -1 rows contribute nothing (ragged-tail semantics)."""
+        q, k, v, qp, kp = _heads(rng, 2, 32, 64, 8)
+        kp = kp.at[:, 40:].set(-1)
+        got = fa.flash_attention(q, k, v, qp, kp, causal=False, bq=16, bk=16, interpret=True)
+        want = ref.flash_attention(q, k[:, :40], v[:, :40], qp, kp[:, :40], causal=False)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-4)
+
+    @given(st.integers(0, 1000), st.integers(1, 4))
+    @settings(max_examples=8, deadline=None)
+    def test_property_rowsum_preserved(self, seed, H):
+        """Attention output is a convex combination of V rows: max |out|
+        bounded by max |v| (softmax weights sum to 1)."""
+        rng = np.random.default_rng(seed)
+        q, k, v, qp, kp = _heads(rng, H, 32, 32, 8)
+        got = np.asarray(fa.flash_attention(q, k, v, qp, kp, causal=True, bq=16, bk=16, interpret=True))
+        assert np.abs(got).max() <= np.abs(np.asarray(v)).max() + 1e-4
+
+
+class TestOpsWrapper:
+    @pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (6, 1)])
+    def test_gqa_matches_model_attention(self, rng, H, KV):
+        """ops.flash_attention (GQA, model layout) == models' jnp core."""
+        B, S, Dh = 2, 48, 16
+        q = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, KV, Dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, KV, Dh)), jnp.float32)
+        pos = jnp.arange(S)
+        got = ops.flash_attention(q, k, v, pos, pos, causal=True, bq=16, bk=16)
+        want = L.attention_core(q, k, v, qpos=pos, kpos=pos, causal=True,
+                                flash_threshold=1 << 40)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=3e-4)
+
+    def test_ragged_and_window(self, rng):
+        B, S, H, KV, Dh = 1, 50, 4, 2, 8  # 50 pads to 64
+        q = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, KV, Dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, KV, Dh)), jnp.float32)
+        pos = jnp.arange(S)
+        got = ops.flash_attention(q, k, v, pos, pos, causal=True, window=11, bq=16, bk=16)
+        want = L.attention_core(q, k, v, qpos=pos, kpos=pos, causal=True, window=11,
+                                flash_threshold=1 << 40)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=3e-4)
+
+    def test_bf16(self, rng):
+        B, S, H, KV, Dh = 1, 32, 2, 2, 8
+        q = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(B, S, KV, Dh)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(B, S, KV, Dh)), jnp.bfloat16)
+        pos = jnp.arange(S)
+        got = ops.flash_attention(q, k, v, pos, pos, causal=True, bq=16, bk=16)
+        want = L.attention_core(q, k, v, qpos=pos, kpos=pos, causal=True,
+                                flash_threshold=1 << 40)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+        )

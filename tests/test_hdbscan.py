@@ -1,0 +1,129 @@
+"""Static HDBSCAN pipeline (paper §2.1) against brute-force oracles."""
+
+import numpy as np
+import pytest
+from scipy.sparse.csgraph import minimum_spanning_tree as scipy_mst
+
+from repro.core.hdbscan import (
+    condense_tree,
+    core_distances,
+    extract_clusters,
+    hdbscan,
+    hdbscan_labels,
+    mst_of_points,
+    mutual_reachability,
+    single_linkage,
+)
+from repro.core.metrics import nmi
+
+
+class TestCoreDistances:
+    def test_brute_force(self, rng):
+        X = rng.normal(size=(50, 4))
+        k = 7
+        cd = core_distances(X, k)
+        d = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+        expect = np.sort(d, axis=1)[:, k - 1]  # self-inclusive convention
+        np.testing.assert_allclose(cd, expect, atol=1e-9)
+
+    def test_min_pts_one_is_zero(self, rng):
+        X = rng.normal(size=(10, 2))
+        np.testing.assert_allclose(core_distances(X, 1), 0.0, atol=1e-6)
+
+    def test_min_pts_larger_than_n(self, rng):
+        X = rng.normal(size=(5, 2))
+        cd = core_distances(X, 100)
+        d = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+        np.testing.assert_allclose(cd, d.max(axis=1), atol=1e-9)
+
+
+class TestMutualReachability:
+    def test_definition(self, rng):
+        X = rng.normal(size=(30, 3))
+        cd = core_distances(X, 5)
+        W = mutual_reachability(X, cd)
+        d = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+        expect = np.maximum(d, np.maximum(cd[:, None], cd[None, :]))
+        np.fill_diagonal(expect, 0.0)
+        np.testing.assert_allclose(W, expect, atol=1e-9)
+        assert (W >= 0).all() and np.allclose(W, W.T)
+
+
+class TestMST:
+    def test_weight_matches_scipy(self, rng):
+        X = rng.normal(size=(80, 5))
+        (u, v, w), cd = mst_of_points(X, 5)
+        W = mutual_reachability(X, cd)
+        assert np.isclose(w.sum(), scipy_mst(W).sum(), rtol=1e-9)
+        assert len(w) == 79
+
+
+class TestDendrogram:
+    def test_merge_count_and_monotonicity(self, rng):
+        X = rng.normal(size=(40, 3))
+        (u, v, w), _ = mst_of_points(X, 4)
+        slt = single_linkage(u, v, w, 40)
+        assert slt.merges.shape == (39, 4)
+        # distances ascending along merge order
+        d = slt.merges[:, 2]
+        assert (np.diff(d) >= -1e-12).all()
+        # final merge weight = n
+        assert slt.merges[-1, 3] == 40
+
+    def test_condensed_mass_conservation(self, rng):
+        """Every leaf's weight is emitted exactly once (DESIGN §6)."""
+        X = rng.normal(size=(60, 2))
+        (u, v, w), _ = mst_of_points(X, 5)
+        slt = single_linkage(u, v, w, 60)
+        ct = condense_tree(slt, min_cluster_size=5)
+        point_rows = ct.child < 60
+        assert ct.child_weight[point_rows].sum() == pytest.approx(60.0)
+        assert sorted(ct.child[point_rows].tolist()) == list(range(60))
+
+    def test_weighted_condense(self, rng):
+        """Bubble weights count toward min_cluster_size."""
+        X = np.array([[0.0, 0], [0.1, 0], [5, 0], [5.1, 0]])
+        w = np.array([50.0, 50.0, 50.0, 50.0])
+        res = hdbscan(X, min_pts=2, min_cluster_size=60, weights=w)
+        # two pairs, each 100 points -> two clusters despite 2 leaves each
+        assert len(set(res.labels) - {-1}) == 2
+
+
+class TestEndToEnd:
+    def test_blobs_recovered(self, blobs):
+        X, y = blobs
+        res = hdbscan(X, min_pts=5)
+        mask = res.labels >= 0
+        assert mask.mean() > 0.9  # little noise on clean blobs
+        assert nmi(res.labels[mask], y[mask]) > 0.95
+        assert len(set(res.labels) - {-1}) == 3
+
+    def test_noise_detected(self, rng, blobs):
+        X, y = blobs
+        noise = rng.uniform(-10, 16, size=(20, 2))
+        res = hdbscan(np.concatenate([X, noise]), min_pts=5)
+        assert (res.labels[-20:] == -1).mean() > 0.5
+
+    def test_single_cluster_guard(self, rng):
+        X = rng.normal(size=(50, 2))  # one blob
+        res = hdbscan(X, min_pts=5, allow_single_cluster=True)
+        labs = set(res.labels) - {-1}
+        assert len(labs) >= 1
+
+    def test_precomputed_matches_geometry(self, blobs):
+        X, y = blobs
+        cd = core_distances(X, 5)
+        W = mutual_reachability(X, cd)
+        r1 = hdbscan(X, min_pts=5)
+        r2 = hdbscan(X, min_pts=5, precomputed=W)
+        assert np.isclose(r1.total_mst_weight, r2.total_mst_weight)
+        assert nmi(r1.labels, r2.labels) > 0.99
+
+    def test_leaf_extraction_mode(self, blobs):
+        X, y = blobs
+        res = hdbscan(X, min_pts=5, method="leaf")
+        assert len(set(res.labels) - {-1}) >= 3
+
+    def test_tiny_inputs(self):
+        res = hdbscan(np.zeros((2, 2)), min_pts=2)
+        assert res.labels.shape == (2,)

@@ -1,0 +1,202 @@
+"""Architecture zoo: per-arch reduced-config smoke tests (deliverable f).
+
+Every assigned arch instantiates a REDUCED config of the same family and
+runs one forward/train step on CPU asserting shapes + no NaNs; decode is
+checked against prefill for consistency where the family supports it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import model as M
+from repro.train.optim import AdamWConfig, adamw_init
+
+ARCHS = C.ARCH_IDS
+
+
+def _batch(cfg, B=2, S=16):
+    b = {
+        "tokens": jnp.ones((B, S), jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        b["media"] = jnp.zeros((B, cfg.n_media_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        b["frames"] = jnp.zeros((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Init each smoke arch once per session (init dominates test time)."""
+    cache = {}
+
+    def get(aid):
+        if aid not in cache:
+            cfg = C.get_smoke(aid)
+            values, axes = M.init_params(cfg, jax.random.PRNGKey(0))
+            cache[aid] = (cfg, values, axes)
+        return cache[aid]
+
+    return get
+
+
+@pytest.mark.parametrize("aid", ARCHS)
+class TestPerArch:
+    def test_forward_shapes_finite(self, aid, built):
+        cfg, values, _ = built(aid)
+        model = M.build_model(cfg)
+        batch = _batch(cfg)
+        logits = jax.jit(model.forward)(values, batch)
+        from repro.models.layers import padded_vocab
+
+        vp = padded_vocab(cfg.vocab_size, cfg.vocab_pad_multiple)
+        assert logits.shape == (2, 16, vp)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def test_train_step_improves_loss(self, aid, built):
+        cfg, values, _ = built(aid)
+        step = M.make_train_step(cfg, AdamWConfig(lr=5e-3, warmup_steps=0))
+        opt = adamw_init(values)
+        batch = _batch(cfg)
+        jstep = jax.jit(step)
+        p, o, m0 = jstep(values, opt, batch)
+        losses = [float(m0["loss"])]
+        for _ in range(4):
+            p, o, m = jstep(p, o, batch)
+            losses.append(float(m["loss"]))
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0], losses  # memorizes a constant batch
+
+    def test_grad_accumulation_matches_single(self, aid, built):
+        """microbatches=2 gives (nearly) the same update as microbatches=1."""
+        cfg, values, _ = built(aid)
+        batch = _batch(cfg, B=4)
+        s1 = jax.jit(M.make_train_step(cfg, AdamWConfig(), microbatches=1))
+        s2 = jax.jit(M.make_train_step(cfg, AdamWConfig(), microbatches=2))
+        p1, _, m1 = s1(values, adamw_init(values), batch)
+        p2, _, m2 = s2(values, adamw_init(values), batch)
+        # MoE capacity dropping is batch-composition dependent: splitting
+        # the batch can change which tokens drop, so allow a wider loss
+        # tolerance there (params still must agree).
+        tol = 1e-2 if cfg.n_experts else 1e-3
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=tol)
+        diffs = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            p1,
+            p2,
+        )
+        assert max(jax.tree.leaves(diffs)) < 5e-3
+
+    def test_decode_matches_prefill(self, aid, built):
+        """prefill(t[:n]) then decode(t[n]) == prefill(t[:n+1]) last logits."""
+        cfg, values, _ = built(aid)
+        model = M.build_model(cfg)
+        B, S = 2, 8
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+        extra = {}
+        if cfg.family == "vlm":
+            extra["media"] = jnp.zeros((B, cfg.n_media_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            frames = jnp.zeros((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+            # decode consumes the ENCODED frames (cross-KV source computed
+            # once at prefill and carried read-only)
+            extra["enc"] = model.encode(values, frames)
+
+        def prefill(tokens):
+            if cfg.family == "vlm":
+                return model.prefill(values, tokens, extra["media"])
+            if cfg.family == "audio":
+                return model.prefill(values, tokens, frames)
+            return model.prefill(values, tokens)
+
+        logits_n, caches = jax.jit(prefill)(toks[:, :S])
+        # full prefill over S+1 tokens as the oracle
+        logits_full, _ = jax.jit(prefill)(toks)
+
+        def decode(caches, tok):
+            if cfg.family == "vlm":
+                return model.decode(values, caches, tok, jnp.asarray(S), extra["media"])
+            if cfg.family == "audio":
+                return model.decode(values, caches, tok, jnp.asarray(S), extra["enc"])
+            return model.decode(values, caches, tok, jnp.asarray(S))
+
+        logits_step, _ = jax.jit(decode)(caches, toks[:, S:])
+        a = np.asarray(logits_step[:, -1].astype(jnp.float32))
+        b = np.asarray(logits_full[:, -1].astype(jnp.float32))
+        # bf16 compute: compare top-1 and correlation rather than exact values
+        assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.5 or np.allclose(a, b, atol=0.35), (
+            np.abs(a - b).max()
+        )
+
+    def test_full_config_matches_assignment(self, aid):
+        """The FULL config carries the exact assigned hyper-parameters."""
+        cfg = C.get(aid)
+        spec = {
+            "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+            "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+            "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+            "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+            "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+            "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+            "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+            "rwkv6-1.6b": (24, 2048, None, None, 7168, 65536),
+            "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+            "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        }[aid]
+        L_, d, H, KV, ff, V = spec
+        assert cfg.n_layers == L_ and cfg.d_model == d and cfg.d_ff == ff and cfg.vocab_size == V
+        if H is not None:
+            assert cfg.n_heads == H and cfg.n_kv_heads == KV
+
+
+class TestFamilySpecifics:
+    def test_moe_router_topk(self):
+        cfg = C.get("dbrx-132b")
+        assert cfg.n_experts == 16 and cfg.n_experts_per_tok == 4
+        cfg = C.get("qwen2-moe-a2.7b")
+        assert cfg.n_experts == 60 and cfg.n_experts_per_tok == 4 and cfg.n_shared_experts == 4
+
+    def test_sliding_window_danube(self):
+        assert C.get("h2o-danube-3-4b").sliding_window is not None
+
+    def test_qk_norm_qwen3(self):
+        assert C.get("qwen3-14b").qk_norm
+        assert C.get("qwen1.5-0.5b").qkv_bias
+
+    def test_zamba2_shared_attention_param_savings(self, built):
+        """Weight sharing: hybrid has ONE attention block's params."""
+        cfg, values, _ = built("zamba2-7b")
+        assert "shared_attn" in values
+        # shared_attn leaves have no leading group axis
+        wq = values["shared_attn"]["attn"]["wq"]["w"]
+        assert wq.ndim == 2
+
+    def test_rwkv_no_kv_cache_growth(self, built):
+        cfg, values, _ = built("rwkv6-1.6b")
+        model = M.build_model(cfg)
+        c8 = jax.eval_shape(lambda: model.init_cache(2, 8))
+        c9000 = jax.eval_shape(lambda: model.init_cache(2, 9000))
+        s8 = sum(np.prod(l.shape) for l in jax.tree.leaves(c8))
+        s9000 = sum(np.prod(l.shape) for l in jax.tree.leaves(c9000))
+        assert s8 == s9000  # O(1) state in sequence length
+
+    def test_model_flops_moe_uses_active(self):
+        dense_f = M.model_flops_per_token(C.get("qwen3-14b"))
+        moe = C.get("dbrx-132b")
+        moe_f = M.model_flops_per_token(moe)
+        total_params = None  # 132B total, ~36B active
+        assert moe_f < 6 * 90e9  # far below 6*N_total
+        assert moe_f > 6 * 20e9
+
+    def test_input_specs_cover_all_cells(self):
+        for aid, shape, status in C.cells(include_skipped=True):
+            if status.startswith("SKIP"):
+                continue
+            cfg = C.get(aid)
+            spec = M.input_specs(cfg, C.SHAPES[shape])
+            assert all(
+                isinstance(l, jax.ShapeDtypeStruct) for l in jax.tree.leaves(spec)
+            ), (aid, shape)

@@ -1,0 +1,110 @@
+"""MST substrate: vectorized Borůvka / Kruskal vs networkx + scipy oracles."""
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.sparse.csgraph import minimum_spanning_tree as scipy_mst
+
+from repro.core.mst import UnionFind, boruvka_dense, boruvka_jax, kruskal_edges
+
+
+def _oracle_weight(W):
+    return scipy_mst(np.where(np.isfinite(W), W, 0.0)).sum()
+
+
+def _random_metric_matrix(rng, n):
+    X = rng.normal(size=(n, 3))
+    d = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    np.fill_diagonal(d, np.inf)
+    return d
+
+
+class TestUnionFind:
+    def test_basic(self):
+        uf = UnionFind(5)
+        assert uf.union(0, 1)
+        assert not uf.union(1, 0)
+        assert uf.union(2, 3)
+        assert uf.n_components == 3
+        uf.union(0, 2)
+        labels = uf.labels()
+        assert labels[0] == labels[3]
+        assert labels[0] != labels[4]
+
+
+class TestBoruvkaDense:
+    @pytest.mark.parametrize("n", [2, 3, 17, 64, 150])
+    def test_weight_matches_scipy(self, rng, n):
+        W = _random_metric_matrix(rng, n)
+        u, v, w = boruvka_dense(W)
+        assert len(w) == n - 1
+        assert np.isclose(w.sum(), _oracle_weight(W))
+
+    def test_respects_initial_forest(self, rng):
+        """Contraction-rule entry point: pre-seeded forest edges survive."""
+        W = _random_metric_matrix(rng, 30)
+        u0, v0, w0 = boruvka_dense(W)
+        # remove 5 edges, reconnect starting from the partial forest
+        keep = np.argsort(w0)[:-5]
+        u, v, w = boruvka_dense(W, forest=(u0[keep], v0[keep], w0[keep]))
+        assert np.isclose(w.sum(), w0.sum())
+
+    def test_tied_weights_still_tree(self):
+        W = np.ones((6, 6))
+        np.fill_diagonal(W, np.inf)
+        u, v, w = boruvka_dense(W)
+        assert len(w) == 5
+        uf = UnionFind(6)
+        for a, b in zip(u, v):
+            assert uf.union(int(a), int(b)), "cycle in claimed MST"
+
+
+class TestKruskal:
+    @given(st.integers(5, 40), st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_networkx_on_random_graphs(self, n, seed):
+        rng = np.random.default_rng(seed)
+        W = _random_metric_matrix(rng, n)
+        iu, iv = np.triu_indices(n, k=1)
+        w = W[iu, iv]
+        mu, mv, mw = kruskal_edges(iu, iv, w, n)
+        g = nx.Graph()
+        g.add_weighted_edges_from(zip(iu.tolist(), iv.tolist(), w.tolist()))
+        t = nx.minimum_spanning_tree(g)
+        assert np.isclose(mw.sum(), t.size(weight="weight"))
+
+    def test_sparse_edge_list_forest(self):
+        """Disconnected input -> spanning forest, not crash."""
+        u = np.array([0, 1, 3])
+        v = np.array([1, 2, 4])
+        w = np.array([1.0, 2.0, 3.0])
+        mu, mv, mw = kruskal_edges(u, v, w, 5)
+        assert len(mw) == 3  # two components
+
+
+class TestBoruvkaJax:
+    @pytest.mark.parametrize("n", [8, 33, 100])
+    def test_matches_scipy(self, rng, n):
+        W = _random_metric_matrix(rng, n)
+        eu, ev, ew, valid = boruvka_jax(W)
+        assert int(np.sum(valid)) == n - 1
+        assert np.isclose(float(np.sum(np.where(valid, ew, 0.0))), _oracle_weight(W), rtol=1e-5)
+
+    def test_tied_weights_valid_tree(self):
+        W = np.ones((16, 16))
+        np.fill_diagonal(W, np.inf)
+        eu, ev, ew, valid = boruvka_jax(W)
+        eu, ev = np.asarray(eu)[np.asarray(valid)], np.asarray(ev)[np.asarray(valid)]
+        assert len(eu) == 15
+        uf = UnionFind(16)
+        for a, b in zip(eu, ev):
+            assert uf.union(int(a), int(b)), "cycle in claimed MST"
+
+    @given(st.integers(4, 60), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_random_property(self, n, seed):
+        rng = np.random.default_rng(seed)
+        W = _random_metric_matrix(rng, n)
+        eu, ev, ew, valid = boruvka_jax(W)
+        assert np.isclose(float(np.sum(np.where(valid, ew, 0.0))), _oracle_weight(W), rtol=1e-5)

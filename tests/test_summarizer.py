@@ -1,0 +1,145 @@
+"""Online–offline pipeline (paper §4.2) + baselines + metrics."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BubbleTreeSummarizer,
+    ClusTreeLite,
+    IncrementalBubbles,
+    ari,
+    assign_points,
+    cluster_bubbles,
+    hdbscan,
+    nmi,
+)
+from conftest import make_blobs
+
+
+class TestMetrics:
+    def test_nmi_perfect(self):
+        a = np.array([0, 0, 1, 1, 2, 2])
+        assert nmi(a, a) == pytest.approx(1.0)
+        assert nmi(a, np.array([0, 1, 1, 2, 2, 0])) < 1.0  # different partition
+
+    def test_nmi_permutation_invariant(self):
+        a = np.array([0, 0, 1, 1, 2, 2])
+        b = np.array([5, 5, 3, 3, 9, 9])
+        assert nmi(a, b) == pytest.approx(1.0)
+
+    def test_nmi_independent(self, rng):
+        a = rng.integers(0, 2, size=5000)
+        b = rng.integers(0, 2, size=5000)
+        assert nmi(a, b) < 0.05
+
+    def test_ari_bounds(self):
+        a = np.array([0, 0, 1, 1])
+        assert ari(a, a) == pytest.approx(1.0)
+        assert ari(a, np.array([0, 1, 0, 1])) <= 0.0 + 1e-9
+
+
+class TestOfflinePipeline:
+    def test_summarized_clustering_matches_static(self, rng):
+        X, y = make_blobs(rng, n_per=150, scale=0.35)
+        s = BubbleTreeSummarizer(dim=2, min_pts=10, compression=0.1)
+        s.insert_block(X)
+        out = s.cluster()
+        static = hdbscan(X, min_pts=10)
+        # point labels from the summarized pipeline vs static on raw data
+        mask = (out.point_labels >= 0) & (static.labels[out.point_ids] >= 0)
+        assert mask.mean() > 0.6
+        score = nmi(out.point_labels[mask], static.labels[out.point_ids][mask])
+        assert score > 0.85, f"NMI {score}"
+
+    def test_fully_dynamic_summarize_then_cluster(self, rng):
+        X, y = make_blobs(rng, n_per=120)
+        s = BubbleTreeSummarizer(dim=2, min_pts=10, compression=0.12)
+        ids = s.insert_block(X)
+        # delete one entire blob -> cluster count drops
+        blob0 = [i for i, lab in zip(ids, y) if lab == 0]
+        s.delete_block(blob0)
+        out = s.cluster()
+        found = len(set(out.bubble_labels) - {-1})
+        assert found == 2, f"expected 2 clusters after deleting one blob, got {found}"
+
+    def test_use_jax_path_matches_numpy(self, rng):
+        X, y = make_blobs(rng, n_per=80)
+        a = BubbleTreeSummarizer(dim=2, min_pts=8, compression=0.15, use_jax=False)
+        a.insert_block(X)
+        out_np = a.cluster()
+        b = BubbleTreeSummarizer(dim=2, min_pts=8, compression=0.15, use_jax=True)
+        b.insert_block(X)
+        out_jx = b.cluster()
+        assert nmi(out_np.point_labels, out_jx.point_labels) > 0.95
+
+    def test_weighted_flat_extraction(self, rng):
+        """Cluster weights = summed bubble weights (paper §2.2 last ¶)."""
+        X, y = make_blobs(rng, n_per=100)
+        s = BubbleTreeSummarizer(dim=2, min_pts=10, compression=0.1)
+        s.insert_block(X)
+        out = s.cluster()
+        total = 0.0
+        for lab in set(out.bubble_labels) - {-1}:
+            total += out.bubbles.n[out.bubble_labels == lab].sum()
+        assert total <= 300.0 + 1e-9
+        assert total > 0.7 * 300
+
+
+class TestBaselines:
+    def test_clustree_insert_and_bubbles(self, rng):
+        X, y = make_blobs(rng, n_per=60)
+        ct = ClusTreeLite(dim=2, max_height=5)
+        for p in X:
+            ct.insert(p)
+        b = ct.to_bubbles()
+        assert b.size >= 2
+        assert b.n.sum() == pytest.approx(180.0)
+
+    def test_clustree_decay_forgets(self, rng):
+        ct = ClusTreeLite(dim=2, max_height=4, decay_lambda=0.05)
+        for p in rng.normal(size=(200, 2)):
+            ct.insert(p)
+        b = ct.to_bubbles()
+        assert b.n.sum() < 200.0  # decay dropped weight
+
+    def test_incremental_bubbles_maintains_L(self, rng):
+        X, y = make_blobs(rng, n_per=100)
+        inc = IncrementalBubbles(dim=2, compression=0.1)
+        for p in X:
+            inc.insert(p)
+        assert abs(inc.num_leaves - 30) <= 10
+        b = inc.to_bubbles()
+        assert b.n.sum() == pytest.approx(300.0)
+
+    def test_incremental_delete(self, rng):
+        X, y = make_blobs(rng, n_per=80)
+        inc = IncrementalBubbles(dim=2, compression=0.1)
+        for p in X:
+            inc.insert(p)
+        for p in X[:100]:
+            inc.delete_nearest(p)
+        b = inc.to_bubbles()
+        assert b.n.sum() == pytest.approx(140.0)
+
+    def test_all_summarizers_cluster_blobs(self, rng):
+        """The Fig. 6-style comparison: every technique recovers >= 2 of 3
+        blobs; Bubble-tree should do best or tie."""
+        X, y = make_blobs(rng, n_per=150, scale=0.3)
+        scores = {}
+        bt = BubbleTreeSummarizer(dim=2, min_pts=10, compression=0.1)
+        bt.insert_block(X)
+        out = bt.cluster()
+        a = assign_points(X, out.bubbles)
+        scores["bubble_tree"] = nmi(out.bubble_labels[a], y)
+        for name, summ in (
+            ("clustree", ClusTreeLite(dim=2, max_height=5)),
+            ("incremental", IncrementalBubbles(dim=2, compression=0.1)),
+        ):
+            for p in X:
+                summ.insert(p)
+            b = summ.to_bubbles()
+            res = cluster_bubbles(b, min_pts=10)
+            a = assign_points(X, b)
+            scores[name] = nmi(res.labels[a], y)
+        assert scores["bubble_tree"] > 0.8, scores
+        assert scores["bubble_tree"] >= max(scores.values()) - 0.1, scores
