@@ -1,0 +1,18 @@
+# Dev entry points.  PYTHONPATH is injected so targets work from a clean
+# checkout; see README.md for what each target covers.
+
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench-smoke docs-links check
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --only fig8
+
+docs-links:
+	$(PYTHON) scripts/check_docs_links.py
+
+check: docs-links test

@@ -16,7 +16,7 @@ import traceback
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma list: fig3,fig4,fig5,fig6,fig7,kernels,roofline")
+    ap.add_argument("--only", default=None, help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,kernels,roofline")
     ap.add_argument("--dryrun", default="dryrun_results.json")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
@@ -48,6 +48,10 @@ def main(argv=None):
         from . import fig7_scalability
 
         _guard(fig7_scalability.run, failures, "fig7")
+    if want("fig8"):
+        from . import fig8_streaming
+
+        _guard(fig8_streaming.run, failures, "fig8")
     if want("kernels"):
         from . import kernels_bench
 

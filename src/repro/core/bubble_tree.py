@@ -55,6 +55,10 @@ class BubbleTree:
         self.reorg_every = int(reorg_every)
         self._op_count = 0
         self._assign_fn = assign_fn  # optional accelerated point->leaf argmin
+        # dirty-mass accounting (DESIGN.md §5): points inserted/deleted
+        # since the last offline pass — the staleness signal that steers
+        # re-clustering the same way compression steers the leaf count.
+        self.dirty_mass = 0.0
 
         # --- node SoA ---
         cap = capacity
@@ -154,18 +158,36 @@ class BubbleTree:
         ids = np.nonzero(self.point_alive)[0]
         return ids, self.PX[ids]
 
+    def leaf_cf_buffers(self):
+        """(ids, LS, SS, N) where LS/SS/N are the FULL SoA buffers (true
+        array views — zero copies) and ids selects the alive, non-empty
+        leaf rows.  The offline pass (ops.offline_recluster) gathers just
+        those L rows — O(L·d), the summary, never the raw points — and
+        derives the bubble table in f64 before dispatching to device."""
+        ids = self.alive_leaf_ids()
+        ids = ids[self.N[ids] > 0]
+        return ids, self.LS, self.SS, self.N
+
+    def dirty_fraction(self) -> float:
+        """Fraction of the current mass touched since `mark_clean()`."""
+        return self.dirty_mass / max(float(self.n_points), 1.0)
+
+    def mark_clean(self):
+        self.dirty_mass = 0.0
+
     def insert(self, p) -> int:
         """Single-point insertion (paper §4.1 insertion algorithm)."""
         p = np.asarray(p, dtype=np.float64)
         pid = self._new_point(p)
         self._insert_point_into_tree(pid)
         self.n_points += 1
+        self.dirty_mass += 1.0
         self._maintain()
         return pid
 
     def delete(self, pid: int):
         """Single-point deletion (exact — CFs are subtractable sums)."""
-        if not self.point_alive[pid]:
+        if not (0 <= pid < self.point_alive.shape[0]) or not self.point_alive[pid]:
             raise KeyError(f"point {pid} not alive")
         leaf = int(self.point_leaf[pid])
         p = self.PX[pid]
@@ -175,6 +197,7 @@ class BubbleTree:
         self.point_leaf[pid] = -1
         self._point_free.append(pid)
         self.n_points -= 1
+        self.dirty_mass += 1.0
         if len(self.leaf_points[leaf]) < self.m and self.num_leaves > 1:
             self._dissolve_leaf(leaf)
         self._maintain()
@@ -219,6 +242,7 @@ class BubbleTree:
             self.N[leaf] += 1.0
         self._recompute_internal_cfs()
         self.n_points += len(pids)
+        self.dirty_mass += float(len(pids))
         deficit = abs(self.target_L - self.num_leaves) + 2
         for _ in range(deficit):
             if not self._maintain(single_step=True):
@@ -226,8 +250,54 @@ class BubbleTree:
         return pids
 
     def delete_block(self, pids):
+        """Throughput path for deletions, mirroring insert_block: group the
+        victims per leaf, retire them with ONE CF subtraction per touched
+        leaf, rebuild ancestor CFs bottom-up, then dissolve underfilled
+        leaves and run the maintenance deficit loop.  CF additivity makes
+        the resulting statistics identical to repeated delete() — only the
+        maintenance schedule differs."""
+        pids = [int(p) for p in pids]
+        if not pids:
+            return
+        if len(pids) == 1:
+            self.delete(pids[0])
+            return
+        seen: set[int] = set()
+        for pid in pids:  # validate before any mutation: reject whole block
+            if not (0 <= pid < self.point_alive.shape[0]) or not self.point_alive[pid]:
+                raise KeyError(f"point {pid} not alive")
+            if pid in seen:
+                raise KeyError(f"point {pid} duplicated in delete block")
+            seen.add(pid)
+        by_leaf: dict[int, list[int]] = {}
         for pid in pids:
-            self.delete(int(pid))
+            by_leaf.setdefault(int(self.point_leaf[pid]), []).append(pid)
+            self.point_alive[pid] = False
+        for leaf, victims in by_leaf.items():
+            gone = set(victims)
+            self.leaf_points[leaf] = [q for q in self.leaf_points[leaf] if q not in gone]
+            P = self.PX[np.asarray(victims, dtype=np.int64)]
+            self.LS[leaf] -= P.sum(axis=0)
+            self.SS[leaf] -= float(np.einsum("nd,nd->", P, P))
+            self.N[leaf] -= float(len(victims))
+            for pid in victims:
+                self.point_leaf[pid] = -1
+                self._point_free.append(pid)
+        self._recompute_internal_cfs()
+        self.n_points -= len(pids)
+        self.dirty_mass += float(len(pids))
+        for leaf in list(by_leaf):
+            if (
+                self.node_alive[leaf]
+                and self.is_leaf[leaf]
+                and len(self.leaf_points[leaf]) < self.m
+                and self.num_leaves > 1
+            ):
+                self._dissolve_leaf(leaf)
+        deficit = abs(self.target_L - self.num_leaves) + 2
+        for _ in range(deficit):
+            if not self._maintain(single_step=True):
+                break
 
     # ------------------------------------------------------------------
     # insertion internals

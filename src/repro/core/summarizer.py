@@ -42,12 +42,23 @@ def cluster_bubbles(
     extent_adjusted: bool = False,
     use_jax: bool = False,
     allow_single_cluster: bool = False,
+    backend=None,
 ) -> HDBSCANResult:
-    """Static HDBSCAN on data bubbles (offline step 3)."""
-    if use_jax:
-        from repro.kernels import ops
+    """Static HDBSCAN on data bubbles (offline step 3).
 
-        W = np.asarray(ops.bubble_mutual_reachability(b.rep, b.n, b.extent, min_pts))
+    ``backend`` (a kernels.ops.ClusterBackend, resolved once by long-lived
+    callers) wins over the legacy ``use_jax`` flag when provided.
+    """
+    if backend is not None or use_jax:
+        # d_m is translation-invariant; center before the f32 device path
+        # (off-origin coordinates cancel in the ||x||²+||y||²−2xy tiles)
+        rep = b.rep - (b.n @ b.rep / max(b.n.sum(), 1.0))[None, :]
+        if backend is not None:
+            W = np.asarray(backend.bubble_mutual_reachability(rep, b.n, b.extent, min_pts))
+        else:
+            from repro.kernels import ops
+
+            W = np.asarray(ops.bubble_mutual_reachability(rep, b.n, b.extent, min_pts))
     else:
         W, _ = bubble_mutual_reachability(b, min_pts, extent_adjusted=extent_adjusted)
     eff_mcs = float(min_pts if min_cluster_size is None else min_cluster_size)
@@ -61,12 +72,15 @@ def cluster_bubbles(
     )
 
 
-def assign_points(X: np.ndarray, b: DataBubbles, use_jax: bool = False) -> np.ndarray:
+def assign_points(X: np.ndarray, b: DataBubbles, use_jax: bool = False, backend=None) -> np.ndarray:
     """Offline step 2: nearest-bubble assignment for original points."""
-    if use_jax:
+    if backend is not None or use_jax:
+        mu = b.rep.mean(axis=0)  # argmin is translation-invariant; see above
+        if backend is not None:
+            return np.asarray(backend.assign(X - mu, b.rep - mu))
         from repro.kernels import ops
 
-        return np.asarray(ops.assign(X, b.rep))
+        return np.asarray(ops.assign(X - mu, b.rep - mu))
     sq = (
         np.einsum("id,id->i", X, X)[:, None]
         + np.einsum("jd,jd->j", b.rep, b.rep)[None, :]
@@ -85,11 +99,19 @@ class BubbleTreeSummarizer:
         compression: float = 0.01,
         M: int = 10,
         use_jax: bool = False,
+        backend: str | None = None,
         **tree_kw,
     ):
         self.tree = BubbleTree(dim=dim, M=M, compression=compression, **tree_kw)
         self.min_pts = int(min_pts)
         self.use_jax = bool(use_jax)
+        # backend dispatch resolved once at construction (DESIGN.md §5);
+        # None keeps the legacy per-call use_jax behaviour
+        self.backend = None
+        if backend is not None:
+            from repro.kernels import ops
+
+            self.backend = ops.get_backend(backend)
 
     # online ------------------------------------------------------------
     def insert(self, p) -> int:
@@ -112,9 +134,10 @@ class BubbleTreeSummarizer:
             self.min_pts,
             min_cluster_size=min_cluster_size,
             use_jax=self.use_jax,
+            backend=self.backend,
         )
         pids, X = self.tree.alive_points()
-        a = assign_points(X, b, use_jax=self.use_jax)
+        a = assign_points(X, b, use_jax=self.use_jax, backend=self.backend)
         return OfflineResult(
             bubbles=b,
             bubble_labels=res.labels,

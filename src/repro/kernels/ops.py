@@ -36,6 +36,11 @@ __all__ = [
     "core_distances",
     "assign",
     "bubble_mutual_reachability",
+    "bubble_table",
+    "offline_recluster",
+    "offline_recluster_from_table",
+    "ClusterBackend",
+    "get_backend",
 ]
 
 
@@ -45,6 +50,11 @@ def _interpret() -> bool:
 
 def _use_ref() -> bool:
     return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def _resolve_ref(use_ref: bool | None) -> bool:
+    """Per-call override beats the env var; None = env-var policy."""
+    return _use_ref() if use_ref is None else bool(use_ref)
 
 
 def _pad_rows(a: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
@@ -64,10 +74,10 @@ def _pad_feats(a: jax.Array, mult: int = 128) -> jax.Array:
     return jnp.pad(a, [(0, 0), (0, p)])
 
 
-def pairwise_sqdist(x, y, bn: int | None = None, bm: int | None = None):
+def pairwise_sqdist(x, y, bn: int | None = None, bm: int | None = None, use_ref: bool | None = None):
     x = jnp.asarray(x)
     y = jnp.asarray(y)
-    if _use_ref():
+    if _resolve_ref(use_ref):
         return _ref.pairwise_sqdist(x, y)
     n, m = x.shape[0], y.shape[0]
     bn = bn or min(_pw_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
@@ -78,10 +88,10 @@ def pairwise_sqdist(x, y, bn: int | None = None, bm: int | None = None):
     return out[:n, :m]
 
 
-def mutual_reachability(x, y, cd_x, cd_y, zero_diag: bool = True):
+def mutual_reachability(x, y, cd_x, cd_y, zero_diag: bool = True, use_ref: bool | None = None):
     x, y = jnp.asarray(x), jnp.asarray(y)
     cd_x, cd_y = jnp.asarray(cd_x), jnp.asarray(cd_y)
-    if _use_ref():
+    if _resolve_ref(use_ref):
         return _ref.mutual_reachability(x, y, cd_x, cd_y, zero_diag=zero_diag)
     n, m = x.shape[0], y.shape[0]
     bn = min(_mr_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
@@ -101,7 +111,7 @@ def mutual_reachability(x, y, cd_x, cd_y, zero_diag: bool = True):
 _KNN_VMEM_LIMIT = 1 << 14
 
 
-def knn(x, y, k: int):
+def knn(x, y, k: int, use_ref: bool | None = None):
     """k nearest distances (ascending) and indices of y for each x row.
 
     Rows of x that also appear in y return themselves at distance 0 —
@@ -111,7 +121,7 @@ def knn(x, y, k: int):
     x, y = jnp.asarray(x), jnp.asarray(y)
     n, m = x.shape[0], y.shape[0]
     k = min(k, m)
-    if _use_ref() or m > _KNN_VMEM_LIMIT:
+    if _resolve_ref(use_ref) or m > _KNN_VMEM_LIMIT:
         return _ref.knn(x, y, k)
     bn = min(_knn_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
     xp = _pad_feats(_pad_rows(x, bn))
@@ -134,9 +144,9 @@ def core_distances(x, min_pts: int):
     return d[:, min(min_pts, x.shape[0]) - 1]
 
 
-def assign(x, reps):
+def assign(x, reps, use_ref: bool | None = None):
     x, reps = jnp.asarray(x), jnp.asarray(reps)
-    if _use_ref():
+    if _resolve_ref(use_ref):
         return _ref.assign(x, reps)
     n = x.shape[0]
     bn = min(_assign_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
@@ -158,7 +168,7 @@ def _bubble_cd(rep, n_b, extent, min_pts: int):
     return _ref.bubble_core_distances(rep, n_b, extent, min_pts, rep.shape[1])
 
 
-def bubble_mutual_reachability(rep, n_b, extent, min_pts: int):
+def bubble_mutual_reachability(rep, n_b, extent, min_pts: int, use_ref: bool | None = None):
     """Offline phase: (L,L) bubble d_m matrix (Eqs. 6–7).
 
     The Eq. 6 weighted-rank scan (sort + cumsum) is jnp (sort-dominated,
@@ -168,7 +178,7 @@ def bubble_mutual_reachability(rep, n_b, extent, min_pts: int):
     n_b = jnp.asarray(n_b)
     extent = jnp.asarray(extent)
     cd = _bubble_cd(rep, n_b, extent, min_pts)
-    return mutual_reachability(rep, rep, cd, cd, zero_diag=True)
+    return mutual_reachability(rep, rep, cd, cd, zero_diag=True, use_ref=use_ref)
 
 
 def flash_attention(q, k, v, qpos=None, kpos=None, *, causal=True, window=None,
@@ -217,6 +227,179 @@ def flash_attention(q, k, v, qpos=None, kpos=None, *, causal=True, window=None,
     return jnp.moveaxis(out, 1, 2)
 
 
+# Padding coordinate for size-bucketed bubble tables: far from any data
+# (so padded bubbles are never a nearest neighbour) but small enough that
+# its squared distances stay finite in f32 (1e12·d ≪ 3.4e38).
+_PAD_COORD = 1e6
+
+
+def bubble_table(LS, SS, N, ids):
+    """Host-side f64 bubble derivation shared by the offline pipeline and
+    the serve plane: gather the L alive-leaf rows and apply Eqs. 3–4.
+
+    Returns (rep, extent, n, center) — `center` is the mass-weighted
+    centroid, the translation every f32 device call site must subtract
+    (the ‖x‖²+‖y‖²−2xy expansion cancels catastrophically off-origin).
+    """
+    from repro.core.cf import cf_extent, cf_rep
+
+    ids = np.asarray(ids)
+    LSg = np.asarray(LS, dtype=np.float64)[ids]
+    SSg = np.asarray(SS, dtype=np.float64)[ids]
+    Ng = np.asarray(N, dtype=np.float64)[ids]
+    rep = cf_rep(LSg, Ng)
+    extent = cf_extent(LSg, SSg, Ng)
+    center = LSg.sum(axis=0) / max(Ng.sum(), 1.0)
+    return rep, extent, Ng, center
+
+
+@functools.partial(jax.jit, static_argnames=("min_pts", "use_ref"))
+def _offline_pipeline(rep, n_b, extent, n_valid, min_pts: int, use_ref: bool):
+    """Device-side offline pass over a size-bucketed bubble table: (Lp, Lp)
+    mutual-reachability matrix (Eqs. 6–7) then Borůvka, under ONE jit so
+    XLA fuses the epilogues and nothing syncs to host until the fixed-size
+    MST edge buffers come back.  Rows ≥ n_valid are padding (weight 0,
+    reps at _PAD_COORD): they perturb nothing real, and their W rows/cols
+    are forced to +inf so they stay isolated components in the MST."""
+    from repro.core.mst import boruvka_jax
+
+    W = bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=use_ref)
+    iota = jnp.arange(rep.shape[0])
+    is_pad = iota >= n_valid
+    W = jnp.where(is_pad[:, None] | is_pad[None, :], jnp.inf, W)
+    eu, ev, ew, valid = boruvka_jax(W)
+    return W, eu, ev, ew, valid
+
+
+def offline_recluster(
+    LS, SS, N, ids, min_pts: int, use_ref: bool | None = None, return_w: bool = False
+):
+    """Offline re-clustering over leaf CF buffers: `bubble_table` (f64
+    host derivation, Eqs. 3–4) + `offline_recluster_from_table`.  Callers
+    that need the table themselves (the streaming engine keeps rep/center
+    for the serve plane) call the two pieces separately so the O(L·d)
+    derivation happens once."""
+    rep, extent, Ng, _ = bubble_table(LS, SS, N, ids)
+    return offline_recluster_from_table(
+        rep, Ng, extent, min_pts, use_ref=use_ref, return_w=return_w
+    )
+
+
+def offline_recluster_from_table(
+    rep, n_b, extent, min_pts: int, use_ref: bool | None = None, return_w: bool = False
+):
+    """The streaming engine's offline hot path, from a derived bubble table.
+
+    Host side: mean-center (d_m is translation-invariant; the f32 device
+    ‖x‖²+‖y‖²−2xy tiles cancel catastrophically off-origin) and pad to a
+    power-of-two bucket so the jit'd d_m + Borůvka pipeline recompiles per
+    bucket, not per leaf count, as the stream grows.
+
+    Args:
+      rep, n_b, extent: (L, d)/(L,)/(L,) float64 bubble table (Eqs. 3–4),
+        e.g. from `bubble_table`.
+      min_pts: HDBSCAN density parameter.
+      use_ref: backend override (None = env-var policy).
+      return_w: also materialize the dense (L, L) d_m matrix on host.
+        Off by default — the streaming engine only needs the edges, and at
+        large L the matrix transfer dwarfs the edge transfer.
+
+    Returns:
+      (u, v, w) MST edge arrays (host numpy, masked to the valid edges);
+      with ``return_w=True``, ``(W, (u, v, w))``.
+    """
+    use = _resolve_ref(use_ref)
+    rep = np.asarray(rep, dtype=np.float64)
+    Ng = np.asarray(n_b, dtype=np.float64)
+    extent = np.asarray(extent, dtype=np.float64)
+    L = int(rep.shape[0])
+    rep = rep - ((Ng @ rep) / max(Ng.sum(), 1.0))[None, :]
+    # if the whole summary represents < min_pts points, Eq. 6's weighted
+    # scan can never reach min_pts and the fallback would land on a
+    # padding bubble; clamp to the available mass (knn's k=min(k,m) rule)
+    min_pts = max(1, min(int(min_pts), int(Ng.sum())))
+    Lp = max(8, 1 << (max(L - 1, 1)).bit_length())
+    pad = Lp - L
+    if pad:
+        rep = np.concatenate([rep, np.full((pad, rep.shape[1]), _PAD_COORD)])
+        Ng_p = np.concatenate([Ng, np.zeros(pad)])
+        extent = np.concatenate([extent, np.zeros(pad)])
+    else:
+        Ng_p = Ng
+    W, eu, ev, ew, valid = _offline_pipeline(
+        jnp.asarray(rep, jnp.float32),
+        jnp.asarray(Ng_p, jnp.float32),
+        jnp.asarray(extent, jnp.float32),
+        jnp.asarray(L, jnp.int32),
+        int(min_pts),
+        use,
+    )
+    keep = np.asarray(valid)
+    edges = (
+        np.asarray(eu, dtype=np.int64)[keep],
+        np.asarray(ev, dtype=np.int64)[keep],
+        np.asarray(ew, dtype=np.float64)[keep],
+    )
+    if return_w:
+        return np.asarray(W)[:L, :L], edges
+    return edges
+
+
+class ClusterBackend:
+    """Kernel-dispatch handle resolved ONCE at engine construction.
+
+    Every module-level wrapper in this file re-checks platform/env per
+    call; long-lived engines (serving.stream) instead hold one of these so
+    the policy is frozen up front and hot loops never branch on strings:
+
+      * ``pallas`` — tiled Pallas kernels (compiled on TPU; interpret-mode
+        Python execution on CPU — validation only, slow),
+      * ``jnp``    — the pure-jnp reference path (CPU/GPU fallback; on TPU
+        still XLA-compiled, just without the hand-tiled kernels),
+      * ``auto``   — pallas on TPU, jnp elsewhere.
+    """
+
+    _ALIASES = {"ref": "jnp", "cpu": "jnp", "tpu": "pallas"}
+
+    def __init__(self, name: str = "auto"):
+        name = self._ALIASES.get(name, name)
+        if name == "auto":
+            name = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        if name not in ("pallas", "jnp"):
+            raise ValueError(f"unknown backend {name!r} (want auto|pallas|jnp)")
+        self.name = name
+        self.use_ref = name == "jnp"
+
+    def __repr__(self):
+        return f"ClusterBackend({self.name!r})"
+
+    def pairwise_sqdist(self, x, y):
+        return pairwise_sqdist(x, y, use_ref=self.use_ref)
+
+    def knn(self, x, y, k: int):
+        return knn(x, y, k, use_ref=self.use_ref)
+
+    def assign(self, x, reps):
+        return assign(x, reps, use_ref=self.use_ref)
+
+    def bubble_mutual_reachability(self, rep, n_b, extent, min_pts: int):
+        return bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=self.use_ref)
+
+    def offline_recluster(self, LS, SS, N, ids, min_pts: int, return_w: bool = False):
+        return offline_recluster(
+            LS, SS, N, ids, min_pts, use_ref=self.use_ref, return_w=return_w
+        )
+
+    def offline_recluster_from_table(self, rep, n_b, extent, min_pts: int, return_w: bool = False):
+        return offline_recluster_from_table(
+            rep, n_b, extent, min_pts, use_ref=self.use_ref, return_w=return_w
+        )
+
+
+def get_backend(name: str = "auto") -> ClusterBackend:
+    return ClusterBackend(name)
+
+
 def bubble_mutual_reachability_sharded(rep, n_b, extent, min_pts: int, mesh, axis: str = "data"):
     """Mesh-distributed offline pass (DESIGN.md §2): the (L,L) d_m tile
     computation is row-block sharded over `axis` with shard_map — each
@@ -247,12 +430,18 @@ def bubble_mutual_reachability_sharded(rep, n_b, extent, min_pts: int, mesh, axi
         cols = jnp.arange(L)
         return jnp.where(rows[:, None] == cols[None, :], 0.0, m)
 
-    f = jax.shard_map(
+    try:  # jax >= 0.6 top-level API; older releases ship it in experimental
+        smap, check_kw = jax.shard_map, {"check_vma": False}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as smap
+
+        check_kw = {"check_rep": False}
+    f = smap(
         strip,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis),
-        check_vma=False,
+        **check_kw,
     )
     out = f(rep_p, cd_p)
     return out[:L]

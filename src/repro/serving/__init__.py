@@ -1,3 +1,12 @@
-from .engine import Request, ServeEngine
+from .engine import HostBatcher, Request, ServeEngine
+from .stream import ClusterSnapshot, StalenessPolicy, StreamingClusterEngine, Ticket
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "HostBatcher",
+    "Request",
+    "ServeEngine",
+    "ClusterSnapshot",
+    "StalenessPolicy",
+    "StreamingClusterEngine",
+    "Ticket",
+]

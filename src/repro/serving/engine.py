@@ -21,6 +21,7 @@ the scheduler is host-side and identical.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -28,6 +29,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+
+class HostBatcher:
+    """Host-side request coalescer shared by the serving engines.
+
+    A FIFO of (kind, item) ops drained either one at a time (slot-at-a-time
+    admission, ServeEngine) or as contiguous same-kind blocks of at most
+    ``max_block`` items (StreamingClusterEngine).  FIFO order is preserved
+    across kinds — an op never jumps an earlier op of a different kind —
+    which is what makes batched ingestion equivalent to replaying the
+    sequential stream (CF additivity does the rest).
+    """
+
+    def __init__(self, max_block: int = 512):
+        self.max_block = int(max_block)
+        self._q: collections.deque = collections.deque()
+        self.pushed = 0
+        self.blocks = 0
+
+    def push(self, item, kind: str = "default"):
+        self._q.append((kind, item))
+        self.pushed += 1
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def pop_one(self):
+        """Oldest item (its kind is dropped — single-kind callers)."""
+        _, item = self._q.popleft()
+        return item
+
+    def next_block(self, limit: int | None = None, size=None):
+        """Pop the longest prefix run of same-kind ops whose total size
+        fits min(max_block, limit).  ``size`` maps an item to its cost
+        (default 1 per request; the clustering engine passes a
+        points-per-request counter).  The first op always pops, so a
+        single oversized request forms its own block rather than
+        deadlocking.  Returns (kind, [items...])."""
+        cap = self.max_block if limit is None else min(self.max_block, int(limit))
+        kind, first = self._q.popleft()
+        items = [first]
+        count = size(first) if size else 1
+        while self._q and self._q[0][0] == kind:
+            nxt = self._q[0][1]
+            s = size(nxt) if size else 1
+            if count + s > cap:
+                break
+            self._q.popleft()
+            items.append(nxt)
+            count += s
+        self.blocks += 1
+        return kind, items
 
 
 @dataclasses.dataclass
@@ -54,7 +110,7 @@ class ServeEngine:
         self.caches = self.model.init_cache(slots, cache_len)
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, dtype=np.int64)
-        self.queue: list[Request] = []
+        self.queue = HostBatcher(max_block=slots)
         self.rng = np.random.default_rng(seed)
         self.steps = 0
         self.tokens_out = 0
@@ -119,12 +175,12 @@ class ServeEngine:
     # -- public API -----------------------------------------------------------
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.queue.push(req, kind="req")
 
     def _admit(self):
         for slot in range(self.slots):
             if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.pop_one()
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, cache = self._prefill(self.params, toks)
                 self._write_slot_cache(slot, cache, len(req.prompt))

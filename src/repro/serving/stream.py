@@ -1,0 +1,462 @@
+"""Streaming clustering engine — the online–offline split as a service
+(DESIGN.md §5).
+
+The paper's framework is two phases glued by a summary: a Bubble-tree
+absorbs fully-dynamic insertions/deletions *online* while static HDBSCAN
+runs *offline* over the ≤ L data bubbles.  This module turns those library
+calls into a serving loop with three planes:
+
+  request plane   `submit_insert` / `submit_delete` enqueue ops into a
+                  `HostBatcher`; `poll()` drains them in contiguous
+                  same-kind blocks and applies `BubbleTree.insert_block` /
+                  `delete_block` — CF additivity makes the batched stream
+                  equivalent to the sequential one (paper §5.1's
+                  order-independence), so batching is free throughput.
+
+  offline plane   a staleness policy mirrors the paper's compression-factor
+                  steering: the tree tracks *dirty mass* (points touched
+                  since the last pass) and the offline pass re-runs only
+                  when dirty/total ≥ ε.  The pass is
+                  `kernels.ops.offline_recluster`: the host derives the
+                  L-row bubble table from the tree's SoA buffers (O(L·d)
+                  in f64 — the summary, never the raw points), then a
+                  single jit'd bubble-d_m (Eqs. 6–7) → Borůvka pipeline
+                  runs on device over a size-bucketed table (recompiles
+                  per bucket, not per leaf count).  Async mode runs it in
+                  a background thread against a snapshot of those rows.
+                  Hierarchy condensation (host-side, O(L)) reuses
+                  core.hdbscan's machinery.
+
+  serve plane     `query(X)` labels points against the *cached* snapshot —
+                  nearest-bubble assignment through the engine's backend —
+                  so reads never block on ingestion or re-clustering and
+                  always see the newest complete hierarchy.
+
+The kernel backend (Pallas vs pure-jnp) is resolved ONCE at construction
+via `ops.get_backend`; hot loops never re-check platform or env vars.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.core.bubble_tree import BubbleTree
+from repro.core.hdbscan import (
+    CondensedTree,
+    condense_tree,
+    extract_clusters,
+    hdbscan_labels,
+    single_linkage,
+)
+from repro.kernels import ops
+
+from .engine import HostBatcher
+
+__all__ = [
+    "Ticket",
+    "StalenessPolicy",
+    "ClusterSnapshot",
+    "StreamingClusterEngine",
+]
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for a queued insert block; `pids` is filled when the
+    scheduler applies the block (needed to delete those points later)."""
+
+    size: int
+    pids: list | None = None
+
+    @property
+    def applied(self) -> bool:
+        return self.pids is not None
+
+
+@dataclasses.dataclass
+class StalenessPolicy:
+    """When does the cached hierarchy go stale?
+
+    Re-cluster when the dirty mass (points inserted/deleted since the last
+    offline pass) reaches ``epsilon`` × current population — the same
+    proportional steering the paper applies to the leaf count (L =
+    compression × N), applied to the offline cadence.  Below
+    ``min_points`` there is nothing worth clustering and the pass is
+    skipped entirely.
+    """
+
+    epsilon: float = 0.1
+    min_points: int = 32
+
+    def stale(self, tree: BubbleTree, have_snapshot: bool, pending: float = 0.0) -> bool:
+        """`pending` = dirty mass an in-flight pass has already captured
+        (it will be covered when that pass lands, so it doesn't count
+        toward triggering the next one)."""
+        if tree.n_points < self.min_points:
+            return False
+        if not have_snapshot:
+            return True
+        eff = max(0.0, tree.dirty_mass - pending)
+        return eff / max(float(tree.n_points), 1.0) >= self.epsilon
+
+
+@dataclasses.dataclass
+class ClusterSnapshot:
+    """Immutable result of one offline pass; the serve plane reads this."""
+
+    version: int
+    n_points: int
+    bubble_rep: np.ndarray  # (L, d) representatives (serve-plane index)
+    bubble_n: np.ndarray  # (L,) represented mass
+    center: np.ndarray  # (d,) summary centroid — assignments are centered
+    #   before the f32 device kernel (off-origin cancellation, DESIGN.md §2)
+    bubble_labels: np.ndarray  # (L,) flat cluster labels, -1 noise
+    mst: tuple  # (u, v, w) over bubbles
+    condensed: CondensedTree
+    selected: list
+    wall_seconds: float
+    dirty_consumed: float = 0.0  # dirty mass this pass absorbed (settled
+    #   against the tree by the MAIN thread — see _settle)
+
+    @property
+    def n_bubbles(self) -> int:
+        return int(self.bubble_rep.shape[0])
+
+    @property
+    def n_clusters(self) -> int:
+        return len(set(self.bubble_labels.tolist()) - {-1})
+
+    @property
+    def total_mst_weight(self) -> float:
+        return float(np.sum(self.mst[2]))
+
+
+class StreamingClusterEngine:
+    """Batched Bubble-tree ingestion + incremental offline re-clustering.
+
+    Args:
+      dim: feature dimensionality.
+      min_pts: HDBSCAN density parameter (offline phase).
+      compression: Bubble-tree leaf steering factor (L ≈ compression × N).
+      min_cluster_size: flat-extraction threshold (defaults to min_pts).
+      epsilon: staleness threshold — re-cluster when ≥ this fraction of
+        the population changed since the last pass.
+      max_block: scheduler block cap (requests coalesced per apply).
+      backend: 'auto' | 'pallas' | 'jnp' — resolved once, see ops.get_backend.
+      async_offline: run offline passes in a background thread; `query`
+        keeps serving the previous snapshot meanwhile.
+      device_assign: route the online point→leaf argmin through the kernel
+        backend (None = only when the backend is Pallas/TPU; host numpy is
+        faster for CPU-sized blocks).
+      **tree_kw: forwarded to BubbleTree.
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        *,
+        min_pts: int = 10,
+        compression: float = 0.05,
+        min_cluster_size: float | None = None,
+        epsilon: float = 0.1,
+        max_block: int = 512,
+        backend: str = "auto",
+        async_offline: bool = False,
+        min_offline_points: int = 32,
+        device_assign: bool | None = None,
+        **tree_kw,
+    ):
+        self.backend = ops.get_backend(backend)
+        if device_assign is None:
+            device_assign = self.backend.name == "pallas"
+        assign_fn = None
+        if device_assign:
+            # argmin is translation-invariant; center before the f32 kernel
+            # so off-origin coordinates don't cancel (same as the offline path)
+            def assign_fn(X, reps):
+                mu = reps.mean(axis=0)
+                return np.asarray(self.backend.assign(X - mu, reps - mu))
+        self.tree = BubbleTree(
+            dim=dim, compression=compression, assign_fn=assign_fn, **tree_kw
+        )
+        self.min_pts = int(min_pts)
+        self.min_cluster_size = float(
+            min_pts if min_cluster_size is None else min_cluster_size
+        )
+        self.policy = StalenessPolicy(epsilon=float(epsilon), min_points=int(min_offline_points))
+        self.batcher = HostBatcher(max_block=max_block)
+        self.async_offline = bool(async_offline)
+        self._snapshot: ClusterSnapshot | None = None
+        self._snapshot_lock = threading.Lock()
+        self._offline_thread: threading.Thread | None = None
+        self._version = 0
+        self._settled_version = 0
+        self._inflight_consumed = 0.0  # dirty mass captured by the running pass
+        self._offline_error: BaseException | None = None
+        self.stats = {
+            "inserts": 0,
+            "deletes": 0,
+            "blocks_applied": 0,
+            "recluster_count": 0,
+            "recluster_skipped_busy": 0,
+            "recluster_failures": 0,
+            "offline_seconds_total": 0.0,
+        }
+
+    # -- request plane -----------------------------------------------------
+
+    def submit_insert(self, X) -> Ticket:
+        """Queue a block of points for insertion; returns a Ticket whose
+        `pids` fill in once the scheduler applies the block.  The points
+        are copied at submit time — callers may reuse their buffer."""
+        X = np.array(X, dtype=np.float64, copy=True, ndmin=2)
+        if X.size == 0:  # e.g. [] arrives as (1, 0); normalize to 0 points
+            X = X.reshape(0, self.tree.dim)
+        if X.ndim != 2 or X.shape[1] != self.tree.dim:
+            # validate at submit time: a bad request deferred into poll()
+            # would crash the drain loop and take coalesced siblings down
+            raise ValueError(f"expected (n, {self.tree.dim}) points, got {X.shape}")
+        t = Ticket(size=X.shape[0])
+        self.batcher.push((X, t), kind="insert")
+        return t
+
+    def submit_delete(self, pids):
+        """Queue point retirements (pids from an applied insert Ticket)."""
+        pids = [int(p) for p in np.atleast_1d(np.asarray(pids)).ravel()]
+        self.batcher.push(pids, kind="delete")
+
+    def poll(self, max_blocks: int | None = None) -> int:
+        """Drain the request queue: coalesce contiguous same-kind requests
+        into blocks (≤ max_block points each), apply them to the tree, then
+        consult the staleness policy.  Returns the number of ops applied."""
+        applied = 0
+        blocks = 0
+        while self.batcher and (max_blocks is None or blocks < max_blocks):
+            kind, items = self._next_point_block()
+            if kind == "insert":
+                X = np.concatenate([x for x, _ in items], axis=0)
+                pids = self.tree.insert_block(X)
+                off = 0
+                for x, ticket in items:  # requests are never split: one fill
+                    take = x.shape[0]
+                    ticket.pids = pids[off : off + take]
+                    off += take
+                self.stats["inserts"] += X.shape[0]
+                applied += X.shape[0]
+            else:
+                flat = [p for chunk in items for p in chunk]
+                try:
+                    self.tree.delete_block(flat)
+                except KeyError:
+                    # coalescing must not change failure semantics vs the
+                    # sequential stream: a bad request (dead/duplicate pid)
+                    # can't take its siblings down.  delete_block is atomic
+                    # per call, so replay per request and surface the first
+                    # failure — exactly what sequential submission would do.
+                    done, err = 0, None
+                    for chunk in items:
+                        try:
+                            self.tree.delete_block(chunk)
+                            done += len(chunk)
+                        except KeyError as e:
+                            if err is None:
+                                err = e
+                    self.stats["deletes"] += done
+                    if err is not None:
+                        raise err
+                else:
+                    self.stats["deletes"] += len(flat)
+                    applied += len(flat)
+            self.stats["blocks_applied"] += 1
+            blocks += 1
+        self.maybe_recluster()
+        return applied
+
+    @staticmethod
+    def _point_count(item) -> int:
+        """Points in one queued request: insert items are (X, Ticket),
+        delete items are pid lists."""
+        return item[0].shape[0] if isinstance(item, tuple) else len(item)
+
+    def _next_point_block(self):
+        """HostBatcher.next_block counting *points*, not requests (one
+        insert request may carry a whole array).  Coalescing never exceeds
+        max_block points; a single oversized request still forms its own
+        block (tickets are not split)."""
+        return self.batcher.next_block(size=self._point_count)
+
+    def ingest(self, X) -> list[int]:
+        """Synchronous convenience: submit + drain; returns the new pids."""
+        t = self.submit_insert(X)
+        self.poll()
+        return t.pids
+
+    def retire(self, pids):
+        """Synchronous convenience: submit deletions + drain."""
+        self.submit_delete(pids)
+        self.poll()
+
+    # -- offline plane -----------------------------------------------------
+
+    def _settle(self):
+        """Consume a finished pass's dirty mass — on the MAIN thread only,
+        so `tree.dirty_mass` has a single writer thread and the worker
+        never races the ingestion path's `+=`."""
+        with self._snapshot_lock:
+            snap = self._snapshot
+        if snap is not None and snap.version > self._settled_version:
+            self.tree.dirty_mass = max(0.0, self.tree.dirty_mass - snap.dirty_consumed)
+            self._settled_version = snap.version
+            self._inflight_consumed = 0.0
+
+    def maybe_recluster(self, force: bool = False) -> bool:
+        """Trigger an offline pass if the policy says the hierarchy is
+        stale (or `force`).  Async mode: returns immediately; a pass
+        already in flight absorbs the trigger (its successor will see the
+        accumulated dirty mass)."""
+        self._raise_pending_offline_error()
+        # liveness BEFORE settle: if the pass lands in between, settle still
+        # consumes its mass before any capture below — never after (a
+        # settle-then-liveness order lets a pass finishing in the gap get
+        # its consumed mass captured again and later double-settled)
+        busy = self._offline_thread is not None and self._offline_thread.is_alive()
+        self._settle()
+        pending = self._inflight_consumed if busy else 0.0
+        # an in-flight pass counts as "hierarchy coming": only mass it did
+        # NOT capture argues for another trigger
+        have = self._snapshot is not None or busy
+        if not force and not self.policy.stale(self.tree, have, pending=pending):
+            return False
+        if self.tree.n_points < 2:
+            return False
+        if busy:
+            # a trigger actually fired but a pass is in flight; it stays
+            # absorbed (the next pass sees the accumulated dirty mass)
+            self.stats["recluster_skipped_busy"] += 1
+            return False
+        # capture: dirty mass consumed by this pass + the leaf CF rows
+        dirty_captured = self.tree.dirty_mass
+        n_points = self.tree.n_points
+        ids, LS, SS, N = self.tree.leaf_cf_buffers()
+        if self.async_offline:
+            # snapshot the L gathered rows (O(L·d) — the summary, never the
+            # raw data) so the worker is immune to concurrent tree edits
+            self._inflight_consumed = dirty_captured
+            # advanced indexing already allocates fresh arrays — that IS
+            # the isolation copy
+            LSc, SSc, Nc = LS[ids], SS[ids], N[ids]
+            ids_c = np.arange(len(ids))
+            th = threading.Thread(
+                target=self._offline_pass_guarded,
+                args=(ids_c, LSc, SSc, Nc, n_points, dirty_captured),
+                daemon=True,
+            )
+            self._offline_thread = th
+            th.start()
+        else:
+            self._offline_pass(ids, LS, SS, N, n_points, dirty_captured)
+            self._settle()
+        return True
+
+    def _offline_pass_guarded(self, *args):
+        """Worker entry: capture failures for the main thread instead of
+        dying silently with the traceback lost to stderr; join()/poll()
+        re-raise so a failed pass can't masquerade as a fresh hierarchy."""
+        try:
+            self._offline_pass(*args)
+        except BaseException as e:  # noqa: BLE001 — transported, not handled
+            self._offline_error = e
+            self.stats["recluster_failures"] += 1
+
+    def _raise_pending_offline_error(self):
+        if self._offline_error is not None:
+            err, self._offline_error = self._offline_error, None
+            self._inflight_consumed = 0.0
+            raise RuntimeError("async offline re-cluster pass failed") from err
+
+    def _offline_pass(self, ids, LS, SS, N, n_points, dirty_captured):
+        t0 = time.perf_counter()
+        # one table derivation feeds both the device pipeline and the
+        # serve plane (rep/center live on in the snapshot)
+        rep, extent, n_b, center = ops.bubble_table(LS, SS, N, ids)
+        u, v, w = self.backend.offline_recluster_from_table(
+            rep, n_b, extent, self.min_pts
+        )
+        L = len(ids)
+        slt = single_linkage(u, v, w, L, weights=n_b)
+        ct = condense_tree(slt, min_cluster_size=self.min_cluster_size)
+        selected = extract_clusters(ct, method="eom")
+        labels = hdbscan_labels(ct, selected)
+        wall = time.perf_counter() - t0
+        self._version += 1
+        snap = ClusterSnapshot(
+            version=self._version,
+            n_points=int(n_points),
+            bubble_rep=rep,
+            bubble_n=n_b,
+            center=center,
+            bubble_labels=labels,
+            mst=(u, v, w),
+            condensed=ct,
+            selected=selected,
+            wall_seconds=wall,
+            dirty_consumed=float(dirty_captured),
+        )
+        # publish only; dirty-mass settlement happens on the main thread
+        # (updates that raced this pass stay dirty for the next one)
+        with self._snapshot_lock:
+            self._snapshot = snap
+        self.stats["recluster_count"] += 1
+        self.stats["offline_seconds_total"] += wall
+        return snap
+
+    def flush(self) -> ClusterSnapshot | None:
+        """Drain every queued request, finish any in-flight offline pass,
+        and force one final pass if anything is still dirty."""
+        while self.batcher:
+            self.poll()
+        self.join()
+        if self.tree.n_points >= 2 and (
+            self._snapshot is None or self.tree.dirty_mass > 0
+        ):
+            self.maybe_recluster(force=True)
+            self.join()
+        return self._snapshot
+
+    def join(self):
+        if self._offline_thread is not None:
+            self._offline_thread.join()
+            self._offline_thread = None
+        self._settle()
+        self._raise_pending_offline_error()
+
+    # -- serve plane -------------------------------------------------------
+
+    @property
+    def snapshot(self) -> ClusterSnapshot | None:
+        with self._snapshot_lock:
+            return self._snapshot
+
+    def query(self, X) -> np.ndarray:
+        """Cluster labels for query points from the cached hierarchy:
+        nearest-bubble assignment, label inherited (paper offline step 2).
+        Never blocks on ingestion or re-clustering; -1 (noise) for all
+        points when no snapshot exists yet."""
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        snap = self.snapshot
+        if snap is None or snap.n_bubbles == 0:
+            return np.full(X.shape[0], -1, dtype=np.int64)
+        a = np.asarray(
+            self.backend.assign(X - snap.center, snap.bubble_rep - snap.center)
+        )
+        return snap.bubble_labels[a]
+
+    def labels(self) -> tuple[np.ndarray, np.ndarray]:
+        """(pids, labels) for every currently-alive point, via the cached
+        snapshot (points inserted since the pass are assigned, not noise)."""
+        pids, X = self.tree.alive_points()
+        return pids, self.query(X)

@@ -7,7 +7,7 @@ ties; weight and the derived dendrogram are invariant)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dynamic import DynamicHDBSCAN
 from repro.core.hdbscan import core_distances, hdbscan, mutual_reachability, single_linkage

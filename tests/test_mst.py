@@ -3,7 +3,7 @@
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from scipy.sparse.csgraph import minimum_spanning_tree as scipy_mst
 
 from repro.core.mst import UnionFind, boruvka_dense, boruvka_jax, kruskal_edges
