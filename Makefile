@@ -2,12 +2,13 @@
 # checkout; see README.md for what each target covers.
 
 PYTHON ?= python
+PYTEST_FLAGS ?= -x -q
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test bench-smoke docs-links check
 
 test:
-	$(PYTHON) -m pytest -x -q
+	$(PYTHON) -m pytest $(PYTEST_FLAGS)
 
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --only fig8

@@ -1,4 +1,5 @@
-"""Fig. 8 (beyond-paper) — streaming engine ingestion throughput.
+"""Fig. 8 (beyond-paper) — streaming engine ingestion throughput and
+end-to-end re-cluster latency.
 
 Drives `serving.stream.StreamingClusterEngine` with a mixed
 insert/delete stream at request batch sizes {1, 64, 512} and reports
@@ -8,9 +9,16 @@ is the number a capacity planner needs; per-plane seconds are reported
 separately (offline passes also batch: fewer, larger re-clusters at
 bigger block sizes is half of where the speedup comes from).
 
-The claim under test: batched ingestion amortizes the per-op Python +
-descent overhead into one vectorized point→leaf assignment per block, so
-block-512 throughput should be ≥ 5× single-point throughput.
+Two claims under test:
+  * batched ingestion amortizes the per-op Python + descent overhead
+    into one vectorized point→leaf assignment per block, so block-512
+    throughput should be ≥ 5× single-point throughput;
+  * an ε-triggered re-cluster now returns *labels* (not MST edges) from
+    one fused device call (ISSUE 2), so the end-to-end pass latency —
+    reported here as `recluster_ms_mean` and A/B'd against the PR 1
+    host-hierarchy path (device edges → host single-linkage → condense
+    → extract) — drops on CPU and the host does no O(L) interpreted
+    work per pass.
 
   PYTHONPATH=src python -m benchmarks.fig8_streaming
 """
@@ -19,7 +27,14 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.hdbscan import (
+    condense_tree,
+    extract_clusters,
+    hdbscan_labels,
+    single_linkage,
+)
 from repro.data.synthetic import gaussian_mixtures
+from repro.kernels import ops
 from repro.serving.stream import StreamingClusterEngine
 
 from .common import Timer, emit, save_json
@@ -63,33 +78,123 @@ def _stream_once(X, batch: int, delete_frac: float = 0.25, epsilon: float = 0.2)
             ingest_s += t.seconds
             ops_done += ndel
     snap = eng.flush()
+    n_rec = eng.stats["recluster_count"]
     return {
         "updates": ops_done,
         "seconds": ingest_s,
         "updates_per_sec": ops_done / max(ingest_s, 1e-9),
-        "reclusters": eng.stats["recluster_count"],
+        "reclusters": n_rec,
         "offline_seconds": eng.stats["offline_seconds_total"],
+        # end-to-end (labels, not edges) latency of one offline pass
+        "recluster_ms_mean": eng.stats["offline_seconds_total"] / max(n_rec, 1) * 1e3,
         "final_bubbles": 0 if snap is None else snap.n_bubbles,
         "final_clusters": 0 if snap is None else snap.n_clusters,
+        "_engine": eng,
+    }
+
+
+def _recluster_ab(eng, iters: int = 15):
+    """End-to-end re-cluster latency A/B on the engine's final table:
+    the fused device pipeline (one jit'd call → labels + stabilities)
+    vs a faithful reconstruction of the PR 1 path — an *edges-only*
+    device call (d_m → Borůvka, exactly where PR 1 stopped) plus the
+    host-numpy hierarchy (single_linkage → condense_tree →
+    extract_clusters → hdbscan_labels).  Warm-up excluded, mean ms."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.mst import boruvka_jax
+
+    ids, LS, SS, N = eng.tree.leaf_cf_buffers()
+    rep, extent, n_b, _ = ops.bubble_table(LS, SS, N, ids)
+    L = len(ids)
+    mp = eng.min_pts
+
+    def fused():
+        return eng.backend.offline_recluster_from_table(
+            rep, n_b, extent, mp, min_cluster_size=eng.min_cluster_size
+        )
+
+    res = fused()  # warm-up (compile)
+    with Timer() as t_dev:
+        for _ in range(iters):
+            res = fused()
+
+    # PR 1's device stage: the same padded bucket, stopping at MST edges
+    use_ref = eng.backend.use_ref
+    Lp = max(8, 1 << (max(L - 1, 1)).bit_length())
+    repc = rep - (n_b @ rep / max(n_b.sum(), 1.0))[None, :]
+    repp = np.concatenate([repc, np.full((Lp - L, rep.shape[1]), 1e6)])
+    nbp = np.concatenate([n_b, np.zeros(Lp - L)])
+    extp = np.concatenate([extent, np.zeros(Lp - L)])
+
+    @jax.jit
+    def edges_only(r, nb, ex):
+        W = ops.bubble_mutual_reachability(r, nb, ex, mp, use_ref=use_ref)
+        pad = jnp.arange(r.shape[0]) >= L
+        W = jnp.where(pad[:, None] | pad[None, :], jnp.inf, W)
+        return boruvka_jax(W)
+
+    dargs = (
+        jnp.asarray(repp, jnp.float32),
+        jnp.asarray(nbp, jnp.float32),
+        jnp.asarray(extp, jnp.float32),
+    )
+
+    def pr1_edges():
+        eu, ev, ew, valid = jax.device_get(edges_only(*dargs))
+        return eu[valid], ev[valid], ew[valid]
+
+    u, v, w = pr1_edges()  # warm-up (compile)
+
+    def pr1_pass():
+        u, v, w = pr1_edges()
+        slt = single_linkage(u, v, w, L, weights=n_b)
+        ct = condense_tree(slt, min_cluster_size=eng.min_cluster_size)
+        return hdbscan_labels(ct, extract_clusters(ct, method="eom"))
+
+    pr1_pass()
+    with Timer() as t_pr1:
+        for _ in range(iters):
+            pr1_pass()
+    dev_ms = t_dev.seconds / iters * 1e3
+    pr1_ms = t_pr1.seconds / iters * 1e3
+    return {
+        "bubbles": L,
+        "device_labels_ms": dev_ms,
+        "pr1_host_hierarchy_ms": pr1_ms,
+        "speedup": pr1_ms / max(dev_ms, 1e-9),
     }
 
 
 def run(n: int = 6000, d: int = 4, seed: int = 0):
     X, _ = gaussian_mixtures(n, d=d, k=5, overlap=0.05, seed=seed)
     rep = {}
+    last_eng = None
     for b in BATCH_SIZES:
         r = _stream_once(X, b)
+        last_eng = r.pop("_engine")
         rep[b] = r
         emit(
             f"fig8/stream_batch{b}",
             r["seconds"] / max(r["updates"], 1),
-            f"{r['updates_per_sec']:.0f} upd/s, {r['reclusters']} reclusters",
+            f"{r['updates_per_sec']:.0f} upd/s, {r['reclusters']} reclusters, "
+            f"{r['recluster_ms_mean']:.1f} ms/pass",
         )
     speedup = rep[max(BATCH_SIZES)]["updates_per_sec"] / max(
         rep[1]["updates_per_sec"], 1e-9
     )
     emit("fig8/batched_vs_single_speedup", 0.0, f"{speedup:.1f}x")
     rep["speedup_512_vs_1"] = speedup
+    ab = _recluster_ab(last_eng)
+    emit(
+        "fig8/recluster_end_to_end",
+        ab["device_labels_ms"] / 1e3,
+        f"L={ab['bubbles']}: {ab['device_labels_ms']:.1f} ms fused vs "
+        f"{ab['pr1_host_hierarchy_ms']:.1f} ms PR1 host hierarchy "
+        f"({ab['speedup']:.2f}x)",
+    )
+    rep["recluster_ab"] = ab
     save_json("fig8_streaming", rep)
     return rep
 

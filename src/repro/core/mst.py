@@ -265,7 +265,8 @@ def boruvka_jax(W, max_rounds: int | None = None):
         def jump(m, _):
             return m[m], None
 
-        parent, _ = jax.lax.scan(jump, parent, None, length=jumps)
+        # unroll: the body is one gather — while-loop dispatch dominates
+        parent, _ = jax.lax.scan(jump, parent, None, length=jumps, unroll=4)
         new_labels = parent[labels]
         # append kept edges: slot via cumsum, rejects land in TRASH
         slot = n_edges + jnp.cumsum(keep.astype(jnp.int32)) - 1
@@ -283,6 +284,6 @@ def boruvka_jax(W, max_rounds: int | None = None):
     ew0 = jnp.zeros((n + 1,), dtype=W.dtype)
     valid0 = jnp.zeros((n + 1,), dtype=bool)
     state = (labels0, eu0, ev0, ew0, valid0, jnp.asarray(0, jnp.int32))
-    state, _ = jax.lax.scan(round_fn, state, None, length=max_rounds)
+    state, _ = jax.lax.scan(round_fn, state, None, length=max_rounds, unroll=2)
     _, eu, ev, ew, valid, _ = state
     return eu[:-1], ev[:-1], ew[:-1], valid[:-1]

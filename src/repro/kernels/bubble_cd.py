@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: tiled bubble core distances (Eq. 6).
+
+The jnp reference (`ref.bubble_core_distances`) materializes the full
+(L, L) bubble distance matrix and argsorts every row to run the
+weighted-rank scan.  This kernel is blocked over bubble *rows*: each grid
+step holds one (bn, L) distance strip in VMEM — nothing L×L ever exists
+in HBM — and replaces the sort with ``min_pts`` rounds of masked
+lexicographic-min extraction.
+
+Why extraction is enough: every real bubble carries mass n_b ≥ 1, so the
+cumulative-mass scan of Eq. 6 crosses ``min_pts`` within its first
+``min_pts`` entries in ascending-(distance, index) order.  Extracting the
+(d, j) minimum ``min_pts`` times visits exactly the prefix the sort
+would, with identical stable tie-breaking (lowest index wins), at
+O(min_pts · bn · L) VPU work and no sort primitive — which Mosaic does
+not provide.  ``min_pts`` is a static argument, so the loop unrolls.
+
+Padding contract (matches kernels.ops): pad rows sit at a far coordinate
+with n_b = 0 — if one is ever extracted it contributes nothing to the
+cumulative mass and cannot be the crossing bubble while total real mass
+≥ min_pts (callers clamp min_pts to the represented mass).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 8
+
+# Mask value for visited candidates: above any real distance (pads sit at
+# ~1e6·√d) but far below f32 max, so min() never overflows.
+_MASKED = 1e30
+
+
+def _bubble_cd_kernel(x_ref, y_ref, nb_ref, ext_ref, out_ref, *, bn, min_pts, dim):
+    x = x_ref[...]
+    y = y_ref[...]
+    L = y.shape[0]
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)
+    yy = jnp.sum(y * y, axis=-1, keepdims=True).T
+    xy = jax.lax.dot_general(
+        x, y, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d = jnp.sqrt(jnp.maximum(xx + yy - 2.0 * xy, 0.0))
+    i = pl.program_id(0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bn, L), 0) + i * bn
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, L), 1)
+    d = jnp.where(rows == cols, 0.0, d)  # self at distance 0 (Def. 1 convention)
+    nb = nb_ref[...].reshape(1, L)
+    ext = ext_ref[...].reshape(1, L)
+
+    mp = jnp.float32(min_pts)
+    visited = jnp.zeros((bn, L), dtype=bool)
+    csum = jnp.zeros((bn,), jnp.float32)
+    done = jnp.zeros((bn,), dtype=bool)
+    dstar = jnp.zeros((bn,), jnp.float32)
+    before = jnp.zeros((bn,), jnp.float32)
+    nb_c = jnp.ones((bn,), jnp.float32)
+    ext_c = jnp.zeros((bn,), jnp.float32)
+    m = jnp.zeros((bn,), jnp.float32)
+    nb_j = jnp.zeros((bn,), jnp.float32)
+    ext_j = jnp.zeros((bn,), jnp.float32)
+    for _ in range(min_pts):  # static unroll — min_pts bounds the scan prefix
+        masked = jnp.where(visited, _MASKED, d)
+        m = jnp.min(masked, axis=1)
+        at_min = masked == m[:, None]
+        j = jnp.min(jnp.where(at_min, cols, L), axis=1)  # stable tie-break
+        hit = cols == j[:, None]
+        nb_j = jnp.sum(jnp.where(hit, nb, 0.0), axis=1)
+        ext_j = jnp.sum(jnp.where(hit, ext, 0.0), axis=1)
+        new_csum = csum + nb_j
+        crossed = (~done) & (new_csum >= mp)
+        dstar = jnp.where(crossed, m, dstar)
+        before = jnp.where(crossed, csum, before)
+        nb_c = jnp.where(crossed, nb_j, nb_c)
+        ext_c = jnp.where(crossed, ext_j, ext_c)
+        done = done | crossed
+        csum = new_csum
+        visited = visited | hit
+    # mass < min_pts (upstream clamps; belt-and-braces): the last extracted
+    # candidate plays the boundary bubble, mirroring ref's farthest-entry
+    # fallback as closely as a min_pts-step prefix can
+    dstar = jnp.where(done, dstar, m)
+    before = jnp.where(done, before, csum - nb_j)
+    nb_c = jnp.where(done, nb_c, nb_j)
+    ext_c = jnp.where(done, ext_c, ext_j)
+
+    n_c = jnp.maximum(nb_c, 1.0)
+    k_resid = jnp.clip(jnp.maximum(mp - before, 1.0), 0.0, n_c)
+    nnd = jnp.power(k_resid / n_c, 1.0 / float(dim)) * ext_c
+    out_ref[...] = dstar + nnd
+
+
+@functools.partial(jax.jit, static_argnames=("min_pts", "dim", "bn", "interpret"))
+def bubble_core_distances(
+    rep: jax.Array,
+    n_b: jax.Array,
+    extent: jax.Array,
+    *,
+    min_pts: int,
+    dim: int,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """(L, dp), (L,), (L,) -> (L,) bubble core distances (Eq. 6).
+
+    ``dim`` is the TRUE feature dimensionality (the nnd exponent), which
+    differs from rep.shape[1] once features are lane-padded.
+    """
+    L, dpad = rep.shape
+    assert L % bn == 0, (L, bn)
+    grid = (L // bn,)
+    kernel = functools.partial(_bubble_cd_kernel, bn=bn, min_pts=int(min_pts), dim=int(dim))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((L, dpad), lambda i: (0, 0)),
+            pl.BlockSpec((L,), lambda i: (0,)),
+            pl.BlockSpec((L,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=interpret,
+    )(
+        rep.astype(jnp.float32),
+        rep.astype(jnp.float32),  # row block and full reference table
+        n_b.astype(jnp.float32),
+        extent.astype(jnp.float32),
+    )

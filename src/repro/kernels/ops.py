@@ -9,13 +9,17 @@ Responsibilities:
     CPU (`interpret=True` executes the kernel body in Python — the
     validation mode this container uses).  Set ``REPRO_FORCE_REF=1`` to
     bypass Pallas entirely (pure-jnp reference path).
-  * composition: `bubble_mutual_reachability` chains kernel pairwise →
-    jnp sort/cumsum (Eq. 6's weighted-rank scan) → fused mutual-reach
-    kernel, all under one jit.
+  * composition: `bubble_mutual_reachability` chains the tiled Eq. 6
+    core-distance strip kernel (jnp sort/cumsum scan on the reference
+    path) into the fused mutual-reach tile kernel; `offline_recluster`
+    extends the chain through Borůvka and the device hierarchy
+    (core.hierarchy_jax) so one jit'd call returns flat labels +
+    stabilities with no host numpy between the stages.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 
@@ -24,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import assign as _assign_k
+from . import bubble_cd as _bcd_k
 from . import knn as _knn_k
 from . import mutual_reach as _mr_k
 from . import pairwise as _pw_k
@@ -35,8 +40,10 @@ __all__ = [
     "knn",
     "core_distances",
     "assign",
+    "bubble_core_distances",
     "bubble_mutual_reachability",
     "bubble_table",
+    "OfflineClusterResult",
     "offline_recluster",
     "offline_recluster_from_table",
     "ClusterBackend",
@@ -168,16 +175,56 @@ def _bubble_cd(rep, n_b, extent, min_pts: int):
     return _ref.bubble_core_distances(rep, n_b, extent, min_pts, rep.shape[1])
 
 
+# Above this bubble-table size the (bn, L) strip + full (L, 128) table no
+# longer fit VMEM comfortably; fall back to the jnp scan.
+_BCD_VMEM_LIMIT = 1 << 13
+
+
+def bubble_core_distances(rep, n_b, extent, min_pts: int, use_ref: bool | None = None):
+    """Eq. 6 bubble core distances: tiled Pallas strip kernel (blockwise
+    over bubble rows, no L×L materialization) or the jnp sort+cumsum
+    reference under the backend switch."""
+    rep = jnp.asarray(rep)
+    n_b = jnp.asarray(n_b)
+    extent = jnp.asarray(extent)
+    L, d = rep.shape
+    if not isinstance(n_b, jax.core.Tracer):
+        # Eq. 6's scan can never reach min_pts beyond the represented
+        # mass (knn's k=min(k,m) rule; the strip kernel's extraction
+        # prefix relies on it).  Jitted callers see tracers and must
+        # pre-clamp — offline_recluster_from_table does.
+        min_pts = max(1, min(int(min_pts), int(jnp.sum(n_b))))
+    if _resolve_ref(use_ref) or L > _BCD_VMEM_LIMIT:
+        return _bubble_cd(rep, n_b, extent, min_pts)
+    # shrink blocks toward tiny tables, floor at the f32 sublane count
+    bn = max(8, min(_bcd_k.DEFAULT_BN, 1 << (max(L - 1, 1)).bit_length()))
+    p = (-L) % bn
+    if p:
+        # pad rows far away with zero mass: never extracted before the
+        # scan crosses min_pts, never the crossing bubble
+        far = jnp.full((p, d), _PAD_COORD, dtype=rep.dtype)
+        repp = jnp.concatenate([rep, far], axis=0)
+        nbp = jnp.concatenate([n_b, jnp.zeros((p,), n_b.dtype)])
+        extp = jnp.concatenate([extent, jnp.zeros((p,), extent.dtype)])
+    else:
+        repp, nbp, extp = rep, n_b, extent
+    cd = _bcd_k.bubble_core_distances(
+        _pad_feats(repp), nbp, extp, min_pts=min_pts, dim=d, bn=bn,
+        interpret=_interpret(),
+    )
+    return cd[:L]
+
+
 def bubble_mutual_reachability(rep, n_b, extent, min_pts: int, use_ref: bool | None = None):
     """Offline phase: (L,L) bubble d_m matrix (Eqs. 6–7).
 
-    The Eq. 6 weighted-rank scan (sort + cumsum) is jnp (sort-dominated,
-    not MXU work); the output matrix uses the fused mutual-reach kernel.
+    Pallas path: the tiled Eq. 6 strip kernel feeds the fused
+    mutual-reach tile kernel; jnp path: the sort+cumsum reference scan.
     """
     rep = jnp.asarray(rep)
     n_b = jnp.asarray(n_b)
     extent = jnp.asarray(extent)
-    cd = _bubble_cd(rep, n_b, extent, min_pts)
+    cd = bubble_core_distances(rep, n_b, extent, min_pts, use_ref=use_ref)
     return mutual_reachability(rep, rep, cd, cd, zero_diag=True, use_ref=use_ref)
 
 
@@ -253,14 +300,23 @@ def bubble_table(LS, SS, N, ids):
     return rep, extent, Ng, center
 
 
-@functools.partial(jax.jit, static_argnames=("min_pts", "use_ref"))
-def _offline_pipeline(rep, n_b, extent, n_valid, min_pts: int, use_ref: bool):
-    """Device-side offline pass over a size-bucketed bubble table: (Lp, Lp)
-    mutual-reachability matrix (Eqs. 6–7) then Borůvka, under ONE jit so
-    XLA fuses the epilogues and nothing syncs to host until the fixed-size
-    MST edge buffers come back.  Rows ≥ n_valid are padding (weight 0,
-    reps at _PAD_COORD): they perturb nothing real, and their W rows/cols
-    are forced to +inf so they stay isolated components in the MST."""
+@functools.partial(
+    jax.jit, static_argnames=("min_pts", "use_ref", "method", "allow_single")
+)
+def _offline_pipeline(
+    rep, n_b, extent, n_valid, mcs, min_pts: int, use_ref: bool,
+    method: str = "eom", allow_single: bool = False,
+):
+    """Device-side offline pass over a size-bucketed bubble table, fused
+    end to end under ONE jit: (Lp, Lp) mutual-reachability matrix (Eqs.
+    6–7) → Borůvka → single-linkage → condensed tree → stability
+    extraction → flat labels.  Nothing syncs to host until the caller
+    pulls the fixed-size label/stability buffers back.  Rows ≥ n_valid
+    are padding (weight 0, reps at _PAD_COORD): their W rows/cols are
+    forced to +inf so they stay isolated in the MST, and the hierarchy
+    stage re-attaches them at PAD_DIST where they are invisible to
+    stabilities and labels (core.hierarchy_jax docstring)."""
+    from repro.core.hierarchy_jax import hierarchy_fixed
     from repro.core.mst import boruvka_jax
 
     W = bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=use_ref)
@@ -268,11 +324,82 @@ def _offline_pipeline(rep, n_b, extent, n_valid, min_pts: int, use_ref: bool):
     is_pad = iota >= n_valid
     W = jnp.where(is_pad[:, None] | is_pad[None, :], jnp.inf, W)
     eu, ev, ew, valid = boruvka_jax(W)
-    return W, eu, ev, ew, valid
+    slt, ct, ex = hierarchy_fixed(
+        eu, ev, ew, valid, n_valid, n_b, mcs,
+        method=method, allow_single_cluster=allow_single,
+    )
+    return {
+        "W": W,
+        "eu": eu, "ev": ev, "ew": ew, "valid": valid,
+        "labels": ex.labels,
+        "stability": ex.stability,
+        "selected": ex.selected,
+        "n_clusters": ex.n_clusters,
+        "point_parent": ct.point_parent,
+        "point_lambda": ct.point_lambda,
+        "cluster_parent": ct.cluster_parent,
+        "cluster_birth": ct.cluster_birth,
+        "cluster_weight": ct.cluster_weight,
+        "n_labels": ct.n_labels,
+    }
+
+
+@dataclasses.dataclass
+class OfflineClusterResult:
+    """One fused offline pass: flat labels + the arrays behind them.
+
+    ``labels[k]``'s cluster has stability ``stabilities[labels[k]]`` —
+    flat ids are the ascending-rank of selected condensed labels.  The
+    condensed tree is kept in the device layout (label 0 = root; see
+    core.hierarchy_jax); ``to_condensed()`` re-emits it in the host
+    oracle's ``CondensedTree`` layout for inspection and tests.
+    """
+
+    labels: np.ndarray  # (L,) int64 flat bubble labels, -1 noise
+    stabilities: np.ndarray  # (n_clusters,) f64 per selected cluster
+    mst: tuple  # (u, v, w) host numpy MST edge arrays
+    weights: np.ndarray  # (L,) leaf weights (bubble masses)
+    min_cluster_size: float
+    point_parent: np.ndarray  # (L,) condensed label per leaf
+    point_lambda: np.ndarray  # (L,)
+    cluster_parent: np.ndarray  # (K,) condensed label of each label's parent
+    cluster_birth: np.ndarray  # (K,)
+    cluster_weight: np.ndarray  # (K,)
+    selected: np.ndarray  # (K,) bool — flat-extraction winners
+    all_stabilities: np.ndarray  # (K,) stability of every condensed label
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.stabilities.shape[0])
+
+    @property
+    def n_bubbles(self) -> int:
+        return int(self.labels.shape[0])
+
+    def to_condensed(self):
+        """Device arrays → host ``hdbscan.CondensedTree`` (oracle layout:
+        leaves 0..L-1, cluster ids L + device label, root = L)."""
+        from repro.core.hdbscan import CondensedTree
+
+        L = self.n_bubbles
+        K = int(self.cluster_parent.shape[0])
+        lbl = np.arange(1, K, dtype=np.int64)
+        parent = np.concatenate([L + self.cluster_parent[1:], L + self.point_parent])
+        child = np.concatenate([L + lbl, np.arange(L, dtype=np.int64)])
+        lam = np.concatenate([self.cluster_birth[1:], self.point_lambda])
+        w = np.concatenate([self.cluster_weight[1:], self.weights])
+        return CondensedTree(
+            parent=parent.astype(np.int64),
+            child=child.astype(np.int64),
+            lambda_val=lam.astype(np.float64),
+            child_weight=w.astype(np.float64),
+            n_leaves=L,
+        )
 
 
 def offline_recluster(
-    LS, SS, N, ids, min_pts: int, use_ref: bool | None = None, return_w: bool = False
+    LS, SS, N, ids, min_pts: int, min_cluster_size: float | None = None,
+    use_ref: bool | None = None, return_w: bool = False,
 ):
     """Offline re-clustering over leaf CF buffers: `bubble_table` (f64
     host derivation, Eqs. 3–4) + `offline_recluster_from_table`.  Callers
@@ -281,38 +408,48 @@ def offline_recluster(
     derivation happens once."""
     rep, extent, Ng, _ = bubble_table(LS, SS, N, ids)
     return offline_recluster_from_table(
-        rep, Ng, extent, min_pts, use_ref=use_ref, return_w=return_w
+        rep, Ng, extent, min_pts, min_cluster_size=min_cluster_size,
+        use_ref=use_ref, return_w=return_w,
     )
 
 
 def offline_recluster_from_table(
-    rep, n_b, extent, min_pts: int, use_ref: bool | None = None, return_w: bool = False
+    rep, n_b, extent, min_pts: int, min_cluster_size: float | None = None,
+    use_ref: bool | None = None, return_w: bool = False,
+    method: str = "eom", allow_single_cluster: bool = False,
 ):
     """The streaming engine's offline hot path, from a derived bubble table.
 
+    ONE compiled call returns flat labels + stabilities: d_m (Eqs. 6–7)
+    → Borůvka → single-linkage → condense → extract all run on device
+    (core.hierarchy_jax); the host only mean-centers, pads, and unwraps
+    the fixed-size output buffers — no numpy in the hierarchy itself.
+
     Host side: mean-center (d_m is translation-invariant; the f32 device
     ‖x‖²+‖y‖²−2xy tiles cancel catastrophically off-origin) and pad to a
-    power-of-two bucket so the jit'd d_m + Borůvka pipeline recompiles per
-    bucket, not per leaf count, as the stream grows.
+    power-of-two bucket so the jit'd pipeline recompiles per bucket, not
+    per leaf count, as the stream grows.
 
     Args:
       rep, n_b, extent: (L, d)/(L,)/(L,) float64 bubble table (Eqs. 3–4),
         e.g. from `bubble_table`.
       min_pts: HDBSCAN density parameter.
+      min_cluster_size: flat-extraction threshold (None = min_pts).
       use_ref: backend override (None = env-var policy).
       return_w: also materialize the dense (L, L) d_m matrix on host.
-        Off by default — the streaming engine only needs the edges, and at
-        large L the matrix transfer dwarfs the edge transfer.
+        Off by default — at large L the matrix transfer dwarfs everything.
+      method, allow_single_cluster: flat-extraction policy (oracle-
+        compatible "eom"/"leaf").
 
     Returns:
-      (u, v, w) MST edge arrays (host numpy, masked to the valid edges);
-      with ``return_w=True``, ``(W, (u, v, w))``.
+      OfflineClusterResult; with ``return_w=True``, ``(W, result)``.
     """
     use = _resolve_ref(use_ref)
     rep = np.asarray(rep, dtype=np.float64)
     Ng = np.asarray(n_b, dtype=np.float64)
     extent = np.asarray(extent, dtype=np.float64)
     L = int(rep.shape[0])
+    mcs = float(min_pts if min_cluster_size is None else min_cluster_size)
     rep = rep - ((Ng @ rep) / max(Ng.sum(), 1.0))[None, :]
     # if the whole summary represents < min_pts points, Eq. 6's weighted
     # scan can never reach min_pts and the fallback would land on a
@@ -326,23 +463,45 @@ def offline_recluster_from_table(
         extent = np.concatenate([extent, np.zeros(pad)])
     else:
         Ng_p = Ng
-    W, eu, ev, ew, valid = _offline_pipeline(
+    out = _offline_pipeline(
         jnp.asarray(rep, jnp.float32),
         jnp.asarray(Ng_p, jnp.float32),
         jnp.asarray(extent, jnp.float32),
         jnp.asarray(L, jnp.int32),
+        jnp.asarray(mcs, jnp.float32),
         int(min_pts),
         use,
+        method,
+        bool(allow_single_cluster),
     )
-    keep = np.asarray(valid)
+    W_dev = out.pop("W")
+    out = jax.device_get(out)  # ONE host sync for all result buffers
+    keep = out["valid"]
     edges = (
-        np.asarray(eu, dtype=np.int64)[keep],
-        np.asarray(ev, dtype=np.int64)[keep],
-        np.asarray(ew, dtype=np.float64)[keep],
+        out["eu"].astype(np.int64)[keep],
+        out["ev"].astype(np.int64)[keep],
+        out["ew"].astype(np.float64)[keep],
+    )
+    K = int(out["n_labels"])
+    sel = out["selected"][:K]
+    all_stab = out["stability"].astype(np.float64)[:K]
+    result = OfflineClusterResult(
+        labels=out["labels"].astype(np.int64)[:L],
+        stabilities=all_stab[sel],
+        mst=edges,
+        weights=Ng,
+        min_cluster_size=mcs,
+        point_parent=out["point_parent"].astype(np.int64)[:L],
+        point_lambda=out["point_lambda"].astype(np.float64)[:L],
+        cluster_parent=out["cluster_parent"].astype(np.int64)[:K],
+        cluster_birth=out["cluster_birth"].astype(np.float64)[:K],
+        cluster_weight=out["cluster_weight"].astype(np.float64)[:K],
+        selected=sel,
+        all_stabilities=all_stab,
     )
     if return_w:
-        return np.asarray(W)[:L, :L], edges
-    return edges
+        return np.asarray(W_dev)[:L, :L], result
+    return result
 
 
 class ClusterBackend:
@@ -382,17 +541,28 @@ class ClusterBackend:
     def assign(self, x, reps):
         return assign(x, reps, use_ref=self.use_ref)
 
+    def bubble_core_distances(self, rep, n_b, extent, min_pts: int):
+        return bubble_core_distances(rep, n_b, extent, min_pts, use_ref=self.use_ref)
+
     def bubble_mutual_reachability(self, rep, n_b, extent, min_pts: int):
         return bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=self.use_ref)
 
-    def offline_recluster(self, LS, SS, N, ids, min_pts: int, return_w: bool = False):
+    def offline_recluster(
+        self, LS, SS, N, ids, min_pts: int,
+        min_cluster_size: float | None = None, return_w: bool = False,
+    ):
         return offline_recluster(
-            LS, SS, N, ids, min_pts, use_ref=self.use_ref, return_w=return_w
+            LS, SS, N, ids, min_pts, min_cluster_size=min_cluster_size,
+            use_ref=self.use_ref, return_w=return_w,
         )
 
-    def offline_recluster_from_table(self, rep, n_b, extent, min_pts: int, return_w: bool = False):
+    def offline_recluster_from_table(
+        self, rep, n_b, extent, min_pts: int,
+        min_cluster_size: float | None = None, return_w: bool = False,
+    ):
         return offline_recluster_from_table(
-            rep, n_b, extent, min_pts, use_ref=self.use_ref, return_w=return_w
+            rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
+            use_ref=self.use_ref, return_w=return_w,
         )
 
 

@@ -19,13 +19,14 @@ calls into a serving loop with three planes:
                   when dirty/total ≥ ε.  The pass is
                   `kernels.ops.offline_recluster`: the host derives the
                   L-row bubble table from the tree's SoA buffers (O(L·d)
-                  in f64 — the summary, never the raw points), then a
-                  single jit'd bubble-d_m (Eqs. 6–7) → Borůvka pipeline
-                  runs on device over a size-bucketed table (recompiles
-                  per bucket, not per leaf count).  Async mode runs it in
-                  a background thread against a snapshot of those rows.
-                  Hierarchy condensation (host-side, O(L)) reuses
-                  core.hdbscan's machinery.
+                  in f64 — the summary, never the raw points), then ONE
+                  jit'd device pipeline — bubble d_m (Eqs. 6–7) →
+                  Borůvka → single-linkage → condensed tree → stability
+                  extraction (core.hierarchy_jax) — returns flat labels
+                  + stabilities over a size-bucketed table (recompiles
+                  per bucket, not per leaf count; no host numpy between
+                  the stages).  Async mode runs it in a background
+                  thread against a snapshot of those rows.
 
   serve plane     `query(X)` labels points against the *cached* snapshot —
                   nearest-bubble assignment through the engine's backend —
@@ -45,13 +46,6 @@ import time
 import numpy as np
 
 from repro.core.bubble_tree import BubbleTree
-from repro.core.hdbscan import (
-    CondensedTree,
-    condense_tree,
-    extract_clusters,
-    hdbscan_labels,
-    single_linkage,
-)
 from repro.kernels import ops
 
 from .engine import HostBatcher
@@ -114,13 +108,21 @@ class ClusterSnapshot:
     bubble_n: np.ndarray  # (L,) represented mass
     center: np.ndarray  # (d,) summary centroid — assignments are centered
     #   before the f32 device kernel (off-origin cancellation, DESIGN.md §2)
-    bubble_labels: np.ndarray  # (L,) flat cluster labels, -1 noise
-    mst: tuple  # (u, v, w) over bubbles
-    condensed: CondensedTree
-    selected: list
+    result: ops.OfflineClusterResult  # full fused-pass output (labels,
+    #   stabilities, condensed-tree arrays — see ops.OfflineClusterResult)
     wall_seconds: float
     dirty_consumed: float = 0.0  # dirty mass this pass absorbed (settled
     #   against the tree by the MAIN thread — see _settle)
+
+    @property
+    def bubble_labels(self) -> np.ndarray:
+        """(L,) flat cluster labels, -1 noise."""
+        return self.result.labels
+
+    @property
+    def mst(self) -> tuple:
+        """(u, v, w) MST edge arrays over bubbles."""
+        return self.result.mst
 
     @property
     def n_bubbles(self) -> int:
@@ -129,6 +131,17 @@ class ClusterSnapshot:
     @property
     def n_clusters(self) -> int:
         return len(set(self.bubble_labels.tolist()) - {-1})
+
+    @property
+    def stabilities(self) -> np.ndarray:
+        """Per-flat-cluster stability (index = label id)."""
+        return self.result.stabilities
+
+    @property
+    def condensed(self):
+        """Host-layout CondensedTree (rebuilt on demand from the device
+        arrays; the hot path never constructs it)."""
+        return self.result.to_condensed()
 
     @property
     def total_mst_weight(self) -> float:
@@ -383,14 +396,11 @@ class StreamingClusterEngine:
         # one table derivation feeds both the device pipeline and the
         # serve plane (rep/center live on in the snapshot)
         rep, extent, n_b, center = ops.bubble_table(LS, SS, N, ids)
-        u, v, w = self.backend.offline_recluster_from_table(
-            rep, n_b, extent, self.min_pts
+        # the whole hierarchy — d_m → MST → single-linkage → condense →
+        # extract — is ONE jit'd device call returning labels+stabilities
+        res = self.backend.offline_recluster_from_table(
+            rep, n_b, extent, self.min_pts, min_cluster_size=self.min_cluster_size
         )
-        L = len(ids)
-        slt = single_linkage(u, v, w, L, weights=n_b)
-        ct = condense_tree(slt, min_cluster_size=self.min_cluster_size)
-        selected = extract_clusters(ct, method="eom")
-        labels = hdbscan_labels(ct, selected)
         wall = time.perf_counter() - t0
         self._version += 1
         snap = ClusterSnapshot(
@@ -399,10 +409,7 @@ class StreamingClusterEngine:
             bubble_rep=rep,
             bubble_n=n_b,
             center=center,
-            bubble_labels=labels,
-            mst=(u, v, w),
-            condensed=ct,
-            selected=selected,
+            result=res,
             wall_seconds=wall,
             dirty_consumed=float(dirty_captured),
         )

@@ -28,3 +28,17 @@ def make_blobs(rng, centers=((0.0, 0.0), (6.0, 0.0), (0.0, 6.0)), n_per=60, d=2,
 @pytest.fixture
 def blobs(rng):
     return make_blobs(rng)
+
+
+def assert_same_partition(a, b, msg=""):
+    """Labelings equal up to permutation; noise (-1) must map to noise."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    assert a.shape == b.shape, f"{msg} shape {a.shape} != {b.shape}"
+    fwd, bwd = {}, {}
+    for i, (x, y) in enumerate(zip(a.tolist(), b.tolist())):
+        assert (x == -1) == (y == -1), f"{msg} noise mismatch at {i}: {x} vs {y}"
+        if x == -1:
+            continue
+        assert fwd.setdefault(x, y) == y, f"{msg} label {x} maps to {fwd[x]} and {y}"
+        assert bwd.setdefault(y, x) == x, f"{msg} label {y} maps from {bwd[y]} and {x}"

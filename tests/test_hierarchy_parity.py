@@ -1,0 +1,228 @@
+"""Differential suite for the fused device hierarchy (ISSUE 2 tentpole).
+
+Three independent implementations of the same math are run against each
+other on four input families (blobs / moons / uniform / duplicate-heavy):
+
+  device   `ops.offline_recluster_from_table` — ONE jit'd call: d_m →
+           Borůvka → single-linkage → condense → extract (f32, padded
+           buckets, both the jnp and the Pallas-kernel backend),
+  oracle   `core.hdbscan` — the sequential host reference (f64), fed the
+           *device's* W so the geometry is bit-identical and any
+           disagreement is the hierarchy's fault, plus a full-f64 run on
+           its own geometry,
+  sklearn  `sklearn.cluster.HDBSCAN` — an outside-the-repo reference
+           (skips cleanly when scikit-learn is absent).
+
+Raw points are pushed through the *bubble* pipeline as unit bubbles
+(n_b = 1, extent = 0), under which Eq. 6 degenerates to the classical
+point core distance — so the same fused code path is exercised for both
+the weighted offline phase and plain HDBSCAN.
+
+Contracts: labels equal up to permutation (noise to noise), stabilities
+within 1e-5.  Duplicate-heavy inputs produce λ = 1/0 rows where the
+oracle clamps at 1e308 and the device at hierarchy_jax.MAX_LAMBDA; both
+are "infinite density" — stabilities are compared below a shared ceiling
+and the over-ceiling sets must coincide.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import assert_same_partition, make_blobs
+from repro.core.bubble_tree import BubbleTree
+from repro.core.hdbscan import _stabilities, hdbscan
+from repro.core.hierarchy_jax import MAX_LAMBDA
+from repro.kernels import ops
+
+try:
+    from sklearn.cluster import HDBSCAN as SkHDBSCAN
+    from sklearn.datasets import make_moons
+
+    HAVE_SKLEARN = True
+except ModuleNotFoundError:  # minimal containers: sklearn leg skips
+    HAVE_SKLEARN = False
+
+BACKENDS = [True, False]  # use_ref: jnp reference / Pallas kernels
+STAB_CEILING = 1e10  # below MAX_LAMBDA·1: finite-stability comparison zone
+
+
+def _dataset(name, rng):
+    """(X, min_pts, min_cluster_size) per input family."""
+    if name == "blobs":
+        X, _ = make_blobs(rng, n_per=70)
+        return X, 8, 8.0
+    if name == "moons":
+        if not HAVE_SKLEARN:
+            pytest.skip("moons generator needs scikit-learn")
+        X, _ = make_moons(n_samples=200, noise=0.06, random_state=3)
+        return np.asarray(X, dtype=np.float64), 8, 10.0
+    if name == "uniform":
+        return rng.uniform(size=(150, 3)), 6, 8.0
+    # duplicate-heavy: 30 sites, 160 points → many zero-distance edges
+    base = rng.normal(size=(30, 2))
+    return base[rng.integers(0, 30, size=160)], 5, 6.0
+
+
+def _device_on_points(X, min_pts, mcs, use_ref):
+    """Raw points as unit bubbles through the fused pipeline."""
+    n = X.shape[0]
+    return ops.offline_recluster_from_table(
+        X, np.ones(n), np.zeros(n), min_pts,
+        min_cluster_size=mcs, use_ref=use_ref, return_w=True,
+    )
+
+
+def _oracle_stabilities(result):
+    """Sorted selected-cluster stabilities of a host HDBSCANResult."""
+    stab = _stabilities(result.condensed)
+    return np.sort([stab[c] for c in result.selected])
+
+
+def _assert_stabilities_match(dev_stab, oracle_stab):
+    dev_stab = np.sort(dev_stab)
+    assert len(dev_stab) == len(oracle_stab)
+    lo_d, lo_o = dev_stab < STAB_CEILING, oracle_stab < STAB_CEILING
+    # infinite-density clusters (λ-clamp zone) must coincide as a set...
+    np.testing.assert_array_equal(lo_d, lo_o)
+    # ...and the finite ones agree to 1e-5
+    np.testing.assert_allclose(dev_stab[lo_d], oracle_stab[lo_o], rtol=1e-5, atol=1e-5)
+
+
+class TestPointParity:
+    """Device pipeline vs host oracle vs sklearn on raw points."""
+
+    @pytest.mark.parametrize("use_ref", BACKENDS, ids=["jnp", "pallas"])
+    @pytest.mark.parametrize("name", ["blobs", "moons", "uniform", "dups"])
+    def test_labels_match_oracle_same_geometry(self, rng, name, use_ref):
+        """Fed the device's own W, the f64 oracle must produce the exact
+        same partition — isolates the hierarchy from f32 geometry."""
+        X, mp, mcs = _dataset(name, rng)
+        W, res = _device_on_points(X, mp, mcs, use_ref)
+        oracle = hdbscan(
+            X, min_pts=mp, min_cluster_size=mcs,
+            precomputed=W.astype(np.float64), weights=np.ones(X.shape[0]),
+        )
+        assert_same_partition(res.labels, oracle.labels, msg=f"{name}:")
+        _assert_stabilities_match(res.stabilities, _oracle_stabilities(oracle))
+
+    @pytest.mark.parametrize("name", ["blobs", "moons", "uniform", "dups"])
+    def test_labels_match_full_f64_oracle(self, rng, name):
+        """End-to-end: device f32 geometry + hierarchy vs the oracle's own
+        f64 geometry.  Exact on these fixed seeds (noise boundaries are
+        not knife-edge)."""
+        X, mp, mcs = _dataset(name, rng)
+        _, res = _device_on_points(X, mp, mcs, use_ref=True)
+        oracle = hdbscan(X, min_pts=mp, min_cluster_size=mcs)
+        assert_same_partition(res.labels, oracle.labels, msg=f"{name}:")
+
+    @pytest.mark.skipif(not HAVE_SKLEARN, reason="scikit-learn not installed")
+    @pytest.mark.parametrize("name", ["blobs", "moons", "dups"])
+    def test_labels_match_sklearn(self, rng, name):
+        X, mp, mcs = _dataset(name, rng)
+        _, res = _device_on_points(X, mp, mcs, use_ref=True)
+        sk = SkHDBSCAN(min_samples=mp, min_cluster_size=int(mcs)).fit(X)
+        assert_same_partition(res.labels, sk.labels_, msg=f"{name}:")
+
+    @pytest.mark.skipif(not HAVE_SKLEARN, reason="scikit-learn not installed")
+    def test_sklearn_uniform_agreement(self, rng):
+        """Uniform noise sits on eom decision boundaries where sklearn's
+        tie conventions differ by O(1) points; demand ≥97% agreement and
+        an identical cluster count instead of exact equality."""
+        X, mp, mcs = _dataset("uniform", rng)
+        _, res = _device_on_points(X, mp, mcs, use_ref=True)
+        sk = SkHDBSCAN(min_samples=mp, min_cluster_size=int(mcs)).fit(X)
+        assert res.n_clusters == len(set(sk.labels_.tolist()) - {-1})
+        agree = np.mean((res.labels == -1) == (sk.labels_ == -1))
+        assert agree >= 0.97
+
+
+class TestBubbleParity:
+    """Weighted parity on real bubble tables from a BubbleTree."""
+
+    @pytest.mark.parametrize("use_ref", BACKENDS, ids=["jnp", "pallas"])
+    def test_weighted_bubbles_match_oracle(self, rng, use_ref):
+        X, _ = make_blobs(rng, n_per=80, d=3)
+        bt = BubbleTree(dim=3, compression=0.15)
+        bt.insert_block(X)
+        ids, LS, SS, N = bt.leaf_cf_buffers()
+        rep, extent, n_b, _ = ops.bubble_table(LS, SS, N, ids)
+        W, res = ops.offline_recluster_from_table(
+            rep, n_b, extent, 8, min_cluster_size=8.0,
+            use_ref=use_ref, return_w=True,
+        )
+        oracle = hdbscan(
+            rep, min_pts=8, min_cluster_size=8.0,
+            precomputed=W.astype(np.float64), weights=n_b,
+        )
+        assert_same_partition(res.labels, oracle.labels)
+        _assert_stabilities_match(res.stabilities, _oracle_stabilities(oracle))
+        # MST weight is the hierarchy invariant both engines must share
+        assert res.mst[2].sum() == pytest.approx(oracle.total_mst_weight, rel=1e-5)
+
+    @pytest.mark.parametrize("use_ref", BACKENDS, ids=["jnp", "pallas"])
+    def test_off_origin_bubbles(self, rng, use_ref):
+        """Mean-centering must keep the fused path exact off-origin."""
+        X, _ = make_blobs(rng, n_per=60)
+        bt = BubbleTree(dim=2, compression=0.15)
+        bt.insert_block(X + 1e4)
+        ids, LS, SS, N = bt.leaf_cf_buffers()
+        res = ops.offline_recluster(LS, SS, N, ids, 8, use_ref=use_ref)
+        rep, extent, n_b, _ = ops.bubble_table(LS, SS, N, ids)
+        oracle = hdbscan(rep, min_pts=8, min_cluster_size=8.0, weights=n_b)
+        assert_same_partition(res.labels, oracle.labels)
+
+
+class TestResultContract:
+    """Shape/semantics contracts of OfflineClusterResult."""
+
+    def test_labels_index_stabilities(self, rng):
+        X, _ = make_blobs(rng, n_per=50)
+        _, res = _device_on_points(X, 8, 8.0, use_ref=True)
+        assert res.n_clusters >= 2
+        assert res.stabilities.shape == (res.n_clusters,)
+        assert (res.stabilities > 0).all()
+        assert set(np.unique(res.labels)) <= set(range(-1, res.n_clusters))
+
+    def test_condensed_tree_mass_conservation(self, rng):
+        """Every leaf is emitted exactly once: point-row weights sum to
+        the total mass (the oracle's own invariant, on device output)."""
+        X, _ = make_blobs(rng, n_per=50, d=3)
+        bt = BubbleTree(dim=3, compression=0.2)
+        bt.insert_block(X)
+        ids, LS, SS, N = bt.leaf_cf_buffers()
+        res = ops.offline_recluster(LS, SS, N, ids, 6, use_ref=True)
+        ct = res.to_condensed()
+        point_rows = ct.child < ct.n_leaves
+        assert np.isclose(
+            ct.child_weight[point_rows].sum(), res.weights.sum(), rtol=1e-6
+        )
+        # cluster ids referenced by rows all exist and root is n_leaves
+        assert ct.parent.min() == ct.n_leaves
+
+    def test_single_bubble_is_noise(self):
+        res = ops.offline_recluster_from_table(
+            np.zeros((1, 2)), np.ones(1) * 50.0, np.zeros(1), 5, use_ref=True
+        )
+        assert res.labels.tolist() == [-1]
+        assert res.n_clusters == 0
+
+    def test_bubble_cd_min_pts_above_mass_backend_parity(self, rng):
+        """min_pts beyond the represented mass must clamp on BOTH
+        backends of `ops.bubble_core_distances` — the strip kernel's
+        extraction prefix otherwise saturates at its mask sentinel
+        (regression: summarizer-path calls don't pre-clamp)."""
+        rep = rng.normal(size=(5, 2))
+        n_b = np.ones(5)
+        ext = np.full(5, 0.1)
+        cd_ref = np.asarray(ops.bubble_core_distances(rep, n_b, ext, 20, use_ref=True))
+        cd_pal = np.asarray(ops.bubble_core_distances(rep, n_b, ext, 20, use_ref=False))
+        assert cd_ref.max() < 1e3 and cd_pal.max() < 1e3  # data scale, no sentinel
+        np.testing.assert_allclose(cd_pal, cd_ref, rtol=1e-5, atol=1e-5)
+
+    def test_max_lambda_clamps_duplicates(self, rng):
+        """Zero-distance merges must clamp at MAX_LAMBDA, not overflow."""
+        X = np.repeat(rng.normal(size=(4, 2)), 20, axis=0)
+        _, res = _device_on_points(X, 5, 5.0, use_ref=True)
+        assert np.isfinite(res.point_lambda).all()
+        assert res.point_lambda.max() <= MAX_LAMBDA
+        assert np.isfinite(res.all_stabilities).all()

@@ -1,0 +1,109 @@
+"""Property tests for the device union-find single-linkage and the fused
+hierarchy (ISSUE 2 satellite) — run via tests/_hypothesis_compat, so they
+execute with real `hypothesis` when installed and with the deterministic
+mini-engine otherwise.
+
+Random edge lists → tree invariants:
+  * exactly n − 1 merges, in ascending (monotone) distance order,
+  * every merge's weight is the sum of its children's subtree weights,
+  * the final merge carries the total leaf weight (mass conservation),
+  * exact agreement with the host oracle `hdbscan.single_linkage`
+    (identical stable tie-breaking, so the records match row for row).
+"""
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import hierarchy_jax as hj
+from repro.core.hdbscan import single_linkage
+from repro.core.mst import boruvka_jax
+
+
+def _random_tree(rng, n, weighted=False, tie_heavy=False):
+    """Random spanning tree over n nodes with shuffled edge order."""
+    parent = np.array([rng.integers(0, i) for i in range(1, n)], dtype=np.int64)
+    child = np.arange(1, n, dtype=np.int64)
+    if tie_heavy:  # few distinct weights → lots of sort ties
+        w = rng.choice([0.5, 1.0, 2.0], size=n - 1)
+    else:
+        w = rng.uniform(0.1, 10.0, size=n - 1)
+    perm = rng.permutation(n - 1)
+    u, v, w = parent[perm], child[perm], w[perm]
+    flip = rng.random(n - 1) < 0.5  # undirected: random endpoint order
+    u, v = np.where(flip, v, u), np.where(flip, u, v)
+    weights = rng.integers(1, 9, size=n).astype(np.float64) if weighted else None
+    return u, v, w, weights
+
+
+class TestSingleLinkageProperties:
+    @given(st.integers(2, 80), st.integers(0, 10_000), st.booleans(), st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_tree_invariants(self, n, seed, weighted, tie_heavy):
+        rng = np.random.default_rng(seed)
+        u, v, w, weights = _random_tree(rng, n, weighted, tie_heavy)
+        left, right, dist, wsum = hj.single_linkage_jax(u, v, w, n, weights=weights)
+        lw = weights if weights is not None else np.ones(n)
+        # n-1 merges, ascending distances
+        assert left.shape == (n - 1,)
+        assert (np.diff(dist) >= 0).all(), "merge distances must be monotone"
+        # node weights: leaves then merge outputs, in merge order
+        node_w = np.concatenate([lw, wsum])
+        np.testing.assert_allclose(
+            wsum, node_w[left] + node_w[right], rtol=1e-6, atol=1e-4
+        )
+        # mass conservation: the root merge carries every leaf's weight
+        assert np.isclose(wsum[-1], lw.sum(), rtol=1e-6)
+        # each node is merged away exactly once (valid binary dendrogram)
+        kids = np.concatenate([left, right])
+        assert len(np.unique(kids)) == 2 * (n - 1)
+
+    @given(st.integers(2, 60), st.integers(0, 10_000), st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_matches_host_oracle_rowwise(self, n, seed, tie_heavy):
+        """Same stable tie order as the oracle → records match row for
+        row (node ids included), not just as multisets."""
+        rng = np.random.default_rng(seed)
+        u, v, w, weights = _random_tree(rng, n, weighted=True, tie_heavy=tie_heavy)
+        left, right, dist, wsum = hj.single_linkage_jax(u, v, w, n, weights=weights)
+        slt = single_linkage(u, v, w, n, weights=weights)
+        np.testing.assert_allclose(dist, slt.merges[:, 2], rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(wsum, slt.merges[:, 3], rtol=1e-6, atol=1e-4)
+        # children per row must agree as unordered pairs (Borůvka-side
+        # endpoint order is an implementation detail)
+        got = np.sort(np.stack([left, right], axis=1), axis=1)
+        want = np.sort(slt.merges[:, :2].astype(np.int64), axis=1)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestFusedHierarchyProperties:
+    @given(st.integers(3, 48), st.integers(0, 10_000), st.integers(2, 9))
+    @settings(max_examples=20, deadline=None)
+    def test_labels_and_stabilities_well_formed(self, n, seed, mcs):
+        """Fused pipeline on a random metric: labels reference existing
+        clusters, stabilities are finite and non-negative, condensed
+        point rows conserve mass."""
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(seed)
+        X = rng.normal(size=(n, 3)).astype(np.float32)
+        D = np.sqrt(((X[:, None] - X[None, :]) ** 2).sum(-1))
+        Lp = max(8, 1 << (max(n - 1, 1)).bit_length())
+        Wp = np.full((Lp, Lp), np.inf, dtype=np.float32)
+        Wp[:n, :n] = D
+        np.fill_diagonal(Wp, np.inf)
+        eu, ev, ew, valid = boruvka_jax(jnp.asarray(Wp))
+        wts = np.zeros(Lp, dtype=np.float32)
+        wts[:n] = rng.integers(1, 5, size=n)
+        slt, ct, ex = hj.hierarchy_fixed(
+            eu, ev, ew, valid, n, jnp.asarray(wts), float(mcs)
+        )
+        labels = np.asarray(ex.labels)[:n]
+        k = int(ex.n_clusters)
+        assert set(np.unique(labels)) <= set(range(-1, k))
+        stab = np.asarray(ex.stability)
+        assert np.isfinite(stab).all() and (stab >= -1e-3).all()
+        # mass conservation incl. zero-weight pads
+        pp = np.asarray(ct.point_parent)
+        pw = np.asarray(ct.point_weight)
+        assert np.isclose(pw.sum(), wts.sum(), rtol=1e-6)
+        assert (pp[:n] >= 0).all() and (pp < int(ct.n_labels)).all()

@@ -325,10 +325,14 @@ class TestBackendParity:
         bt = BubbleTree(dim=3, compression=0.15)
         bt.insert_block(rng.normal(size=(200, 3)))
         ids, LS, SS, N = bt.leaf_cf_buffers()
-        _, _, w_ref = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=True)
-        _, _, w_pal = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=False)
+        res_ref = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=True)
+        res_pal = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=False)
+        w_ref, w_pal = res_ref.mst[2], res_pal.mst[2]
         assert len(w_ref) == len(ids) - 1  # spanning tree
         assert w_ref.sum() == pytest.approx(w_pal.sum(), rel=1e-5)
+        # the fused pass returns labels too — the backends must agree
+        assert res_ref.n_clusters == res_pal.n_clusters
+        np.testing.assert_array_equal(res_ref.labels, res_pal.labels)
 
     def test_offline_matches_dense_oracle_off_origin(self, rng):
         """Off-origin data is where a low-precision extent computation
@@ -341,7 +345,7 @@ class TestBackendParity:
         bt = BubbleTree(dim=3, compression=0.15)
         bt.insert_block(rng.normal(size=(200, 3)) + 1000.0)  # far from origin
         ids, LS, SS, N = bt.leaf_cf_buffers()
-        _, _, w_jit = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=True)
+        w_jit = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=True).mst[2]
         b = bubbles_from_cf(LS[ids], SS[ids], N[ids])
         assert b.extent.max() > 0  # the cancellation-prone quantity is live
         W, _ = np_bmr(b, 5)
@@ -356,7 +360,7 @@ class TestBackendParity:
         bt = BubbleTree(dim=2, compression=0.2)
         bt.insert_block(rng.normal(size=(30, 2)))  # total mass 30
         ids, LS, SS, N = bt.leaf_cf_buffers()
-        _, _, w = ops.offline_recluster(LS, SS, N, ids, min_pts=50, use_ref=True)
+        w = ops.offline_recluster(LS, SS, N, ids, min_pts=50, use_ref=True).mst[2]
         assert len(w) == len(ids) - 1
         assert w.max() < 100.0  # unit-scale data, not ~1e6 pad distance
 
@@ -364,7 +368,8 @@ class TestBackendParity:
         bt = BubbleTree(dim=2, compression=0.2)
         bt.insert_block(rng.normal(size=(80, 2)))
         ids, LS, SS, N = bt.leaf_cf_buffers()
-        W, (u, v, w) = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=True, return_w=True)
+        W, res = ops.offline_recluster(LS, SS, N, ids, 5, use_ref=True, return_w=True)
+        u, v, w = res.mst
         L = len(ids)
         assert W.shape == (L, L)  # padding bucket sliced away
         np.testing.assert_allclose(W[u, v], w, rtol=1e-6)
