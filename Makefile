@@ -5,15 +5,29 @@ PYTHON ?= python
 PYTEST_FLAGS ?= -x -q
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke docs-links check
+# ruff-format adoption list: files here are kept black-clean; the
+# pre-existing tree is linted (ruff check) but not reflowed wholesale.
+FORMAT_PATHS ?= scripts/check_bench_regression.py
+
+.PHONY: test bench-smoke bench-gate docs-links lint check
 
 test:
 	$(PYTHON) -m pytest $(PYTEST_FLAGS)
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig8
+	$(PYTHON) -m benchmarks.run --only fig8,fig3_dynamic
+
+# CI perf gate: fresh smoke run (bench_out/ by default), compared against
+# the checked-in bench_results/ baselines (1.5x default; REPRO_BENCH_TOL=…).
+# Refresh baselines deliberately: REPRO_BENCH_DIR=bench_results make bench-smoke
+bench-gate: bench-smoke
+	$(PYTHON) scripts/check_bench_regression.py --fresh bench_out
 
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test
+lint:
+	ruff check .
+	ruff format --check $(FORMAT_PATHS)
+
+check: docs-links lint test

@@ -28,7 +28,10 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 
-RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "bench_results")
+# default to the scratch dir: bench_results/ holds the CHECKED-IN perf-gate
+# baselines (scripts/check_bench_regression.py) and is only refreshed
+# deliberately via REPRO_BENCH_DIR=bench_results
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "bench_out")
 
 
 def save_json(name: str, obj) -> str:

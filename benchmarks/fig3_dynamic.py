@@ -1,0 +1,162 @@
+"""Fig. 3 (device edition) — per-update cost of the hybrid exact-dynamic
+fast path vs the full offline pass.
+
+``fig3_feasibility`` reproduces the paper's host-side finding: dynamic
+maintenance beats a static recompute only while the update fraction is
+small.  This benchmark measures the same curve for the DEVICE paths that
+``serving.stream`` actually routes between (ISSUE 3):
+
+  * incremental — apply an f-fraction batch of mixed inserts/deletes
+    through the jit'd Eq. 11/12 scans (core.dynamic_jax), then refresh
+    labels with the hierarchy-only stages (`ops.incremental_recluster`);
+  * full rebuild — the hybrid fallback: from-scratch dense d → kNN →
+    Borůvka (`dynamic_jax.rebuild`) + the same hierarchy stages;
+  * offline_recluster — the pre-existing fused bubble pipeline run on
+    the unit-bubble table (d_m → Borůvka → hierarchy under one jit),
+    i.e. what a non-hybrid ε-pass would pay at point granularity.
+
+The JSON reports per-update costs per fraction and the crossover
+fraction where incremental stops winning — the number UpdatePolicy's
+``max_update_frac`` should sit below.  CI's bench-smoke gate tracks
+``incremental_per_update_ms_small`` and ``offline_recluster_ms``.
+
+  PYTHONPATH=src python -m benchmarks.fig3_dynamic
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core.dynamic_jax import DynamicJaxHDBSCAN
+from repro.data.synthetic import gaussian_mixtures
+from repro.kernels import ops
+
+from .common import Timer, emit, save_json
+
+FRACS = (0.005, 0.01, 0.02, 0.05, 0.10)
+
+
+def _time_median(fn, iters: int = 3) -> float:
+    ts = []
+    for _ in range(iters):
+        with Timer() as t:
+            fn()
+        ts.append(t.seconds)
+    return float(np.median(ts))
+
+
+def run(n: int = 1800, d: int = 4, min_pts: int = 10, seed: int = 0):
+    # k=20 mixtures, matching fig3_feasibility's (and the paper's) setup;
+    # n chosen so the dynamic state and the offline pass share the same
+    # power-of-two bucket (2048) — an apples-to-apples A/B
+    mcs = float(min_pts)
+    X, _ = gaussian_mixtures(n + int(max(FRACS) * n), d=d, k=20, seed=seed)
+    base, extra = X[:n], X[n:]
+    # caps stay on their block-scaled defaults (pinning them small forces
+    # the overflow → rebuild path, which is the fallback, not the subject)
+    dyn = DynamicJaxHDBSCAN(min_pts, d, capacity=n + int(max(FRACS) * n))
+    dyn.load(base)
+
+    def recluster():
+        res, _, _ = ops.incremental_recluster(dyn.state, mcs)
+        return res
+
+    def full_rebuild():
+        dyn.rebuild()
+        jax.block_until_ready(dyn.state)
+        return recluster()
+
+    # the non-hybrid full pass: fused offline pipeline on unit bubbles
+    rep64 = base.astype(np.float64)
+    ones = np.ones(n)
+    zeros = np.zeros(n)
+
+    def offline_full():
+        return ops.offline_recluster_from_table(
+            rep64, ones, zeros, min_pts, min_cluster_size=mcs, use_ref=True
+        )
+
+    recluster()  # warm the hierarchy bucket
+    full_rebuild_s = _time_median(full_rebuild)
+    offline_s = _time_median(offline_full)
+
+    rows = []
+    for frac in FRACS:
+        m = max(2, int(round(frac * n)))
+        m_ins = m // 2
+        m_del = m - m_ins
+        ins = extra[:m_ins]
+        rng = np.random.default_rng(seed + int(frac * 1000))
+
+        def one_round():
+            dyn.load(base)  # identical starting state per fraction
+            drop = rng.choice(dyn.alive_slots(), size=m_del, replace=False)
+            jax.block_until_ready(dyn.state)
+            over0 = dyn.stats["overflow_rebuilds"]
+            with Timer() as t:
+                dyn.insert_block(ins)
+                dyn.delete_block([int(s) for s in drop])
+                jax.block_until_ready(dyn.state)
+                recluster()
+            return t.seconds, dyn.stats["overflow_rebuilds"] - over0
+
+        one_round()  # compile the (capacity, block) buckets
+        times, overflows = zip(*(one_round() for _ in range(3)))
+        inc_s = float(np.median(times))
+        rows.append(
+            {
+                "frac": frac,
+                "updates": m,
+                "incremental_s": inc_s,
+                "incremental_per_update_ms": inc_s / m * 1e3,
+                "full_rebuild_s": full_rebuild_s,
+                "offline_recluster_s": offline_s,
+                "speedup_vs_offline": offline_s / max(inc_s, 1e-9),
+                "overflow_rebuilds": int(sum(overflows)),
+            }
+        )
+        emit(
+            f"fig3_dynamic/update_{frac:g}",
+            inc_s,
+            f"{inc_s * 1e3:.1f} ms inc vs {offline_s * 1e3:.1f} ms offline "
+            f"({rows[-1]['speedup_vs_offline']:.2f}x)",
+        )
+
+    # crossover: first fraction whose batch costs more than the full
+    # offline_recluster pass (the pre-existing ε-pass — the comparator
+    # ISSUE 3 names; the rebuild fallback is reported alongside)
+    crossover = None
+    for r in rows:
+        if r["incremental_s"] >= offline_s:
+            crossover = r["frac"]
+            break
+    out = {
+        "n": n,
+        "d": d,
+        "min_pts": min_pts,
+        "rows": rows,
+        "full_rebuild_ms": full_rebuild_s * 1e3,
+        "offline_recluster_ms": offline_s * 1e3,
+        "incremental_per_update_ms_small": rows[0]["incremental_per_update_ms"],
+        "crossover_frac": crossover if crossover is not None else f">{max(FRACS)}",
+    }
+    # the ISSUE 3 acceptance claim — small-update regime (≤ 5% touched)
+    # beats the full offline pass — is recorded in the JSON and ENFORCED
+    # by the tolerance-gated scripts/check_bench_regression.py (ratio
+    # metric, 1.5×), not by a hard assert here: a zero-tolerance check
+    # inside the benchmark would fail CI's bench-smoke job on runner
+    # noise before the gate ever runs.
+    small = [r for r in rows if r["frac"] <= 0.05]
+    out["small_regime_wins"] = bool(any(r["incremental_s"] < offline_s for r in small))
+    save_json("fig3_dynamic", out)
+    emit("fig3_dynamic/crossover", 0.0, f"frac={out['crossover_frac']}")
+    if not out["small_regime_wins"]:
+        print("fig3_dynamic/WARNING,0,no small-update win on this machine")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -11,7 +11,6 @@ fraction; beyond a few % of deletions the static recompute wins."""
 
 from __future__ import annotations
 
-import time
 
 import numpy as np
 

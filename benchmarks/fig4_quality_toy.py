@@ -11,7 +11,6 @@ import numpy as np
 
 from repro.core import ClusTreeLite, hdbscan, nmi
 from repro.core.summarizer import BubbleTreeSummarizer, assign_points, cluster_bubbles
-from repro.data.synthetic import gaussian_mixtures
 
 from .common import Timer, emit, save_json
 

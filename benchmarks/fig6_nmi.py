@@ -3,8 +3,6 @@ summarization techniques on each dataset's sliding window."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import (
     BubbleTree,
     ClusTreeLite,
@@ -15,7 +13,7 @@ from repro.core import (
 from repro.core.summarizer import assign_points, cluster_bubbles
 from repro.data.synthetic import DATASET_SPECS, dataset
 
-from .common import Timer, emit, save_json
+from .common import emit, save_json
 
 
 def _summary_labels(b, X, min_pts):

@@ -70,7 +70,6 @@ def run(window: int = 2000, slide: int = 400, n_slides: int = 3, min_pts: int = 
 
     # static recompute per slide
     per_slide = []
-    at = 0
     cur = X[:window]
     with Timer() as t0:
         hdbscan(cur, min_pts=min_pts)

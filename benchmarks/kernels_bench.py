@@ -31,7 +31,6 @@ def run(n: int = 2048, d: int = 16, k: int = 16, L: int = 64, seed: int = 0):
     rng = np.random.default_rng(seed)
     X = rng.normal(size=(n, d)).astype(np.float32)
     R = rng.normal(size=(L, d)).astype(np.float32)
-    cd = np.abs(rng.normal(size=n)).astype(np.float32)
     import jax.numpy as jnp
 
     Xj = jnp.asarray(X)

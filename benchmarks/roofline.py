@@ -12,7 +12,6 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.launch.hlo_stats import DCI_BW, HBM_BW, ICI_BW, PEAK_FLOPS
 
 V5E_HBM_BYTES = 16 * 2 ** 30
 

@@ -16,7 +16,11 @@ import traceback
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,kernels,roofline")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig6,fig7,fig8,kernels,roofline",
+    )
     ap.add_argument("--dryrun", default="dryrun_results.json")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
@@ -32,6 +36,10 @@ def main(argv=None):
         from . import fig3_feasibility
 
         _guard(fig3_feasibility.run, failures, "fig3")
+    if want("fig3_dynamic"):
+        from . import fig3_dynamic
+
+        _guard(fig3_dynamic.run, failures, "fig3_dynamic")
     if want("fig4"):
         from . import fig4_quality_toy
 

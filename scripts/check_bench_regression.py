@@ -1,0 +1,95 @@
+"""Perf-regression gate for the CI bench-smoke job (ISSUE 3).
+
+Compares a fresh benchmark run (``--fresh``, e.g. the bench_out directory
+the CI job just produced) against the checked-in baselines under
+``--baseline`` (bench_results/).  Timing metrics get a generous
+multiplicative tolerance — CI runners are not this repo's dev box — and
+tiny baselines (< 2 ms) are skipped outright; ratio metrics (speedups)
+compare divisively in the other direction.
+
+Exit 1 on any regression; the table always prints so the job log shows
+the full picture.
+
+  python scripts/check_bench_regression.py --fresh bench_out
+  REPRO_BENCH_TOL=2.0 python scripts/check_bench_regression.py ...
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# (file, path-into-json, kind): kind "ms" = lower is better (tolerance ×),
+# "ratio" = higher is better (tolerance ÷)
+METRICS = [
+    ("fig8_streaming.json", ("64", "recluster_ms_mean"), "ms"),
+    ("fig8_streaming.json", ("512", "recluster_ms_mean"), "ms"),
+    ("fig8_streaming.json", ("speedup_512_vs_1",), "ratio"),
+    ("fig8_streaming.json", ("recluster_ab", "device_labels_ms"), "ms"),
+    ("fig3_dynamic.json", ("incremental_per_update_ms_small",), "ms"),
+    ("fig3_dynamic.json", ("offline_recluster_ms",), "ms"),
+    ("fig3_dynamic.json", ("rows", 0, "speedup_vs_offline"), "ratio"),
+]
+
+MIN_BASELINE_MS = 2.0
+
+
+def dig(obj, path):
+    for key in path:
+        if isinstance(obj, list):
+            obj = obj[int(key)]
+        else:
+            obj = obj[str(key)]
+    return float(obj)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="bench_out")
+    ap.add_argument("--baseline", default="bench_results")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_TOL", "1.5")),
+    )
+    args = ap.parse_args(argv)
+
+    failures = []
+    rows = []
+    for fname, path, kind in METRICS:
+        label = f"{fname}:{'.'.join(str(p) for p in path)}"
+        try:
+            with open(os.path.join(args.baseline, fname)) as f:
+                base = dig(json.load(f), path)
+            with open(os.path.join(args.fresh, fname)) as f:
+                new = dig(json.load(f), path)
+        except (OSError, KeyError, IndexError, ValueError) as e:
+            failures.append(label)
+            rows.append((label, "?", "?", f"MISSING ({e})"))
+            continue
+        if kind == "ms" and base < MIN_BASELINE_MS:
+            rows.append((label, base, new, "skipped (tiny baseline)"))
+            continue
+        if kind == "ms":
+            ok = new <= base * args.tolerance
+        else:
+            ok = new >= base / args.tolerance
+        rows.append((label, base, new, "ok" if ok else "REGRESSION"))
+        if not ok:
+            failures.append(label)
+
+    width = max(len(r[0]) for r in rows) + 2
+    print(f"{'metric':<{width}} {'baseline':>12} {'fresh':>12}  verdict")
+    for label, base, new, verdict in rows:
+        fb = f"{base:.3f}" if isinstance(base, float) else base
+        fn = f"{new:.3f}" if isinstance(new, float) else new
+        print(f"{label:<{width}} {fb:>12} {fn:>12}  {verdict}")
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond {args.tolerance}x tolerance")
+        return 1
+    print(f"\nall within {args.tolerance}x tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

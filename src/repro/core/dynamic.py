@@ -32,7 +32,7 @@ from __future__ import annotations
 import numpy as np
 
 from .hdbscan import pairwise_sqdist
-from .mst import UnionFind, boruvka_dense, kruskal_edges
+from .mst import UnionFind, kruskal_edges
 
 __all__ = ["DynamicHDBSCAN"]
 
@@ -232,12 +232,10 @@ class DynamicHDBSCAN:
 
         # --- contraction rule (Eq. 12) ---
         t1 = time.perf_counter()
-        rset = set(int(r) for r in rknn)
         drop = (self.mst_u == i) | (self.mst_v == i)
         drop |= np.isin(self.mst_u, rknn) | np.isin(self.mst_v, rknn)
         keep_u = self.mst_u[~drop]
         keep_v = self.mst_v[~drop]
-        keep_d = self.mst_d[~drop]
         if ids.size == 0:
             self.mst_u = np.zeros(0, dtype=np.int64)
             self.mst_v = np.zeros(0, dtype=np.int64)

@@ -1,0 +1,675 @@
+"""Device-resident exact dynamic HDBSCAN — the jit reformulation of
+``core.dynamic`` (paper §3, Algorithms 5 & 6).
+
+``DynamicHDBSCAN`` is host-side numpy with Python loops over RkNN sets;
+exact, but every update syncs with the host and is unusable as a serving
+hot path.  This module re-expresses both update rules as fixed-shape
+array programs over padded power-of-two *capacity buckets* (the same
+bucketing discipline as ``core.hierarchy_jax``), and — because the
+streaming engine only ever applies same-kind blocks — batches each rule
+so a whole block is ONE jit call with ONE MST pass, not a per-op scan:
+
+  insert block (Eq. 11, batched):  T' = MSF( T ∪ (P ∪ M)×V )
+      — pure insertions only *decrease* mutual-reachability weights
+        (core distances shrink), so any edge absent from the old tree
+        whose weight did not change stays redundant (it was the max of
+        its tree cycle and still is).  The exact candidate set is the
+        old tree plus ALL edges incident to the new points P and to the
+        RkNN-affected rows M whose core distances changed — dense
+        (|P|+|M|, Np) strips, passed to ``mst.boruvka_strip_jax`` whose
+        per-round strip minima are vectorized reductions rather than
+        scatters.
+
+  delete block (Eq. 12, batched):  F = T \\ edges(touched);
+                                   T' = F ∪ contract(F)-MSF
+      — pure deletions only *raise* core distances, so every survivor
+        edge (endpoints untouched) is still the minimum crossing edge
+        of its tree cut and is kept outright.  The completion is the
+        paper's contraction proper: survivor components collapse to
+        ≤ s_cap+1 supernodes (every non-largest component lives inside
+        S' = V \\ largest), the supernode graph is built with ONE
+        scatter over the (|S'|, Np) strip, and a tiny dense Borůvka
+        finishes.
+
+  kNN/core-distance maintenance: per-point tables (minPts others, self
+  excluded) live in (Np, K) buckets; affected rows (new-point horizon
+  hits on insert, rows listing a retired slot on delete) are recomputed
+  exactly from gathered distance strips.  RkNN sets are O(minPts²) in
+  practice (paper App. A); the ``rk_cap``/``s_cap`` buckets make that
+  bound *structural*: a rare oversized set flips the state's ``ok`` bit
+  instead of overflowing, and the owner falls back to a from-scratch
+  rebuild — exactly the regime where incremental maintenance loses
+  anyway (paper Fig. 3).
+
+All distance arithmetic is diff-form f32 (``_dense_dists``), never the
+matmul expansion — every stored raw length is bitwise reproducible from
+the current coordinates, which is what lets differential tests feed the
+host oracle the device's own geometry.  The exactness contract (tested
+in ``tests/test_dynamic_jax.py`` / ``test_hybrid_fuzz.py``) is MST
+total weight vs the f64 host oracle to 1e-6 relative and flat labels
+equal up to permutation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mst import boruvka_edges_jax, boruvka_jax, boruvka_strip_jax
+
+__all__ = [
+    "DynState",
+    "DynamicJaxHDBSCAN",
+    "state_mst_weights",
+    "state_mutual_reach_dense",
+]
+
+
+class DynState(NamedTuple):
+    """Padded dynamic-maintenance state over Np capacity slots.
+
+    Slot ids are stable handles (the free list lives on the host
+    wrapper); ``alive`` masks the live ones.  The MST is held as raw
+    Euclidean lengths — mutual-reachability weights are derived on
+    demand as max(raw, cd[u], cd[v]), so core-distance drift never
+    stales stored weights (same trick as the host oracle).
+    """
+
+    X: jax.Array  # (Np, d) f32 coordinates (dead slots: stale/zero)
+    alive: jax.Array  # (Np,) bool
+    knn_idx: jax.Array  # (Np, K) int32 — K = minPts nearest OTHER points
+    knn_dst: jax.Array  # (Np, K) f32 ascending (+inf empty)
+    cd: jax.Array  # (Np,) f32 core distances (Def. 1, self-inclusive)
+    mst_u: jax.Array  # (Np,) int32 slot ids
+    mst_v: jax.Array  # (Np,) int32
+    mst_raw: jax.Array  # (Np,) f32 raw Euclidean edge lengths
+    mst_valid: jax.Array  # (Np,) bool — exactly n_alive-1 True slots
+    n_alive: jax.Array  # () int32
+    ok: jax.Array  # () bool — False: an update overflowed rk_cap/s_cap
+    #   and the state is garbage; the owner must rebuild from scratch
+
+
+def init_state(capacity: int, dim: int, min_pts: int) -> DynState:
+    Np = int(capacity)
+    K = int(min_pts)
+    return DynState(
+        X=jnp.zeros((Np, dim), jnp.float32),
+        alive=jnp.zeros((Np,), bool),
+        knn_idx=jnp.full((Np, K), -1, jnp.int32),
+        knn_dst=jnp.full((Np, K), jnp.inf, jnp.float32),
+        cd=jnp.zeros((Np,), jnp.float32),
+        mst_u=jnp.zeros((Np,), jnp.int32),
+        mst_v=jnp.zeros((Np,), jnp.int32),
+        mst_raw=jnp.zeros((Np,), jnp.float32),
+        mst_valid=jnp.zeros((Np,), bool),
+        n_alive=jnp.asarray(0, jnp.int32),
+        ok=jnp.asarray(True, bool),
+    )
+
+
+def _cd_from_rows(knn_dst: jax.Array, min_pts: int) -> jax.Array:
+    """Self-inclusive cd per row: the (minPts−1)-th other distance, or
+    the largest finite entry when fewer others exist (oracle fallback)."""
+    k = min_pts - 1
+    if k <= 0:
+        return jnp.zeros((knn_dst.shape[0],), jnp.float32)
+    kth = knn_dst[:, k - 1]
+    finite = jnp.isfinite(knn_dst)
+    fallback = jnp.max(jnp.where(finite, knn_dst, 0.0), axis=1)
+    return jnp.where(jnp.isfinite(kth), kth, fallback)
+
+
+def _dense_dists(X: jax.Array) -> jax.Array:
+    """(Np, Np) pairwise distances in diff-form f32 — the SAME arithmetic
+    every strip uses (sqrt of the summed squared difference, never the
+    ‖x‖²+‖y‖²−2xy expansion), so weights produced by a rebuild are
+    bitwise identical to what an incremental step would derive for the
+    same pair.  Row-blocked through lax.map to bound the (B, Np, d)
+    broadcast at large capacities."""
+    Np, d = X.shape
+    B = min(Np, 64)
+    pad = (-Np) % B
+
+    def row_block(xb):
+        return jnp.sqrt(jnp.sum((xb[:, None, :] - X[None, :, :]) ** 2, axis=-1))
+
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    out = jax.lax.map(row_block, Xp.reshape((Np + pad) // B, B, d))
+    return out.reshape(Np + pad, Np)[:Np]
+
+
+def _strip_dists(rows: jax.Array, X: jax.Array) -> jax.Array:
+    """(U, Np) diff-form distances from gathered rows to every slot."""
+    return jnp.sqrt(jnp.sum((rows[:, None, :] - X[None, :, :]) ** 2, axis=-1))
+
+
+def _scatter_rows(A: jax.Array, tgt: jax.Array, rows_new: jax.Array) -> jax.Array:
+    """Write rows_new at row indices tgt; indices == len(A) are trash."""
+    pad = jnp.zeros((1,) + A.shape[1:], A.dtype)
+    return jnp.concatenate([A, pad]).at[tgt].set(rows_new)[: A.shape[0]]
+
+
+# --------------------------------------------------------------------------
+# batched insertion (Algorithm 5 / Eq. 11)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("min_pts", "rk_cap"))
+def insert_batch(state: DynState, P, slots, valid, *, min_pts: int,
+                 rk_cap: int) -> DynState:
+    """Apply a padded block of insertions as ONE fused update.
+
+    P: (Bp, d) f32; slots: (Bp,) int32 pre-assigned free slots (host
+    free list); valid: (Bp,) bool — padding rows are exact no-ops.
+    Exactness: pure insertions only shrink core distances, so
+    MST(final) ⊆ T ∪ (P ∪ M)×V with M ⊇ every row whose kNN table (and
+    hence cd) changed — the horizon criterion below.
+    """
+    P = P.astype(jnp.float32)
+    slots = slots.astype(jnp.int32)
+    Np, K = state.knn_idx.shape
+    Bp = P.shape[0]
+    iota = jnp.arange(Np, dtype=jnp.int32)
+    tgt = jnp.where(valid, slots, Np)  # trash-slot scatter for pad rows
+
+    alive_old = state.alive
+    X2 = _scatter_rows(state.X, tgt, P)
+    alive2 = jnp.concatenate([alive_old, jnp.zeros((1,), bool)]).at[tgt].set(True)[:Np]
+
+    # new rows' distances vs the FINAL population (new points see each other)
+    D_new = _strip_dists(P, X2)  # (Bp, Np)
+    m_new = valid[:, None] & alive2[None, :] & (iota[None, :] != slots[:, None])
+    D_new_m = jnp.where(m_new, D_new, jnp.inf)
+    neg_d, idx = jax.lax.top_k(-D_new_m, K)
+    nd = -neg_d
+    ni = jnp.where(jnp.isfinite(nd), idx.astype(jnp.int32), -1)
+    knn_dst = _scatter_rows(state.knn_dst, tgt, nd)
+    knn_idx = _scatter_rows(state.knn_idx, tgt, ni)
+    cd = _scatter_rows(state.cd[:, None], tgt, _cd_from_rows(nd, min_pts)[:, None])[:, 0]
+
+    # M: old rows with any new point inside their kNN horizon (strict <,
+    # matching the oracle); their tables+cds are recomputed exactly
+    horizon = state.knn_dst[:, K - 1]
+    dmin = jnp.min(jnp.where(valid[:, None], D_new, jnp.inf), axis=0)
+    M = alive_old & (dmin < horizon)
+    rk_n = jnp.sum(M.astype(jnp.int32))
+    ok = state.ok & (rk_n <= rk_cap)
+    (rids,) = jnp.nonzero(M, size=rk_cap, fill_value=0)
+    rids = rids.astype(jnp.int32)
+    rvalid = jnp.arange(rk_cap) < rk_n
+    D_M = _strip_dists(X2[rids], X2)  # (rk_cap, Np)
+    m_M = rvalid[:, None] & alive2[None, :] & (iota[None, :] != rids[:, None])
+    D_M_m = jnp.where(m_M, D_M, jnp.inf)
+    neg_d, idx = jax.lax.top_k(-D_M_m, K)
+    md = -neg_d
+    mi = jnp.where(jnp.isfinite(md), idx.astype(jnp.int32), -1)
+    rtgt = jnp.where(rvalid, rids, Np)
+    knn_dst = _scatter_rows(knn_dst, rtgt, md)
+    knn_idx = _scatter_rows(knn_idx, rtgt, mi)
+    cd = _scatter_rows(cd[:, None], rtgt, _cd_from_rows(md, min_pts)[:, None])[:, 0]
+
+    # --- Eq. 11 (batched): MSF over T ∪ (P ∪ M)×V ---
+    ew_tree = jnp.maximum(
+        state.mst_raw, jnp.maximum(cd[state.mst_u], cd[state.mst_v])
+    )
+    ew_tree = jnp.where(state.mst_valid, ew_tree, jnp.inf)
+    sids = jnp.concatenate([jnp.minimum(slots, Np - 1), rids])
+    D_strip = jnp.concatenate([D_new, D_M], axis=0)
+    smask = jnp.concatenate([m_new, m_M], axis=0)
+    SW = jnp.maximum(D_strip, jnp.maximum(cd[sids][:, None], cd[None, :]))
+    SW = jnp.where(smask, SW, jnp.inf)
+    pay, pay_ok, _ = boruvka_strip_jax(
+        state.mst_u, state.mst_v, ew_tree, state.mst_valid, sids, SW, smask, Np
+    )
+    E = Np
+    is_strip = pay >= E
+    t_idx = jnp.minimum(pay, E - 1)
+    s_flat = jnp.maximum(pay - E, 0)
+    mu = jnp.where(is_strip, sids[s_flat // Np], state.mst_u[t_idx])
+    mv = jnp.where(is_strip, (s_flat % Np).astype(jnp.int32), state.mst_v[t_idx])
+    s_flat = jnp.minimum(s_flat, (Bp + rk_cap) * Np - 1)
+    mraw = jnp.where(
+        is_strip, D_strip.reshape(-1)[s_flat], state.mst_raw[t_idx]
+    )
+    return state._replace(
+        X=X2,
+        alive=alive2,
+        knn_idx=knn_idx,
+        knn_dst=knn_dst,
+        cd=cd,
+        mst_u=jnp.where(pay_ok, mu, 0),
+        mst_v=jnp.where(pay_ok, mv, 0),
+        mst_raw=jnp.where(pay_ok, mraw, 0.0),
+        mst_valid=pay_ok,
+        n_alive=state.n_alive + jnp.sum(valid.astype(jnp.int32)),
+        ok=ok,
+    )
+
+
+# --------------------------------------------------------------------------
+# batched deletion (Algorithm 6 / Eq. 12)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("min_pts", "rk_cap", "s_cap"))
+def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
+                 s_cap: int) -> DynState:
+    """Apply a padded block of deletions as ONE fused update.
+
+    Survivor forest kept outright (deletions only raise core
+    distances), completion via the contracted component graph.
+    """
+    slots = slots.astype(jnp.int32)
+    Np, K = state.knn_idx.shape
+    iota = jnp.arange(Np, dtype=jnp.int32)
+    tgt = jnp.where(valid, slots, Np)
+    del_flag = jnp.concatenate([jnp.zeros((Np,), bool), jnp.zeros((1,), bool)]).at[
+        tgt
+    ].set(True)[:Np]
+    alive = state.alive & ~del_flag
+    n_del = jnp.sum((valid & state.alive[jnp.minimum(slots, Np - 1)]).astype(jnp.int32))
+
+    # RkNN: alive rows listing any retired slot — recompute from a strip
+    safe_idx = jnp.minimum(jnp.maximum(state.knn_idx, 0), Np - 1)
+    lists = alive & (del_flag[safe_idx] & (state.knn_idx >= 0)).any(axis=1)
+    rk_n = jnp.sum(lists.astype(jnp.int32))
+    ok = state.ok & (rk_n <= rk_cap)
+    (rids,) = jnp.nonzero(lists, size=rk_cap, fill_value=0)
+    rids = rids.astype(jnp.int32)
+    rvalid = jnp.arange(rk_cap) < rk_n
+    D = _strip_dists(state.X[rids], state.X)
+    D = jnp.where(alive[None, :], D, jnp.inf)
+    D = jnp.where(iota[None, :] == rids[:, None], jnp.inf, D)
+    neg_d, nidx = jax.lax.top_k(-D, K)
+    nd = -neg_d
+    ni = jnp.where(jnp.isfinite(nd), nidx.astype(jnp.int32), -1)
+    rtgt = jnp.where(rvalid, rids, Np)
+    knn_dst = _scatter_rows(state.knn_dst, rtgt, nd)
+    knn_idx = _scatter_rows(state.knn_idx, rtgt, ni)
+    knn_dst = jnp.where(del_flag[:, None], jnp.inf, knn_dst)
+    knn_idx = jnp.where(del_flag[:, None], -1, knn_idx)
+    cd = jnp.where(lists, _cd_from_rows(knn_dst, min_pts), state.cd)
+    cd = jnp.where(del_flag, 0.0, cd)
+
+    # --- Eq. 12 (batched): survivor forest + contracted completion ---
+    touched = lists | del_flag
+    keep = state.mst_valid & ~(touched[state.mst_u] | touched[state.mst_v])
+    _, _, labels_f = boruvka_edges_jax(
+        state.mst_u, state.mst_v, jnp.where(keep, 0.0, jnp.inf), keep, Np
+    )
+    # compact component ids over ALIVE nodes (dead singletons excluded)
+    rep_alive = jnp.where(alive, labels_f, Np)
+    present = jnp.zeros((Np + 1,), jnp.int32).at[rep_alive].set(1)[:Np]
+    crank = (jnp.cumsum(present) - 1).astype(jnp.int32)
+    Kc = s_cap + 1  # ≤ s_cap non-largest comps + the largest (else ok=False)
+    cid = jnp.where(alive, crank[labels_f], Kc)  # dead → dropped on scatter
+    cnt = jnp.zeros((Kc + 1,), jnp.int32).at[jnp.minimum(cid, Kc)].add(
+        alive.astype(jnp.int32)
+    )[:Kc]
+    biggest = jnp.argmax(cnt).astype(jnp.int32)
+    s_mask = alive & (cid != biggest)
+    s_n = jnp.sum(s_mask.astype(jnp.int32))
+    ok = ok & (s_n <= s_cap) & (jnp.sum(present) <= Kc)
+    (sids,) = jnp.nonzero(s_mask, size=s_cap, fill_value=0)
+    sids = sids.astype(jnp.int32)
+    svalid = jnp.arange(s_cap) < s_n
+    DS = _strip_dists(state.X[sids], state.X)
+    WS = jnp.maximum(DS, jnp.maximum(cd[sids][:, None], cd[None, :]))
+    rowc = cid[sids]
+    BIG = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    # Every crossing pair has ≥ 1 endpoint in S', so the component graph
+    # splits into (a) S'-component → largest, reduced DENSELY per strip
+    # row (a (s_cap, Np) masked min — vector ops, not a 1M-element
+    # scatter), and (b) S'×S', a (s_cap, s_cap) gathered block whose
+    # scatter is tiny.  This keeps the big strip out of scatter land —
+    # the CPU bottleneck of the whole delete path.
+    to_big = svalid[:, None] & alive[None, :] & (cid[None, :] == biggest)
+    w_big = jnp.where(to_big, WS, jnp.inf)
+    row_min = jnp.min(w_big, axis=1)  # (s_cap,)
+    row_arg = jnp.argmin(w_big, axis=1).astype(jnp.int32)
+    comp_big_w = jnp.full((Kc + 1,), jnp.inf).at[jnp.minimum(rowc, Kc)].min(
+        jnp.where(svalid, row_min, jnp.inf)
+    )[:Kc]
+    hit_r = svalid & (row_min == comp_big_w[jnp.minimum(rowc, Kc - 1)])
+    comp_big_row = jnp.full((Kc + 1,), BIG).at[jnp.minimum(rowc, Kc)].min(
+        jnp.where(hit_r, jnp.arange(s_cap, dtype=jnp.int32), BIG)
+    )[:Kc]
+    safe_row = jnp.minimum(comp_big_row, s_cap - 1)
+    comp_big_flat = safe_row * Np + row_arg[safe_row]
+    # (b) the S'×S' block (columns gathered at the S' ids)
+    WSS = WS[:, sids]  # (s_cap, s_cap)
+    colc = rowc  # column j is strip row j's node
+    cross = (
+        svalid[:, None] & svalid[None, :] & (rowc[:, None] != colc[None, :])
+    )
+    pair = jnp.where(cross, rowc[:, None] * Kc + colc[None, :], Kc * Kc)
+    pair_f = pair.reshape(-1)
+    flat_w = jnp.where(cross, WSS, jnp.inf).reshape(-1)
+    Wc = jnp.full((Kc * Kc + 1,), jnp.inf).at[pair_f].min(flat_w)[:-1]
+    hit = cross.reshape(-1) & (flat_w == Wc[jnp.minimum(pair_f, Kc * Kc - 1)])
+    # witness indices flattened into the FULL strip: row r, column sids[c]
+    full_flat = (
+        jnp.arange(s_cap, dtype=jnp.int32)[:, None] * Np + sids[None, :]
+    ).reshape(-1)
+    Ec = jnp.full((Kc * Kc + 1,), BIG).at[pair_f].min(
+        jnp.where(hit, full_flat, BIG)
+    )[:-1]
+    Wc = Wc.reshape(Kc, Kc)
+    Ec = Ec.reshape(Kc, Kc)
+    # merge in the to-largest column
+    safe_big = jnp.minimum(biggest, Kc - 1)
+    better = comp_big_w < Wc[:, safe_big]
+    Wc = Wc.at[:, safe_big].set(jnp.where(better, comp_big_w, Wc[:, safe_big]))
+    Ec = Ec.at[:, safe_big].set(jnp.where(better, comp_big_flat, Ec[:, safe_big]))
+    # symmetrize (S'×S' pairs appear in both orientations, S'×largest in one)
+    pick_t = Wc.T < Wc
+    tie = Wc.T == Wc
+    Wsym = jnp.where(pick_t, Wc.T, Wc)
+    Esym = jnp.where(pick_t, Ec.T, jnp.where(tie, jnp.minimum(Ec, Ec.T), Ec))
+    ea, eb, _, evalid_c = boruvka_jax(Wsym)
+    # witness point pair of each selected component edge
+    flat = jnp.minimum(Esym[ea, eb], s_cap * Np - 1)
+    cu = sids[flat // Np]
+    cv = (flat % Np).astype(jnp.int32)
+    craw = DS.reshape(-1)[flat]
+
+    # assemble the new tree: kept survivor edges, then completion edges
+    krank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    tgt_k = jnp.where(keep, krank, Np)
+    nu = jnp.zeros((Np + 1,), jnp.int32).at[tgt_k].set(state.mst_u)
+    nv = jnp.zeros((Np + 1,), jnp.int32).at[tgt_k].set(state.mst_v)
+    nr = jnp.zeros((Np + 1,), jnp.float32).at[tgt_k].set(state.mst_raw)
+    nval = jnp.zeros((Np + 1,), bool).at[tgt_k].set(keep)
+    crank2 = jnp.cumsum(evalid_c.astype(jnp.int32)) - 1
+    tgt_c = jnp.where(evalid_c, n_keep + crank2, Np)
+    nu = nu.at[tgt_c].set(cu)
+    nv = nv.at[tgt_c].set(cv)
+    nr = nr.at[tgt_c].set(craw)
+    nval = nval.at[tgt_c].set(evalid_c)
+    return state._replace(
+        alive=alive,
+        knn_idx=knn_idx,
+        knn_dst=knn_dst,
+        cd=cd,
+        mst_u=nu[:Np],
+        mst_v=nv[:Np],
+        mst_raw=nr[:Np],
+        mst_valid=nval[:Np],
+        n_alive=state.n_alive - n_del,
+        ok=ok,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("min_pts",))
+def rebuild(state: DynState, *, min_pts: int) -> DynState:
+    """From-scratch device build from X/alive only: dense d → kNN tables
+    → core distances → full Borůvka MST.  This is the fallback "full
+    pass" of the hybrid path (and the recovery from an overflowed
+    incremental state); one call costs what the offline pipeline's
+    d_m → Borůvka stages cost, which is exactly the crossover the
+    UpdatePolicy steers around.
+    """
+    Np, K = state.knn_idx.shape
+    iota = jnp.arange(Np, dtype=jnp.int32)
+    alive = state.alive
+    n = jnp.sum(alive.astype(jnp.int32))
+    D = _dense_dists(state.X)
+    live2 = alive[:, None] & alive[None, :]
+    D = jnp.where(live2 & (iota[:, None] != iota[None, :]), D, jnp.inf)
+    neg_d, nidx = jax.lax.top_k(-D, K)
+    nd = -neg_d
+    ni = jnp.where(jnp.isfinite(nd), nidx.astype(jnp.int32), -1)
+    knn_dst = jnp.where(alive[:, None], nd, jnp.inf)
+    knn_idx = jnp.where(alive[:, None], ni, -1)
+    cd = jnp.where(alive, _cd_from_rows(knn_dst, min_pts), 0.0)
+    W = jnp.maximum(D, jnp.maximum(cd[:, None], cd[None, :]))
+    W = jnp.where(live2, W, jnp.inf)
+    eu, ev, ew, valid = boruvka_jax(W)
+    safe_u = jnp.minimum(eu, Np - 1).astype(jnp.int32)
+    safe_v = jnp.minimum(ev, Np - 1).astype(jnp.int32)
+    return state._replace(
+        knn_idx=knn_idx,
+        knn_dst=knn_dst,
+        cd=cd,
+        mst_u=jnp.where(valid, safe_u, 0),
+        mst_v=jnp.where(valid, safe_v, 0),
+        mst_raw=jnp.where(valid, D[safe_u, safe_v], 0.0),
+        mst_valid=valid,
+        n_alive=n,
+        ok=jnp.asarray(True, bool),
+    )
+
+
+def state_mst_weights(state: DynState) -> jax.Array:
+    """(Np,) mutual-reachability weights of the maintained tree (invalid
+    slots 0) — derived from raw lengths + current core distances."""
+    w = jnp.maximum(
+        state.mst_raw, jnp.maximum(state.cd[state.mst_u], state.cd[state.mst_v])
+    )
+    return jnp.where(state.mst_valid, w, 0.0)
+
+
+def state_mutual_reach_dense(state: DynState) -> np.ndarray:
+    """(n, n) f64 mutual-reachability matrix over the alive slots
+    (ascending slot order), reproducing the device's f32 arithmetic
+    bit for bit (diff-form distances + max with the maintained core
+    distances).  Differential tests feed this to the host oracle so a
+    disagreement is a maintenance/hierarchy bug, never f32-vs-f64
+    geometry drift on tie-critical edges (same convention as
+    tests/test_streaming_fuzz.py)."""
+    alive = np.asarray(state.alive)
+    ids = np.nonzero(alive)[0]
+    X = jnp.asarray(np.asarray(state.X)[ids])
+    cd = np.asarray(state.cd)[ids].astype(np.float64)
+    D = np.asarray(_dense_dists(X), dtype=np.float64)
+    W = np.maximum(D, np.maximum(cd[:, None], cd[None, :]))
+    np.fill_diagonal(W, 0.0)
+    return W
+
+
+# --------------------------------------------------------------------------
+# host wrapper: free list, capacity buckets, overflow recovery
+# --------------------------------------------------------------------------
+
+class DynamicJaxHDBSCAN:
+    """Host handle over the device state: slot free list, power-of-two
+    capacity growth, and rebuild-on-overflow.  API mirrors the oracle
+    (``insert_batch``/``delete_batch`` by slot id); blocks are padded to
+    power-of-two buckets so each (capacity, block) pair compiles once.
+    """
+
+    MIN_BLOCK = 4
+
+    def __init__(
+        self,
+        min_pts: int,
+        dim: int,
+        capacity: int = 256,
+        rk_cap: int | None = None,
+        s_cap: int | None = None,
+    ):
+        self.min_pts = int(min_pts)
+        self.dim = int(dim)
+        # capacity must cover the (Np, K) kNN tables' top_k (K ≤ Np)
+        cap = max(16, 2 * self.min_pts, int(capacity))
+        cap = 1 << (max(cap - 1, 1)).bit_length()
+        # user-pinned caps are used as-is; None scales with the block
+        # (RkNN sets are O(minPts²)-ish per op, additive over a block)
+        self._rk_cap = int(rk_cap) if rk_cap is not None else None
+        self._s_cap = int(s_cap) if s_cap is not None else None
+        self.state = init_state(cap, self.dim, self.min_pts)
+        self._free: list[int] = list(range(cap - 1, -1, -1))
+        self.stats = {"inserts": 0, "deletes": 0, "overflow_rebuilds": 0, "grows": 0}
+
+    # -- host bookkeeping --------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return int(self.state.X.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.state.n_alive)
+
+    @property
+    def ok(self) -> bool:
+        return bool(self.state.ok)
+
+    @property
+    def rk_cap(self) -> int:
+        return self._rk_cap if self._rk_cap is not None else self._eff_cap(1)
+
+    @property
+    def s_cap(self) -> int:
+        return self._s_cap if self._s_cap is not None else self._eff_s_cap(1)
+
+    def _eff_cap(self, bp: int) -> int:
+        # RkNN sets average ≈ minPts per op (paper App. A) with heavy
+        # tails on clustered data (sparse points carry wide horizons), so
+        # floor at minPts² and scale with the block; clamp at capacity/4
+        # — past that the strip work rivals a rebuild, which the overflow
+        # fallback pays anyway.
+        want = max(32, self.min_pts * self.min_pts, 2 * self.min_pts * max(bp, 1))
+        return min(max(self.capacity // 4, 32), want)
+
+    def _eff_s_cap(self, bp: int) -> int:
+        # S' (survivor nodes outside the largest survivor component)
+        # does NOT shrink with the block: one cut inter-cluster bridge
+        # strands a whole cluster regardless of how few points were
+        # deleted.  A flat capacity/4 bucket keeps the per-block cost
+        # predictable and makes overflow mean "more than a quarter of
+        # the population stranded" — genuinely rebuild territory.
+        return max(64, self.capacity // 4)
+
+    def _grow_to(self, cap: int):
+        old = self.capacity
+        cap = 1 << (max(cap - 1, 1)).bit_length()
+        if cap <= old:
+            return
+        s = self.state
+        pad = cap - old
+        self.state = DynState(
+            X=jnp.pad(s.X, ((0, pad), (0, 0))),
+            alive=jnp.pad(s.alive, (0, pad)),
+            knn_idx=jnp.pad(s.knn_idx, ((0, pad), (0, 0)), constant_values=-1),
+            knn_dst=jnp.pad(s.knn_dst, ((0, pad), (0, 0)), constant_values=jnp.inf),
+            cd=jnp.pad(s.cd, (0, pad)),
+            mst_u=jnp.pad(s.mst_u, (0, pad)),
+            mst_v=jnp.pad(s.mst_v, (0, pad)),
+            mst_raw=jnp.pad(s.mst_raw, (0, pad)),
+            mst_valid=jnp.pad(s.mst_valid, (0, pad)),
+            n_alive=s.n_alive,
+            ok=s.ok,
+        )
+        self._free.extend(range(cap - 1, old - 1, -1))
+        self.stats["grows"] += 1
+
+    def _pad_block(self, arrs, n: int):
+        bp = max(self.MIN_BLOCK, 1 << (max(n - 1, 1)).bit_length())
+        out = []
+        for a in arrs:
+            pad = [(0, bp - n)] + [(0, 0)] * (a.ndim - 1)
+            out.append(np.pad(a, pad))
+        valid = np.arange(bp) < n
+        return out, valid
+
+    def would_grow(self, n_new: int) -> bool:
+        return len(self._free) < int(n_new)
+
+    # -- updates -----------------------------------------------------------
+
+    def insert_block(self, X) -> list[int]:
+        X = np.asarray(X, dtype=np.float32).reshape(-1, self.dim)
+        B = X.shape[0]
+        if B == 0:
+            return []
+        if self.would_grow(B):
+            self._grow_to(self.capacity + B)
+        slots = [self._free.pop() for _ in range(B)]
+        (Xp, sp), valid = self._pad_block([X, np.asarray(slots, np.int64)], B)
+        rk = self._rk_cap if self._rk_cap is not None else self._eff_cap(len(valid))
+        self.state = insert_batch(
+            self.state, jnp.asarray(Xp), jnp.asarray(sp), jnp.asarray(valid),
+            min_pts=self.min_pts, rk_cap=rk,
+        )
+        self.stats["inserts"] += B
+        if not self.ok:
+            self.stats["overflow_rebuilds"] += 1
+            self.rebuild()
+        return slots
+
+    def delete_block(self, slots):
+        slots = [int(s) for s in slots]
+        B = len(slots)
+        if B == 0:
+            return
+        (sp,), valid = self._pad_block([np.asarray(slots, np.int64)], B)
+        rk = self._rk_cap if self._rk_cap is not None else self._eff_cap(len(valid))
+        sc = self._s_cap if self._s_cap is not None else self._eff_s_cap(len(valid))
+        self.state = delete_batch(
+            self.state, jnp.asarray(sp), jnp.asarray(valid),
+            min_pts=self.min_pts, rk_cap=rk, s_cap=sc,
+        )
+        self._free.extend(reversed(slots))
+        self.stats["deletes"] += B
+        if not self.ok:
+            # an RkNN/S' strip overflowed its bucket: the exact regime the
+            # paper's feasibility study calls uneconomical — rebuild
+            self.stats["overflow_rebuilds"] += 1
+            self.rebuild()
+
+    def rebuild(self):
+        """From-scratch device pass over the current X/alive (the hybrid
+        path's full-pass fallback)."""
+        self.state = rebuild(self.state, min_pts=self.min_pts)
+
+    def load(self, X, slots=None, shrink: bool = False):
+        """Replace the population: X rows land in ``slots`` (default
+        0..n-1) and everything is rebuilt from scratch.  ``shrink``
+        re-buckets capacity to ~1.5× the population first — the engine's
+        full-pass fallback uses it so a rebuild never pays for a stale
+        oversized bucket."""
+        X = np.asarray(X, dtype=np.float32).reshape(-1, self.dim)
+        n = X.shape[0]
+        slots = list(range(n)) if slots is None else [int(s) for s in slots]
+        if len(slots) != n:
+            raise ValueError(f"{n} rows but {len(slots)} slots")
+        need = (max(slots) + 1) if slots else 1
+        if shrink:
+            tgt = max(16, 2 * self.min_pts, need, int(1.5 * n))
+            tgt = 1 << (max(tgt - 1, 1)).bit_length()
+            if tgt != self.capacity:
+                self.state = init_state(tgt, self.dim, self.min_pts)
+        if need > self.capacity:
+            self._grow_to(need)
+        cap = self.capacity
+        Xb = np.zeros((cap, self.dim), np.float32)
+        alive = np.zeros((cap,), bool)
+        Xb[slots] = X
+        alive[slots] = True
+        self.state = self.state._replace(X=jnp.asarray(Xb), alive=jnp.asarray(alive))
+        taken = set(slots)
+        self._free = [i for i in range(cap - 1, -1, -1) if i not in taken]
+        self.rebuild()
+        return slots
+
+    # -- inspection (host sync) --------------------------------------------
+
+    def alive_slots(self) -> np.ndarray:
+        return np.nonzero(np.asarray(self.state.alive))[0]
+
+    def mst_edges(self):
+        """(u, v, w_mutual) host arrays of the maintained tree."""
+        valid = np.asarray(self.state.mst_valid)
+        w = np.asarray(state_mst_weights(self.state), dtype=np.float64)
+        return (
+            np.asarray(self.state.mst_u, dtype=np.int64)[valid],
+            np.asarray(self.state.mst_v, dtype=np.int64)[valid],
+            w[valid],
+        )
+
+    def total_weight(self) -> float:
+        return float(np.sum(np.asarray(state_mst_weights(self.state), np.float64)))

@@ -21,7 +21,7 @@ import dataclasses
 
 import numpy as np
 
-from .mst import UnionFind, boruvka_dense, kruskal_edges
+from .mst import UnionFind, boruvka_dense
 
 __all__ = [
     "core_distances",
@@ -205,15 +205,15 @@ def condense_tree(slt: SingleLinkageTree, min_cluster_size: float = 5.0) -> Cond
             rows_weight.append(node_weight[node])
             continue
         i = node - n
-        l, r = int(left[i]), int(right[i])
+        lc, rc = int(left[i]), int(right[i])
         lam = 1.0 / dist[i] if dist[i] > 0 else np.inf
-        wl, wr = node_weight[l], node_weight[r]
+        wl, wr = node_weight[lc], node_weight[rc]
         # a side can found a new condensed cluster only if it is both heavy
         # enough and structurally a subtree (internal node)
-        l_cluster = (wl >= min_cluster_size) and (l >= n)
-        r_cluster = (wr >= min_cluster_size) and (r >= n)
+        l_cluster = (wl >= min_cluster_size) and (lc >= n)
+        r_cluster = (wr >= min_cluster_size) and (rc >= n)
         if l_cluster and r_cluster:
-            for ch, wch in ((l, wl), (r, wr)):
+            for ch, wch in ((lc, wl), (rc, wr)):
                 lbl = next_label
                 next_label += 1
                 rows_parent.append(cparent)
@@ -225,15 +225,15 @@ def condense_tree(slt: SingleLinkageTree, min_cluster_size: float = 5.0) -> Cond
             # exactly one structural heavy side: it continues cparent;
             # the other side falls out here (heavy leaves as single
             # members, light subtrees leaf-by-leaf)
-            cont = l if l_cluster else r
-            other = r if l_cluster else l
+            cont = lc if l_cluster else rc
+            other = rc if l_cluster else lc
             stack.append((cont, cparent, lam))
             emit_leaves(other, cparent, lam)
         else:
             # no structural heavy side: everything falls out; if one side
             # is a heavy *leaf* it is still a member record at this lambda
-            emit_leaves(l, cparent, lam)
-            emit_leaves(r, cparent, lam)
+            emit_leaves(lc, cparent, lam)
+            emit_leaves(rc, cparent, lam)
     return CondensedTree(
         parent=np.asarray(rows_parent, dtype=np.int64),
         child=np.asarray(rows_child, dtype=np.int64),

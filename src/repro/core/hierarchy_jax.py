@@ -235,21 +235,21 @@ def condense_fixed(slt: SingleLinkageArrays, weights, min_cluster_size) -> Conde
         i = M - 1 - t  # merge index; node id Lp + i, root first
         node = Lp + i
         P, lin, fal = cl[node], lam_in[node], fallen[node]
-        l, r = slt.left[i], slt.right[i]
+        lc, rc = slt.left[i], slt.right[i]
         lam = lam_of[i]
-        wl, wr = slt.node_weight[l], slt.node_weight[r]
-        l_c = (wl >= mcs) & (l >= Lp)  # heavy AND structural (internal)
-        r_c = (wr >= mcs) & (r >= Lp)
+        wl, wr = slt.node_weight[lc], slt.node_weight[rc]
+        l_c = (wl >= mcs) & (lc >= Lp)  # heavy AND structural (internal)
+        r_c = (wr >= mcs) & (rc >= Lp)
         both = l_c & r_c & ~fal
         A, B = nxt, nxt + 1
-        cl = cl.at[l].set(jnp.where(both, A, P)).at[r].set(jnp.where(both, B, P))
+        cl = cl.at[lc].set(jnp.where(both, A, P)).at[rc].set(jnp.where(both, B, P))
         child_lam = jnp.where(fal, lin, lam)
-        lam_in = lam_in.at[l].set(child_lam).at[r].set(child_lam)
+        lam_in = lam_in.at[lc].set(child_lam).at[rc].set(child_lam)
         # a child stays "live" only if it founds a cluster (both) or is
         # the single continuing heavy side; everything else falls out
         fallen = (
-            fallen.at[l].set(fal | ~(both | (l_c & ~r_c)))
-            .at[r].set(fal | ~(both | (r_c & ~l_c)))
+            fallen.at[lc].set(fal | ~(both | (l_c & ~r_c)))
+            .at[rc].set(fal | ~(both | (r_c & ~l_c)))
         )
         sa = jnp.where(both, A, trash_label)
         sb = jnp.where(both, B, trash_label)

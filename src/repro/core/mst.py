@@ -19,6 +19,13 @@ Three MST engines, used by different layers of the system:
   dense L×L mutual-reachability weights), differentiable-free integer
   union-find carried through ``lax.while_loop``.
 
+* :func:`boruvka_edges_jax` — Borůvka over an *explicit padded edge list*
+  under jit: the device realization of the paper's reduction/contraction
+  rules (Eqs. 11–12), where each dynamic update is an MST pass over
+  ~O(touched · n) candidate edges instead of the dense n×n matrix
+  (core.dynamic_jax).  Fixed shapes, masked invalid slots, label
+  propagation instead of pointers.
+
 All engines return edges as ``(u, v, w)`` arrays; total weight is the
 clustering-hierarchy invariant the tests assert on.
 """
@@ -33,6 +40,8 @@ __all__ = [
     "boruvka_dense",
     "mst_total_weight",
     "boruvka_jax",
+    "boruvka_edges_jax",
+    "boruvka_strip_jax",
 ]
 
 
@@ -287,3 +296,221 @@ def boruvka_jax(W, max_rounds: int | None = None):
     state, _ = jax.lax.scan(round_fn, state, None, length=max_rounds, unroll=2)
     _, eu, ev, ew, valid, _ = state
     return eu[:-1], ev[:-1], ew[:-1], valid[:-1]
+
+
+def boruvka_edges_jax(eu, ev, ew, valid, n: int):
+    """Borůvka minimum spanning forest over an explicit padded edge list.
+
+    The device engine behind the dynamic update rules (core.dynamic_jax):
+    Eq. 11 rebuilds the MST from ``T ∪ E_inserted ∪ E_modified`` and
+    Eq. 12 completes the survivor forest from a crossing-edge strip —
+    both are MST passes over an *explicit candidate list* of
+    O(touched · n) edges, far smaller than the dense n×n matrix
+    ``boruvka_jax`` consumes.
+
+    Args:
+      eu, ev: (E,) int32 endpoint slot ids in [0, n).
+      ew: (E,) float weights (selection key; +inf or masked slots never
+        chosen).  Mandatory edges (a kept forest) can be forced in by
+        giving them a weight below every real weight (e.g. -1 for
+        mutual-reachability weights ≥ 0): an acyclic mandatory set is
+        then always selected, and the remainder is the exact minimum
+        completion.
+      valid: (E,) bool — False rows are padding, never selected.
+      n: slot-space size (static).  Components are label values in
+        [0, n); every node starts as its own singleton, nodes with no
+        valid incident edge stay isolated (spanning *forest*).
+
+    Returns:
+      (sel_idx, sel_valid, labels): (n,) int32 indices into the edge
+      list of the chosen edges (caller gathers endpoints/payloads),
+      (n,) bool validity (a connected m-node input yields m-1 True
+      slots), and (n,) int32 final component labels.
+
+    Ties break by edge index — a strict total order on (w, index), so
+    the hook graph has only 2-cycles (same argument as ``boruvka_jax``)
+    and the forest is deterministic.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    E = eu.shape[0]
+    rounds = max(1, int(np.ceil(np.log2(max(n, 2)))) + 1)
+    jumps = rounds
+    BIG = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    INF = jnp.asarray(np.inf, dtype=ew.dtype)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    idx_e = jnp.arange(E, dtype=jnp.int32)
+    eu = eu.astype(jnp.int32)
+    ev = ev.astype(jnp.int32)
+
+    def round_fn(state, _):
+        labels, out_idx, out_valid, n_edges = state
+        lu, lv = labels[eu], labels[ev]
+        active = valid & (lu != lv)
+        w_act = jnp.where(active, ew, INF)
+        # per-component min weight, scattering each edge to BOTH sides
+        comp_w = jnp.full((n,), INF, ew.dtype).at[lu].min(w_act).at[lv].min(w_act)
+        hit_u = active & (ew == comp_w[lu])
+        hit_v = active & (ew == comp_w[lv])
+        comp_e = (
+            jnp.full((n,), BIG)
+            .at[lu].min(jnp.where(hit_u, idx_e, BIG))
+            .at[lv].min(jnp.where(hit_v, idx_e, BIG))
+        )
+        has = comp_e < BIG
+        e = jnp.minimum(comp_e, max(E - 1, 0))
+        # component c's chosen edge joins labels (a, b), one of which is c
+        a, b = labels[eu[e]], labels[ev[e]]
+        tgt = jnp.where(a == iota, b, a)
+        # mirrored 2-cycle iff both components chose the same edge index
+        mirror = has & (comp_e[tgt] == comp_e)
+        keep = has & ~(mirror & (iota > tgt))
+        parent = jnp.where(has, tgt, iota)
+        parent = jnp.where(mirror & (iota < tgt), iota, parent)
+
+        def jump(m, _):
+            return m[m], None
+
+        parent, _ = jax.lax.scan(jump, parent, None, length=jumps, unroll=4)
+        labels = parent[labels]
+        slot = n_edges + jnp.cumsum(keep.astype(jnp.int32)) - 1
+        slot = jnp.where(keep, jnp.minimum(slot, n - 1), n)  # n = trash
+        out_idx = out_idx.at[slot].set(e)
+        out_valid = out_valid.at[slot].set(keep)
+        return (labels, out_idx, out_valid, n_edges + jnp.sum(keep.astype(jnp.int32))), None
+
+    state = (
+        iota,
+        jnp.zeros((n + 1,), jnp.int32),
+        jnp.zeros((n + 1,), dtype=bool),
+        jnp.asarray(0, jnp.int32),
+    )
+    state, _ = jax.lax.scan(round_fn, state, None, length=rounds, unroll=2)
+    labels, out_idx, out_valid, _ = state
+    return out_idx[:-1], out_valid[:-1], labels
+
+
+def boruvka_strip_jax(eu, ev, ew, evalid, sids, SW, smask, n: int):
+    """Borůvka MSF over an explicit edge list PLUS dense row strips.
+
+    The workhorse of the batched insert rule (core.dynamic_jax): the
+    candidate set ``T ∪ U×V`` — old tree edges as a (E,) list, the
+    touched rows U as a dense (|U|, n) strip — would cost O(|U|·n)
+    *scattered* elements per round as a flat list, which is the CPU
+    bottleneck.  Here the strip's per-component minima are computed with
+    dense masked row/column reductions (vectorized, cheap) and only the
+    (|U|,)/(n,)-sized results are scattered; per-round scatter volume
+    drops to O(E + n).
+
+    Args:
+      eu, ev, ew, evalid: (E,) explicit edges (masked slots inert).
+      sids: (U,) int32 node id of each strip row.
+      SW: (U, n) strip weights (row u's edge to every node).
+      smask: (U, n) bool — usable strip entries (self/dead cols False).
+      n: node-slot count (static).
+
+    Returns:
+      (pay, pay_valid, labels): (n,) payload of each selected edge —
+      ``pay < E`` is an index into the edge list, ``pay >= E`` encodes
+      strip entry ``(pay - E) = row * n + col`` — plus the final
+      component labels.  Ties break on the canonical undirected pair id
+      (min·n+max), so a pair duplicated between the list and the strip
+      resolves identically on both sides of a mirror.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    E = eu.shape[0]
+    U = SW.shape[0]
+    rounds = max(1, int(np.ceil(np.log2(max(n, 2)))) + 1)
+    jumps = rounds
+    BIG = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    INF = jnp.asarray(np.inf, dtype=SW.dtype)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    eu = eu.astype(jnp.int32)
+    ev = ev.astype(jnp.int32)
+    sids = sids.astype(jnp.int32)
+    eid_tree = jnp.minimum(eu, ev) * n + jnp.maximum(eu, ev)
+    su, sv = sids[:, None], iota[None, :]
+    eid_strip = jnp.minimum(su, sv) * n + jnp.maximum(su, sv)
+    pay_tree = jnp.arange(E, dtype=jnp.int32)
+    pay_strip = E + jnp.arange(U * n, dtype=jnp.int32).reshape(U, n)
+
+    def round_fn(state, _):
+        lab, out_pay, out_ok, n_edges = state
+        lu, lv = lab[eu], lab[ev]
+        eact = evalid & (lu != lv)
+        ewa = jnp.where(eact, ew, INF)
+        slab = lab[sids]
+        act = smask & (slab[:, None] != lab[None, :])
+        SWa = jnp.where(act, SW, INF)
+        rmin = jnp.min(SWa, axis=1)  # (U,) best outgoing per strip row
+        cmin = jnp.min(SWa, axis=0)  # (n,) best incoming per column
+        comp_w = (
+            jnp.full((n,), INF, SW.dtype)
+            .at[lu].min(ewa).at[lv].min(ewa)
+            .at[slab].min(rmin).at[lab].min(cmin)
+        )
+        # tie-break pass: min canonical pair id among weight-achievers
+        e_hit_u = eact & (ew == comp_w[lu])
+        e_hit_v = eact & (ew == comp_w[lv])
+        s_hit_r = act & (SW == comp_w[slab][:, None])
+        s_hit_c = act & (SW == comp_w[lab][None, :])
+        reid = jnp.min(jnp.where(s_hit_r, eid_strip, BIG), axis=1)
+        ceid = jnp.min(jnp.where(s_hit_c, eid_strip, BIG), axis=0)
+        comp_eid = (
+            jnp.full((n,), BIG)
+            .at[lu].min(jnp.where(e_hit_u, eid_tree, BIG))
+            .at[lv].min(jnp.where(e_hit_v, eid_tree, BIG))
+            .at[slab].min(reid).at[lab].min(ceid)
+        )
+        # payload pass: an actual edge matching (comp_w, comp_eid)
+        rpay = jnp.min(
+            jnp.where(s_hit_r & (eid_strip == comp_eid[slab][:, None]), pay_strip, BIG),
+            axis=1,
+        )
+        cpay = jnp.min(
+            jnp.where(s_hit_c & (eid_strip == comp_eid[lab][None, :]), pay_strip, BIG),
+            axis=0,
+        )
+        comp_pay = (
+            jnp.full((n,), BIG)
+            .at[lu].min(jnp.where(e_hit_u & (eid_tree == comp_eid[lu]), pay_tree, BIG))
+            .at[lv].min(jnp.where(e_hit_v & (eid_tree == comp_eid[lv]), pay_tree, BIG))
+            .at[slab].min(rpay).at[lab].min(cpay)
+        )
+        has = comp_eid < BIG
+        pay = jnp.minimum(comp_pay, E + U * n - 1)
+        is_strip = pay >= E
+        t_idx = jnp.minimum(pay, max(E - 1, 0))
+        s_flat = jnp.maximum(pay - E, 0)
+        pu = jnp.where(is_strip, sids[s_flat // n], eu[t_idx])
+        pv = jnp.where(is_strip, (s_flat % n).astype(jnp.int32), ev[t_idx])
+        a, b = lab[pu], lab[pv]
+        tgt = jnp.where(a == iota, b, a)
+        mirror = has & (comp_eid[tgt] == comp_eid)
+        keep = has & ~(mirror & (iota > tgt))
+        parent = jnp.where(has, tgt, iota)
+        parent = jnp.where(mirror & (iota < tgt), iota, parent)
+
+        def jump(m, _):
+            return m[m], None
+
+        parent, _ = jax.lax.scan(jump, parent, None, length=jumps, unroll=4)
+        lab = parent[lab]
+        slot = n_edges + jnp.cumsum(keep.astype(jnp.int32)) - 1
+        slot = jnp.where(keep, jnp.minimum(slot, n - 1), n)
+        out_pay = out_pay.at[slot].set(pay)
+        out_ok = out_ok.at[slot].set(keep)
+        return (lab, out_pay, out_ok, n_edges + jnp.sum(keep.astype(jnp.int32))), None
+
+    state = (
+        iota,
+        jnp.zeros((n + 1,), jnp.int32),
+        jnp.zeros((n + 1,), dtype=bool),
+        jnp.asarray(0, jnp.int32),
+    )
+    state, _ = jax.lax.scan(round_fn, state, None, length=rounds, unroll=2)
+    labels, out_pay, out_ok, _ = state
+    return out_pay[:-1], out_ok[:-1], labels

@@ -129,7 +129,7 @@ class StreamCurator:
         labels = out.bubble_labels
         a = assign_points(np.asarray(Z, dtype=np.float64), b)
         lab = labels[a]
-        mass = np.array([b.n[labels == l].sum() if l >= 0 else b.n.sum() for l in lab])
+        mass = np.array([b.n[labels == lb].sum() if lb >= 0 else b.n.sum() for lb in lab])
         w = 1.0 / np.maximum(mass, 1.0)
         beta = b.n / max(b.n.sum(), 1.0)
         mu, sd = float(beta.mean()), float(beta.std())

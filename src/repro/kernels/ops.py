@@ -46,6 +46,8 @@ __all__ = [
     "OfflineClusterResult",
     "offline_recluster",
     "offline_recluster_from_table",
+    "incremental_update",
+    "incremental_recluster",
     "ClusterBackend",
     "get_backend",
 ]
@@ -188,12 +190,16 @@ def bubble_core_distances(rep, n_b, extent, min_pts: int, use_ref: bool | None =
     n_b = jnp.asarray(n_b)
     extent = jnp.asarray(extent)
     L, d = rep.shape
-    if not isinstance(n_b, jax.core.Tracer):
+    try:
         # Eq. 6's scan can never reach min_pts beyond the represented
         # mass (knn's k=min(k,m) rule; the strip kernel's extraction
-        # prefix relies on it).  Jitted callers see tracers and must
-        # pre-clamp — offline_recluster_from_table does.
+        # prefix relies on it).  Jitted callers see tracers (the int()
+        # below raises) and must pre-clamp — offline_recluster_from_table
+        # does.  ConcretizationTypeError is the stable cross-version way
+        # to detect a tracer (jax.core.Tracer moved across releases).
         min_pts = max(1, min(int(min_pts), int(jnp.sum(n_b))))
+    except jax.errors.ConcretizationTypeError:
+        pass
     if _resolve_ref(use_ref) or L > _BCD_VMEM_LIMIT:
         return _bubble_cd(rep, n_b, extent, min_pts)
     # shrink blocks toward tiny tables, floor at the f32 sublane count
@@ -475,6 +481,16 @@ def offline_recluster_from_table(
         bool(allow_single_cluster),
     )
     W_dev = out.pop("W")
+    result = _unwrap_result(out, L, mcs, Ng)
+    if return_w:
+        return np.asarray(W_dev)[:L, :L], result
+    return result
+
+
+def _unwrap_result(out, L: int, mcs: float, weights: np.ndarray) -> OfflineClusterResult:
+    """Device output dict (fixed-size buffers) → host OfflineClusterResult.
+    Shared by the fused offline pipeline and the incremental fast path
+    (which pre-fetches the dict; device_get is a no-op on numpy)."""
     out = jax.device_get(out)  # ONE host sync for all result buffers
     keep = out["valid"]
     edges = (
@@ -485,11 +501,11 @@ def offline_recluster_from_table(
     K = int(out["n_labels"])
     sel = out["selected"][:K]
     all_stab = out["stability"].astype(np.float64)[:K]
-    result = OfflineClusterResult(
+    return OfflineClusterResult(
         labels=out["labels"].astype(np.int64)[:L],
         stabilities=all_stab[sel],
         mst=edges,
-        weights=Ng,
+        weights=weights,
         min_cluster_size=mcs,
         point_parent=out["point_parent"].astype(np.int64)[:L],
         point_lambda=out["point_lambda"].astype(np.float64)[:L],
@@ -499,9 +515,112 @@ def offline_recluster_from_table(
         selected=sel,
         all_stabilities=all_stab,
     )
-    if return_w:
-        return np.asarray(W_dev)[:L, :L], result
-    return result
+
+
+# --------------------------------------------------------------------------
+# hybrid exact-dynamic fast path (core.dynamic_jax + hierarchy-only labels)
+# --------------------------------------------------------------------------
+
+def incremental_update(
+    state, *, insert=None, slots=None, delete=None, valid=None,
+    min_pts: int, rk_cap: int = 64, s_cap: int = 64,
+):
+    """One jit'd incremental-maintenance step over a padded block.
+
+    The device realization of the paper's update rules (Eqs. 11–12,
+    core.dynamic_jax): pass EITHER ``insert`` ((Bp, d) rows + ``slots``)
+    OR ``delete`` ((Bp,) slot ids); ``valid`` masks padding rows.
+    Returns the updated DynState; check ``state.ok`` — False means an
+    RkNN/S' strip overflowed its bucket and the caller must rebuild
+    (``core.dynamic_jax.rebuild`` / the engine's full pass).
+    """
+    from repro.core import dynamic_jax as dj
+
+    if (insert is None) == (delete is None):
+        raise ValueError("pass exactly one of insert= / delete=")
+    if insert is not None:
+        return dj.insert_batch(
+            state, jnp.asarray(insert), jnp.asarray(slots), jnp.asarray(valid),
+            min_pts=int(min_pts), rk_cap=int(rk_cap),
+        )
+    return dj.delete_batch(
+        state, jnp.asarray(delete), jnp.asarray(valid),
+        min_pts=int(min_pts), rk_cap=int(rk_cap), s_cap=int(s_cap),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("method", "allow_single"))
+def _incremental_pipeline(
+    X, mst_u, mst_v, mst_raw, mst_valid, cd, alive, n_alive, mcs,
+    method: str = "eom", allow_single: bool = False,
+):
+    """Maintained MST buffers → flat labels, skipping d_m → Borůvka.
+
+    The incremental fast path's second half: compact the alive slots to
+    leaf ids 0..n-1 (rank = running count over the alive mask — ascending
+    slot order, matching the host-side slot→row mapping), re-derive the
+    mutual-reachability edge weights from raw lengths + current core
+    distances, and feed the same fused hierarchy stages the offline pass
+    uses (single-linkage → condense → extract, core.hierarchy_jax).  The
+    compacted coordinate rows ride along in the same output dict so the
+    serve plane gets its representatives from the ONE host sync."""
+    from repro.core.hierarchy_jax import hierarchy_fixed
+
+    Np = alive.shape[0]
+    rank = (jnp.cumsum(alive.astype(jnp.int32)) - 1).astype(jnp.int32)
+    perm = jnp.argsort(jnp.where(alive, 0, 1), stable=True)
+    eu = jnp.where(mst_valid, rank[mst_u], 0)
+    ev = jnp.where(mst_valid, rank[mst_v], 0)
+    ew = jnp.maximum(mst_raw, jnp.maximum(cd[mst_u], cd[mst_v])).astype(jnp.float32)
+    ew = jnp.where(mst_valid, ew, 0.0)
+    weights = (jnp.arange(Np) < n_alive).astype(jnp.float32)
+    slt, ct, ex = hierarchy_fixed(
+        eu, ev, ew, mst_valid, n_alive, weights, mcs,
+        method=method, allow_single_cluster=allow_single,
+    )
+    return {
+        "rep": X[perm],
+        "eu": eu, "ev": ev, "ew": ew, "valid": mst_valid,
+        "labels": ex.labels,
+        "stability": ex.stability,
+        "selected": ex.selected,
+        "n_clusters": ex.n_clusters,
+        "point_parent": ct.point_parent,
+        "point_lambda": ct.point_lambda,
+        "cluster_parent": ct.cluster_parent,
+        "cluster_birth": ct.cluster_birth,
+        "cluster_weight": ct.cluster_weight,
+        "n_labels": ct.n_labels,
+    }
+
+
+def incremental_recluster(
+    state, min_cluster_size: float, method: str = "eom",
+    allow_single_cluster: bool = False,
+):
+    """Labels straight from an incrementally maintained MST (DynState).
+
+    Returns (OfflineClusterResult, alive_slots, rep): result rows are in
+    ascending-slot order, ``alive_slots[i]`` is the state slot id of row
+    i, and ``rep`` is the (n, d) f32 coordinate row per result row
+    (gathered on device, so the serve plane never re-transfers the
+    padded X buffer).  This is the payoff of the hybrid path — an
+    update's labels cost only the O(Np) hierarchy scans, never the
+    O(Np²) d_m → Borůvka stages a from-scratch pass pays.
+    """
+    n = int(state.n_alive)
+    mcs = float(min_cluster_size)
+    out = _incremental_pipeline(
+        state.X, state.mst_u, state.mst_v, state.mst_raw, state.mst_valid,
+        state.cd, state.alive, jnp.asarray(n, jnp.int32),
+        jnp.asarray(mcs, jnp.float32),
+        method, bool(allow_single_cluster),
+    )
+    out = jax.device_get(out)  # ONE host sync: labels, arrays, serve reps
+    rep = out.pop("rep")[:n]
+    result = _unwrap_result(out, n, mcs, np.ones(n, dtype=np.float64))
+    alive_slots = np.nonzero(np.asarray(state.alive))[0]
+    return result, alive_slots, rep
 
 
 class ClusterBackend:
@@ -564,6 +683,17 @@ class ClusterBackend:
             rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
             use_ref=self.use_ref, return_w=return_w,
         )
+
+    def make_dynamic(self, min_pts: int, dim: int, capacity: int = 256, **kw):
+        """Incremental-maintenance handle (core.dynamic_jax).  The
+        update scans are backend-independent jnp (like hierarchy_jax);
+        the backend still owns the serve-plane assign kernels."""
+        from repro.core.dynamic_jax import DynamicJaxHDBSCAN
+
+        return DynamicJaxHDBSCAN(min_pts, dim, capacity=capacity, **kw)
+
+    def incremental_recluster(self, state, min_cluster_size: float, **kw):
+        return incremental_recluster(state, min_cluster_size, **kw)
 
 
 def get_backend(name: str = "auto") -> ClusterBackend:

@@ -21,7 +21,6 @@ Usage:
 """
 
 import argparse
-import hashlib
 import json
 import time
 import traceback
@@ -31,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCH_IDS, SHAPES, cells, get
+from repro.configs import SHAPES, cells, get
 from repro.launch import sharding as SH
 from repro.launch.hlo_stats import analyze_module, roofline_terms
 from repro.launch.mesh import make_production_mesh

@@ -46,8 +46,8 @@ def leaf(value, axes):
 
 def split(tree):
     """Leaf tree -> (value tree, axes tree)."""
-    vals = jax.tree.map(lambda l: l.value, tree, is_leaf=lambda x: isinstance(x, Leaf))
-    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    vals = jax.tree.map(lambda lf: lf.value, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    axes = jax.tree.map(lambda lf: lf.axes, tree, is_leaf=lambda x: isinstance(x, Leaf))
     return vals, axes
 
 
@@ -209,7 +209,7 @@ def _flash_sdpa(q, k, v, qpos, kpos, causal, window, cq=1024, ck=1024):
         qpb = qp[:, qi]  # (B, cq)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, lse, acc = carry
             kb = kc[:, ki]
             vb = vc[:, ki]
             kpb = kp[:, ki]
@@ -219,7 +219,7 @@ def _flash_sdpa(q, k, v, qpos, kpos, causal, window, cq=1024, ck=1024):
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            l_new = lse * corr + jnp.sum(p, axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bkgqs,bskd->bkgqd", p.astype(qb.dtype), vb
             ).astype(jnp.float32)
@@ -228,8 +228,8 @@ def _flash_sdpa(q, k, v, qpos, kpos, causal, window, cq=1024, ck=1024):
         m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
         a0 = jnp.zeros((B, KV, G, cq, Dh), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        (m, lse, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(lse[..., None], 1e-30)
         # (B, KV, G, cq, Dh) -> (B, cq, H, Dh)
         return jnp.moveaxis(out, 3, 1).reshape(B, cq, H, Dh).astype(q.dtype)
 

@@ -14,15 +14,12 @@ the roofline table and the tests share one source of truth.
 
 from __future__ import annotations
 
-import functools
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train.optim import AdamWConfig, adamw_update
 
 from . import layers as L
 from .transformer import FAMILIES
@@ -52,7 +49,7 @@ def abstract_params(cfg: ArchConfig):
 
 
 def count_params(values) -> int:
-    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(values)))
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(values)))
 
 
 def model_flops_per_token(cfg: ArchConfig, values=None) -> float:
@@ -154,10 +151,10 @@ def make_train_step(cfg: ArchConfig, opt: AdamWConfig | None = None, microbatche
             grads = _constrain_grads(grads)
         else:
             def micro(accum, mb):
-                l, g = jax.value_and_grad(fwd)(params, mb)
+                loss_mb, g = jax.value_and_grad(fwd)(params, mb)
                 g = _constrain_grads(g)
                 acc_l, acc_g = accum
-                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+                return (acc_l + loss_mb, jax.tree.map(jnp.add, acc_g, g)), None
 
             sliced = jax.tree.map(
                 lambda a: a.reshape((microbatches, a.shape[0] // microbatches) + a.shape[1:]),

@@ -23,7 +23,6 @@ Scan-over-layers keeps lowered HLO size O(1) in depth — essential for the
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -172,7 +171,10 @@ class UniformDecoder:
         (ring buffer); prefill always uses a full-length cache (the window
         only masks attention)."""
         cfg = self.cfg
-        kv = lambda: jnp.zeros((cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        def kv():
+            return jnp.zeros(
+                (cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype
+            )
         # per-row write heads: (layers, B) so the serving engine can run
         # continuous batching with unaligned request positions
         return {"self": {"k": kv(), "v": kv()}, "pos": jnp.zeros((cfg.n_layers, batch_size), jnp.int32)}
@@ -272,7 +274,10 @@ class VisionDecoder(UniformDecoder):
 
     def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
         cfg = self.cfg
-        kv = lambda lead: jnp.zeros(lead + (batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        def kv(lead):
+            return jnp.zeros(
+                lead + (batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype
+            )
         return {
             "self_groups": {
                 "self": {"k": kv((self.n_groups, self.n_self)), "v": kv((self.n_groups, self.n_self))},
@@ -449,7 +454,10 @@ class HybridDecoder:
     def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
         cfg = self.cfg
         m = mamba2_init_state(cfg, batch_size, dtype)
-        kv = lambda: jnp.zeros((self.n_groups, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        def kv():
+            return jnp.zeros(
+                (self.n_groups, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype
+            )
         return {
             "mamba_groups": jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (self.n_groups, cfg.hybrid_group) + a.shape), m

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.launch.sharding import constrain
 
 from . import layers as L
-from .transformer import _remat, block_init, stack_init
+from .transformer import _remat, stack_init
 
 
 def _enc_block_init(key, cfg):
@@ -127,7 +127,10 @@ class WhisperModel:
 
     def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
         cfg = self.cfg
-        kv = lambda: jnp.zeros((cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        def kv():
+            return jnp.zeros(
+                (cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim), dtype
+            )
         return {"self": {"k": kv(), "v": kv()}, "pos": jnp.zeros((cfg.n_layers, batch_size), jnp.int32)}
 
     def prefill(self, params, tokens, frames):

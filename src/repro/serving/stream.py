@@ -33,6 +33,18 @@ calls into a serving loop with three planes:
                   so reads never block on ingestion or re-clustering and
                   always see the newest complete hierarchy.
 
+  hybrid exact-dynamic fast path (``exact=True``, DESIGN.md §7): instead
+  of summarizing into bubbles and re-clustering from scratch on ε drift,
+  the engine maintains the *point-level* mutual-reachability MST
+  device-resident (core.dynamic_jax — the paper's Eqs. 11–12 as array
+  code) and labels come from the maintained edges through the same fused
+  hierarchy stages (`ops.incremental_recluster`), skipping the
+  O(n²) d_m → Borůvka stages entirely.  An `UpdatePolicy` routes each
+  applied block: small dirty batches go through the incremental rules;
+  blocks above the touched-fraction crossover (or ones forcing a
+  capacity-bucket grow) fall back to a from-scratch device pass —
+  `core.dynamic.DynamicHDBSCAN` stays unchanged as the host oracle.
+
 The kernel backend (Pallas vs pure-jnp) is resolved ONCE at construction
 via `ops.get_backend`; hot loops never re-check platform or env vars.
 """
@@ -53,6 +65,7 @@ from .engine import HostBatcher
 __all__ = [
     "Ticket",
     "StalenessPolicy",
+    "UpdatePolicy",
     "ClusterSnapshot",
     "StreamingClusterEngine",
 ]
@@ -96,6 +109,40 @@ class StalenessPolicy:
             return True
         eff = max(0.0, tree.dirty_mass - pending)
         return eff / max(float(tree.n_points), 1.0) >= self.epsilon
+
+
+@dataclasses.dataclass
+class UpdatePolicy:
+    """Crossover heuristic for the hybrid exact-dynamic fast path.
+
+    The paper's feasibility study (Fig. 3) and the fig3_dynamic bench
+    agree: incremental maintenance wins while the touched fraction is
+    small and loses to a from-scratch pass as it grows.  Each applied
+    block is routed accordingly:
+
+      * ``incremental`` — block points ≤ ``max_update_frac`` × current
+        population: apply Eqs. 11–12 on device, then labels via the
+        hierarchy-only stages.
+      * ``full`` — big blocks, tiny populations (a full pass is cheap
+        and compiles the incremental scans lazily), or blocks that
+        would grow the capacity bucket (recompilation is paid either
+        way, and a rebuild at the new bucket resets the free list in
+        one step).
+
+    A third, *retroactive* fallback lives in core.dynamic_jax: an
+    RkNN/S' strip overflow flips the state's ``ok`` bit and the engine
+    rebuilds — same economics, discovered mid-flight.
+    """
+
+    max_update_frac: float = 0.05
+    min_incremental_points: int = 64
+
+    def route(self, n_before: int, block_points: int, grows: bool) -> str:
+        if grows or n_before < self.min_incremental_points:
+            return "full"
+        if block_points > self.max_update_frac * max(n_before, 1):
+            return "full"
+        return "incremental"
 
 
 @dataclasses.dataclass
@@ -165,6 +212,13 @@ class StreamingClusterEngine:
       device_assign: route the online point→leaf argmin through the kernel
         backend (None = only when the backend is Pallas/TPU; host numpy is
         faster for CPU-sized blocks).
+      exact: hybrid exact-dynamic fast path — maintain the point-level
+        MST incrementally on device (core.dynamic_jax) and refresh exact
+        labels every poll; ε-staleness and bubble summarization are
+        bypassed (the tree still ingests, as the authoritative point
+        store).  Sync-only.
+      update_policy: incremental-vs-full routing (exact mode only).
+      exact_capacity: initial slot-capacity bucket of the dynamic state.
       **tree_kw: forwarded to BubbleTree.
     """
 
@@ -181,6 +235,9 @@ class StreamingClusterEngine:
         async_offline: bool = False,
         min_offline_points: int = 32,
         device_assign: bool | None = None,
+        exact: bool = False,
+        update_policy: UpdatePolicy | None = None,
+        exact_capacity: int = 256,
         **tree_kw,
     ):
         self.backend = ops.get_backend(backend)
@@ -210,6 +267,20 @@ class StreamingClusterEngine:
         self._settled_version = 0
         self._inflight_consumed = 0.0  # dirty mass captured by the running pass
         self._offline_error: BaseException | None = None
+        self.exact = bool(exact)
+        self.update_policy = update_policy if update_policy is not None else UpdatePolicy()
+        self._dyn = None
+        self._dyn_stale = True  # no incremental state until the first rebuild
+        self._pid2slot: dict[int, int] = {}
+        if self.exact:
+            if self.async_offline:
+                raise ValueError(
+                    "exact=True refreshes labels synchronously per poll; "
+                    "async_offline is not supported"
+                )
+            self._dyn = self.backend.make_dynamic(
+                self.min_pts, dim, capacity=int(exact_capacity)
+            )
         self.stats = {
             "inserts": 0,
             "deletes": 0,
@@ -218,6 +289,9 @@ class StreamingClusterEngine:
             "recluster_skipped_busy": 0,
             "recluster_failures": 0,
             "offline_seconds_total": 0.0,
+            "incremental_blocks": 0,
+            "exact_full_blocks": 0,
+            "exact_rebuilds": 0,
         }
 
     # -- request plane -----------------------------------------------------
@@ -253,6 +327,7 @@ class StreamingClusterEngine:
             if kind == "insert":
                 X = np.concatenate([x for x, _ in items], axis=0)
                 pids = self.tree.insert_block(X)
+                self._exact_apply_insert(X, pids)
                 off = 0
                 for x, ticket in items:  # requests are never split: one fill
                     take = x.shape[0]
@@ -278,10 +353,13 @@ class StreamingClusterEngine:
                         except KeyError as e:
                             if err is None:
                                 err = e
+                        else:
+                            self._exact_apply_delete(chunk)
                     self.stats["deletes"] += done
                     if err is not None:
                         raise err
                 else:
+                    self._exact_apply_delete(flat)
                     self.stats["deletes"] += len(flat)
                     applied += len(flat)
             self.stats["blocks_applied"] += 1
@@ -313,6 +391,92 @@ class StreamingClusterEngine:
         self.submit_delete(pids)
         self.poll()
 
+    # -- hybrid exact-dynamic fast path ------------------------------------
+
+    def _exact_apply_insert(self, X, pids):
+        """Route one applied insert block through the incremental rules
+        (Eq. 11) or mark the device state stale for a full rebuild at the
+        next refresh — the UpdatePolicy crossover."""
+        if not self.exact:
+            return
+        route = self.update_policy.route(
+            self._dyn.n, len(pids), self._dyn.would_grow(len(pids))
+        )
+        if self._dyn_stale or route == "full":
+            self._dyn_stale = True
+            self.stats["exact_full_blocks"] += 1
+            return
+        slots = self._dyn.insert_block(X)
+        for p, s in zip(pids, slots):
+            self._pid2slot[int(p)] = s
+        self.stats["incremental_blocks"] += 1
+
+    def _exact_apply_delete(self, pids):
+        """Same, for deletions (Eq. 12).  An RkNN/S' strip overflow
+        inside the update rebuilds the state in place (slot assignments
+        survive), so the mapping stays valid either way."""
+        if not self.exact:
+            return
+        route = self.update_policy.route(self._dyn.n, len(pids), False)
+        if self._dyn_stale or route == "full":
+            self._dyn_stale = True
+            self.stats["exact_full_blocks"] += 1
+            for p in pids:
+                self._pid2slot.pop(int(p), None)
+            return
+        self._dyn.delete_block([self._pid2slot.pop(int(p)) for p in pids])
+        self.stats["incremental_blocks"] += 1
+
+    def _rebuild_dyn(self):
+        """Full pass: reload the device state from the tree's alive
+        points (the authoritative store) and rebuild kNN/cd/MST from
+        scratch — the fallback leg of the hybrid path."""
+        pids, X = self.tree.alive_points()
+        slots = self._dyn.load(X, slots=list(range(len(pids))), shrink=True)
+        self._pid2slot = {int(p): s for p, s in zip(pids, slots)}
+        self._dyn_stale = False
+        self.stats["exact_rebuilds"] += 1
+
+    def _exact_refresh(self, force: bool = False) -> bool:
+        """Exact-mode analog of maybe_recluster: every poll that left the
+        tree dirty refreshes the snapshot — incremental states pay only
+        the hierarchy stages; stale/overflowed ones pay one rebuild."""
+        n = self.tree.n_points
+        if n < 2 or (n < self.policy.min_points and not force):
+            return False
+        if self.tree.dirty_mass <= 0 and self._snapshot is not None and not force:
+            return False
+        t0 = time.perf_counter()
+        dirty_captured = self.tree.dirty_mass
+        if self._dyn_stale or not self._dyn.ok or self._dyn.n != n:
+            self._rebuild_dyn()
+        # snapshot rows = ascending device slot; the pipeline gathers the
+        # serve-plane representatives on device, so the per-poll refresh
+        # is ONE host sync — no tree gather, no pid-map inversion, no
+        # padded-buffer re-transfer
+        res, _, rep32 = ops.incremental_recluster(
+            self._dyn.state, self.min_cluster_size
+        )
+        rep = rep32.astype(np.float64)
+        wall = time.perf_counter() - t0
+        self._version += 1
+        snap = ClusterSnapshot(
+            version=self._version,
+            n_points=int(n),
+            bubble_rep=rep,
+            bubble_n=np.ones(rep.shape[0], dtype=np.float64),
+            center=rep.mean(axis=0) if rep.size else np.zeros(self.tree.dim),
+            result=res,
+            wall_seconds=wall,
+            dirty_consumed=float(dirty_captured),
+        )
+        with self._snapshot_lock:
+            self._snapshot = snap
+        self.stats["recluster_count"] += 1
+        self.stats["offline_seconds_total"] += wall
+        self._settle()
+        return True
+
     # -- offline plane -----------------------------------------------------
 
     def _settle(self):
@@ -330,7 +494,10 @@ class StreamingClusterEngine:
         """Trigger an offline pass if the policy says the hierarchy is
         stale (or `force`).  Async mode: returns immediately; a pass
         already in flight absorbs the trigger (its successor will see the
-        accumulated dirty mass)."""
+        accumulated dirty mass).  Exact mode routes to the hybrid
+        fast-path refresh instead (per-poll, never ε-deferred)."""
+        if self.exact:
+            return self._exact_refresh(force)
         self._raise_pending_offline_error()
         # liveness BEFORE settle: if the pass lands in between, settle still
         # consumes its mass before any capture below — never after (a

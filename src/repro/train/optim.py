@@ -41,7 +41,8 @@ class AdamWConfig:
 
 
 def adamw_init(params: Pytree) -> Pytree:
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),
@@ -61,7 +62,7 @@ def lr_schedule(cfg: AdamWConfig, step):
 
 def global_norm(tree: Pytree):
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, params: Pytree, grads: Pytree, state: Pytree):

@@ -10,7 +10,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.dynamic import DynamicHDBSCAN
-from repro.core.hdbscan import core_distances, hdbscan, mutual_reachability, single_linkage
+from repro.core.hdbscan import core_distances, hdbscan, single_linkage
 from repro.core.metrics import nmi
 
 

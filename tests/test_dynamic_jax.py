@@ -1,0 +1,192 @@
+"""Device-resident dynamic HDBSCAN (core.dynamic_jax) vs the host oracle.
+
+THE exactness contract of the hybrid fast path: after ANY sequence of
+insertions/deletions — applied through the jit'd Eq. 11/12 array rules,
+including overflow rebuilds and capacity-bucket growth — the maintained
+MST's total mutual-reachability weight matches ``core.dynamic``'s f64
+oracle (to f32 tolerance), and the labels produced by feeding the
+maintained edges through the fused hierarchy stages match a from-scratch
+static ``hdbscan()`` up to permutation.
+"""
+
+import numpy as np
+import pytest
+from conftest import assert_same_partition
+
+from repro.core.dynamic import DynamicHDBSCAN
+from repro.core.dynamic_jax import DynamicJaxHDBSCAN, state_mst_weights
+from repro.core.hdbscan import hdbscan
+from repro.kernels import ops
+
+MP = 5
+REL = 1e-6
+
+
+def _assert_weight(dev: DynamicJaxHDBSCAN, oracle: DynamicHDBSCAN, msg=""):
+    w_dev, w_or = dev.total_weight(), oracle.total_weight()
+    assert w_dev == pytest.approx(w_or, rel=REL, abs=1e-6), (
+        f"{msg}: device {w_dev} vs oracle {w_or}"
+    )
+
+
+def _mirror_insert(dev, oracle, X, slot2oid):
+    slots = dev.insert_block(X)
+    for s, p in zip(slots, X):
+        slot2oid[s] = oracle.insert(p)
+    return slots
+
+
+class TestInsertion:
+    def test_incremental_matches_oracle(self, rng):
+        dev = DynamicJaxHDBSCAN(min_pts=MP, dim=3, capacity=64)
+        oracle = DynamicHDBSCAN(min_pts=MP, dim=3)
+        s2o = {}
+        for i in range(6):
+            _mirror_insert(dev, oracle, rng.normal(size=(8, 3)), s2o)
+            _assert_weight(dev, oracle, f"after {8 * (i + 1)} inserts")
+        assert dev.ok
+
+    def test_core_distances_maintained(self, rng):
+        X = rng.normal(size=(40, 2))
+        dev = DynamicJaxHDBSCAN(min_pts=4, dim=2, capacity=64)
+        slots = dev.insert_block(X)
+        from repro.core.hdbscan import core_distances
+
+        cd_static = core_distances(X, 4)
+        cd_dev = np.asarray(dev.state.cd)[slots]
+        np.testing.assert_allclose(cd_dev, cd_static, rtol=1e-5, atol=1e-6)
+
+    def test_block_equals_sequential(self, rng):
+        """CF of the paper's order-independence: one padded block and a
+        row-at-a-time stream land on the same structure."""
+        X = rng.normal(size=(24, 2))
+        a = DynamicJaxHDBSCAN(min_pts=MP, dim=2, capacity=32)
+        b = DynamicJaxHDBSCAN(min_pts=MP, dim=2, capacity=32)
+        a.insert_block(X)
+        for row in X:
+            b.insert_block(row[None, :])
+        assert a.total_weight() == pytest.approx(b.total_weight(), rel=1e-6)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(a.state.cd)), np.sort(np.asarray(b.state.cd)),
+            rtol=1e-6, atol=1e-7,
+        )
+
+
+class TestDeletion:
+    def test_delete_matches_oracle(self, rng):
+        dev = DynamicJaxHDBSCAN(min_pts=MP, dim=3, capacity=64)
+        oracle = DynamicHDBSCAN(min_pts=MP, dim=3)
+        s2o = {}
+        _mirror_insert(dev, oracle, rng.normal(size=(48, 3)), s2o)
+        alive = list(dev.alive_slots())
+        drop = rng.choice(alive, size=20, replace=False)
+        for j in range(0, 20, 4):
+            ds = [int(s) for s in drop[j : j + 4]]
+            dev.delete_block(ds)
+            oracle.delete_batch([s2o.pop(s) for s in ds])
+            _assert_weight(dev, oracle, f"after {j + 4} deletes")
+
+    def test_delete_hub(self):
+        """Deleting the center of a star (everyone's neighbour) — the
+        RkNN set is the whole population; exactness must survive the
+        overflow → rebuild fallback."""
+        rng = np.random.default_rng(3)
+        ring = rng.normal(size=(30, 2)) * 5.0
+        X = np.concatenate([np.zeros((1, 2)), ring])
+        dev = DynamicJaxHDBSCAN(min_pts=3, dim=2, capacity=32, rk_cap=8, s_cap=8)
+        slots = dev.insert_block(X)
+        dev.delete_block([slots[0]])
+        ref = hdbscan(ring, min_pts=3).total_mst_weight
+        assert dev.total_weight() == pytest.approx(ref, rel=1e-6)
+
+    def test_delete_to_empty(self, rng):
+        dev = DynamicJaxHDBSCAN(min_pts=2, dim=2, capacity=16)
+        slots = dev.insert_block(rng.normal(size=(6, 2)))
+        for s in slots:
+            dev.delete_block([s])
+        assert dev.n == 0
+        assert dev.total_weight() == 0.0
+
+    def test_overflow_poisons_then_rebuilds(self, rng):
+        """Tiny strip buckets: overflows must flip ok and the automatic
+        rebuild must restore exactness."""
+        dev = DynamicJaxHDBSCAN(min_pts=4, dim=2, capacity=64, rk_cap=2, s_cap=2)
+        oracle = DynamicHDBSCAN(min_pts=4, dim=2)
+        s2o = {}
+        _mirror_insert(dev, oracle, rng.normal(size=(40, 2)), s2o)
+        alive = list(dev.alive_slots())
+        drop = [int(s) for s in rng.choice(alive, size=12, replace=False)]
+        dev.delete_block(drop)
+        oracle.delete_batch([s2o.pop(s) for s in drop])
+        assert dev.stats["overflow_rebuilds"] >= 1
+        assert dev.ok
+        _assert_weight(dev, oracle, "post-overflow")
+
+
+class TestGrowthAndLabels:
+    def test_capacity_growth_stays_exact(self, rng):
+        dev = DynamicJaxHDBSCAN(min_pts=4, dim=2, capacity=16)
+        oracle = DynamicHDBSCAN(min_pts=4, dim=2)
+        s2o = {}
+        for i in range(5):
+            _mirror_insert(dev, oracle, rng.normal(size=(8, 2)) + i, s2o)
+        assert dev.stats["grows"] >= 1
+        assert dev.capacity >= 64
+        _assert_weight(dev, oracle, "post-growth")
+
+    def test_labels_match_static(self, blobs):
+        X, _ = blobs
+        dev = DynamicJaxHDBSCAN(min_pts=MP, dim=2, capacity=256)
+        slots = dev.insert_block(X)
+        res, _, _ = ops.incremental_recluster(dev.state, float(MP))
+        order = np.argsort(slots)  # result rows are ascending-slot
+        ref = hdbscan(X[order], min_pts=MP, min_cluster_size=float(MP))
+        assert_same_partition(res.labels, ref.labels)
+        assert res.n_clusters == 3
+
+    def test_labels_after_interleave(self, rng, blobs):
+        X, _ = blobs
+        dev = DynamicJaxHDBSCAN(min_pts=MP, dim=2, capacity=256)
+        slots = dev.insert_block(X[:120])
+        drop = rng.choice(120, size=24, replace=False)
+        dev.delete_block([slots[i] for i in drop])
+        keep = np.ones(120, bool)
+        keep[drop] = False
+        surv_rows = [i for i in np.argsort(slots[:120]) if keep[i]]
+        res, _, _ = ops.incremental_recluster(dev.state, float(MP))
+        ref = hdbscan(X[surv_rows], min_pts=MP, min_cluster_size=float(MP))
+        assert_same_partition(res.labels, ref.labels)
+
+    def test_rebuild_matches_incremental(self, rng):
+        """A from-scratch rebuild of an incrementally built state is a
+        weight no-op (the two pipelines agree on the same geometry)."""
+        dev = DynamicJaxHDBSCAN(min_pts=MP, dim=2, capacity=64)
+        dev.insert_block(rng.normal(size=(40, 2)))
+        w_inc = dev.total_weight()
+        dev.rebuild()
+        assert dev.total_weight() == pytest.approx(w_inc, rel=1e-5)
+
+
+def test_ops_incremental_update_public_api(rng):
+    """ops.incremental_update (ISSUE 3's kernel entry) drives the raw
+    DynState functionally — one insert block, one delete block, both
+    weight-exact against from-scratch static HDBSCAN."""
+    X = rng.normal(size=(20, 2))
+    P = rng.normal(size=(4, 2)) + 3.0
+    dev = DynamicJaxHDBSCAN(min_pts=4, dim=2, capacity=32)
+    dev.insert_block(X)  # occupies slots 0..19
+    st = ops.incremental_update(
+        dev.state, insert=P.astype(np.float32),
+        slots=np.arange(24, 28), valid=np.ones(4, bool), min_pts=4,
+    )
+    assert bool(st.ok)
+    w = float(np.asarray(state_mst_weights(st), np.float64).sum())
+    ref = hdbscan(np.concatenate([X, P]), min_pts=4).total_mst_weight
+    assert w == pytest.approx(ref, rel=1e-6)
+    st = ops.incremental_update(
+        st, delete=np.arange(0, 4), valid=np.ones(4, bool), min_pts=4,
+    )
+    assert bool(st.ok)
+    w = float(np.asarray(state_mst_weights(st), np.float64).sum())
+    ref = hdbscan(np.concatenate([X[4:], P]), min_pts=4).total_mst_weight
+    assert w == pytest.approx(ref, rel=1e-6)

@@ -1,7 +1,6 @@
 """Pallas flash-attention kernel vs oracles (interpret=True on CPU)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st

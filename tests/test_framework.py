@@ -68,7 +68,7 @@ class TestCheckpoint:
 class TestPipeline:
     def test_deterministic_replay(self):
         a = TokenPipeline(100, 4, 16, seed=7)
-        b1 = next(a)
+        next(a)
         b2 = next(a)
         a.close()
         # restart from step 1: identical second batch (restart guarantee)
@@ -224,7 +224,7 @@ class TestTrainDriver:
         assert r2.returncode == 0, r2.stderr[-2000:]
         assert "restored step 6" in r2.stdout
         with open(os.path.join(out, "metrics.jsonl")) as f:
-            recs = [json.loads(l) for l in f]
+            recs = [json.loads(line) for line in f]
         steps = [r["step"] for r in recs]
         assert steps == list(range(6)) + list(range(6, 10))
         assert latest_step(os.path.join(out, "ckpt")) == 10

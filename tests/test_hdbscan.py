@@ -7,9 +7,7 @@ from scipy.sparse.csgraph import minimum_spanning_tree as scipy_mst
 from repro.core.hdbscan import (
     condense_tree,
     core_distances,
-    extract_clusters,
     hdbscan,
-    hdbscan_labels,
     mst_of_points,
     mutual_reachability,
     single_linkage,

@@ -1,0 +1,161 @@
+"""Hybrid exact-dynamic fast path fuzz (ISSUE 3): randomized interleaved
+insert/delete/query streams through ``StreamingClusterEngine(exact=True)``
+where EVERY state — whether produced by the device-incremental rules
+(Eqs. 11–12), an UpdatePolicy full-pass fallback, or an overflow
+rebuild — must match
+
+  * ``core.dynamic.DynamicHDBSCAN`` (f64 host oracle) on MST total
+    weight, and
+  * a from-scratch static ``core.hdbscan.hdbscan()`` on flat labels, up
+    to permutation, over every currently alive point.
+
+Tie caveat (same as tests/test_dynamic.py): mutual-reachability weights
+plateau at exactly max(d, cd) — equal-weight MSTs are common and flat
+partitions are only unique GIVEN a tree, so the label oracle is the
+host hierarchy (single_linkage → condense_tree → extract_clusters →
+hdbscan_labels, core.hdbscan) run over the device's own maintained MST
+edges in device order.  Tree validity itself is pinned by the
+weight-vs-``DynamicHDBSCAN`` check; raw-geometry from-scratch label
+parity on tie-free blob data is covered by tests/test_dynamic_jax.py.
+
+Per-PR CI runs the defaults (≥ 200 steps per backend across the seed
+matrix); the nightly job sets ``REPRO_FUZZ_SCALE=10`` and rotates
+``REPRO_FUZZ_SEED_OFFSET`` so successive nights explore fresh seeds.
+"""
+
+import os
+
+import numpy as np
+import pytest
+from conftest import assert_same_partition
+
+from repro.core.dynamic import DynamicHDBSCAN
+from repro.core.hdbscan import (
+    condense_tree,
+    extract_clusters,
+    hdbscan_labels,
+    single_linkage,
+)
+from repro.serving.stream import StreamingClusterEngine, UpdatePolicy
+
+FUZZ_SCALE = max(1, int(os.environ.get("REPRO_FUZZ_SCALE", "1")))
+SEED_OFFSET = int(os.environ.get("REPRO_FUZZ_SEED_OFFSET", "0"))
+SEEDS = [SEED_OFFSET + i for i in range(2)]
+
+MP = 5
+MCS = 5.0
+CENTERS = np.asarray([[0.0, 0.0], [6.0, 6.0], [-6.0, 5.0]])
+
+
+def _steps(use_ref: bool) -> int:
+    # ≥ 100 per seed × 2 seeds = ≥ 200 interleaved steps per backend
+    return (110 if use_ref else 100) * FUZZ_SCALE
+
+
+@pytest.mark.parametrize("use_ref", [True, False], ids=["jnp", "pallas"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_interleaved_hybrid_stream_is_exact(seed, use_ref):
+    rng = np.random.default_rng(seed)
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MP, min_cluster_size=MCS,
+        backend="jnp" if use_ref else "pallas",
+        exact=True, exact_capacity=64, min_offline_points=10,
+        update_policy=UpdatePolicy(max_update_frac=0.25, min_incremental_points=24),
+    )
+    oracle = DynamicHDBSCAN(min_pts=MP, dim=2)
+    pid2oid: dict[int, int] = {}
+    live: list[int] = []
+    # the pallas leg keeps a smaller population: its full rebuilds run
+    # the interpret-mode pairwise kernel on CPU
+    max_live = 110 if use_ref else 60
+    n_checked = 0
+    for step in range(_steps(use_ref)):
+        op = rng.random()
+        if (op < 0.52 and len(live) < max_live) or len(live) < 16:
+            # occasional oversized block to force the full-pass route
+            big = op < 0.05 and len(live) >= 16
+            k = int(rng.integers(24, 40)) if big else int(rng.integers(1, 7))
+            c = CENTERS[rng.integers(0, len(CENTERS))]
+            X = rng.normal(size=(k, 2)) * 0.5 + c
+            t = eng.submit_insert(X)
+            eng.poll()
+            for pid, p in zip(t.pids, X):
+                pid2oid[int(pid)] = oracle.insert(p)
+            live.extend(int(p) for p in t.pids)
+        elif op < 0.88:
+            k = min(len(live), int(rng.integers(1, 5)))
+            idx = rng.choice(len(live), size=k, replace=False)
+            pids = [live[i] for i in idx]
+            live = [p for i, p in enumerate(live) if i not in set(idx.tolist())]
+            eng.submit_delete(pids)
+            eng.poll()
+            oracle.delete_batch([pid2oid.pop(p) for p in pids])
+        else:
+            q = rng.normal(size=(4, 2)) * 3.0
+            lab = eng.query(q)
+            assert lab.shape == (4,)
+            snap = eng.snapshot
+            hi = -1 if snap is None else snap.n_clusters - 1
+            assert lab.min() >= -1 and lab.max() <= hi
+            continue  # no mutation: state unchanged, skip the re-check
+        if eng.tree.n_points >= 10:
+            assert eng.snapshot is not None
+            # maintained MST weight vs the exact f64 oracle
+            w_dev = eng._dyn.total_weight()
+            w_or = oracle.total_weight()
+            assert w_dev == pytest.approx(w_or, rel=1e-6, abs=1e-6), (
+                f"seed {seed} step {step}: MST weight {w_dev} vs oracle {w_or}"
+            )
+            # labels vs the host static hierarchy over the maintained
+            # edges (device buffer order pins equal-weight merge order)
+            u, v, w = eng._dyn.mst_edges()
+            ids = eng._dyn.alive_slots()
+            rank = {int(s): r for r, s in enumerate(ids)}
+            uu = np.asarray([rank[int(a)] for a in u])
+            vv = np.asarray([rank[int(b)] for b in v])
+            slt = single_linkage(uu, vv, w, len(ids))
+            ct = condense_tree(slt, min_cluster_size=MCS)
+            ref_labels = hdbscan_labels(ct, extract_clusters(ct, method="eom"))
+            dev_labels = eng.snapshot.result.labels
+            assert_same_partition(
+                dev_labels, ref_labels, msg=f"seed {seed} step {step}"
+            )
+            # serve plane: per-pid labels are the snapshot labels routed
+            # through nearest-rep assignment (each point maps to itself)
+            _, lab = eng.labels()
+            assert sorted(lab.tolist()) == sorted(dev_labels.tolist())
+            n_checked += 1
+    # the schedule must have exercised BOTH legs of the hybrid path
+    assert n_checked >= _steps(use_ref) // 3
+    assert eng.stats["incremental_blocks"] > 0, eng.stats
+    assert eng.stats["exact_rebuilds"] > 0, eng.stats
+
+
+def test_fallback_only_policy_still_exact(rng):
+    """max_update_frac=0: every block routes through the full pass — the
+    degenerate policy must serve the same labels as the incremental one."""
+    X = rng.normal(size=(80, 2)) * np.asarray([1.0, 2.0])
+    full = StreamingClusterEngine(
+        dim=2, min_pts=MP, min_cluster_size=MCS, backend="jnp", exact=True,
+        min_offline_points=10,
+        update_policy=UpdatePolicy(max_update_frac=0.0),
+    )
+    inc = StreamingClusterEngine(
+        dim=2, min_pts=MP, min_cluster_size=MCS, backend="jnp", exact=True,
+        min_offline_points=10,
+        update_policy=UpdatePolicy(max_update_frac=1.0, min_incremental_points=2),
+    )
+    for i in range(0, 80, 8):
+        full.ingest(X[i : i + 8])
+        inc.ingest(X[i : i + 8])
+    assert full.stats["incremental_blocks"] == 0
+    # capacity re-bucketing (1.5×n) makes growth-routed full passes
+    # amortized-logarithmic in a growing stream; most blocks stay incremental
+    assert inc.stats["incremental_blocks"] >= 5
+    assert inc.stats["exact_rebuilds"] <= 4
+    _, la = full.labels()
+    _, lb = inc.labels()
+    assert_same_partition(la, lb)
+    assert full._dyn.total_weight() == pytest.approx(
+        inc._dyn.total_weight(), rel=1e-6
+    )

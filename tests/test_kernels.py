@@ -12,9 +12,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels import pairwise as pw_k
-from repro.kernels import mutual_reach as mr_k
-from repro.kernels import knn as knn_k
-from repro.kernels import assign as as_k
 
 SHAPES = [(8, 8, 2), (100, 64, 3), (256, 256, 16), (130, 70, 34), (1, 5, 4), (257, 129, 7)]
 DTYPES = [np.float32, np.float64]

@@ -179,15 +179,14 @@ class TestFamilySpecifics:
         model = M.build_model(cfg)
         c8 = jax.eval_shape(lambda: model.init_cache(2, 8))
         c9000 = jax.eval_shape(lambda: model.init_cache(2, 9000))
-        s8 = sum(np.prod(l.shape) for l in jax.tree.leaves(c8))
-        s9000 = sum(np.prod(l.shape) for l in jax.tree.leaves(c9000))
+        s8 = sum(np.prod(x.shape) for x in jax.tree.leaves(c8))
+        s9000 = sum(np.prod(x.shape) for x in jax.tree.leaves(c9000))
         assert s8 == s9000  # O(1) state in sequence length
 
     def test_model_flops_moe_uses_active(self):
-        dense_f = M.model_flops_per_token(C.get("qwen3-14b"))
+        M.model_flops_per_token(C.get("qwen3-14b"))  # exercises the dense path
         moe = C.get("dbrx-132b")
         moe_f = M.model_flops_per_token(moe)
-        total_params = None  # 132B total, ~36B active
         assert moe_f < 6 * 90e9  # far below 6*N_total
         assert moe_f > 6 * 20e9
 
@@ -198,5 +197,5 @@ class TestFamilySpecifics:
             cfg = C.get(aid)
             spec = M.input_specs(cfg, C.SHAPES[shape])
             assert all(
-                isinstance(l, jax.ShapeDtypeStruct) for l in jax.tree.leaves(spec)
+                isinstance(x, jax.ShapeDtypeStruct) for x in jax.tree.leaves(spec)
             ), (aid, shape)

@@ -15,7 +15,7 @@ from repro.core.bubble_tree import BubbleTree
 from repro.core.metrics import nmi
 from repro.kernels import ops
 from repro.serving.engine import HostBatcher
-from repro.serving.stream import StalenessPolicy, StreamingClusterEngine
+from repro.serving.stream import StreamingClusterEngine
 
 
 class TestHostBatcher:
@@ -308,7 +308,7 @@ class TestStreamingEngine:
             dim=2, backend="jnp", min_offline_points=8, max_block=64,
         )
         t1 = eng.submit_insert(rng.normal(size=(30, 2)))
-        t2 = eng.submit_insert(rng.normal(size=(30, 2)))
+        eng.submit_insert(rng.normal(size=(30, 2)))
         eng.poll()
         eng.submit_delete(t1.pids)
         t3 = eng.submit_insert(rng.normal(size=(10, 2)))
