@@ -9,7 +9,7 @@ is the number a capacity planner needs; per-plane seconds are reported
 separately (offline passes also batch: fewer, larger re-clusters at
 bigger block sizes is half of where the speedup comes from).
 
-Two claims under test:
+Three claims under test:
   * batched ingestion amortizes the per-op Python + descent overhead
     into one vectorized point→leaf assignment per block, so block-512
     throughput should be ≥ 5× single-point throughput;
@@ -18,7 +18,13 @@ Two claims under test:
     reported here as `recluster_ms_mean` and A/B'd against the PR 1
     host-hierarchy path (device edges → host single-linkage → condense
     → extract) — drops on CPU and the host does no O(L) interpreted
-    work per pass.
+    work per pass;
+  * at serving-scale blocks the device-online path (ISSUE 4 —
+    `device_online=True`: assignment + scatter CF updates as one jit
+    dispatch over the flat leaf-CF state, core.bubble_flat) sustains
+    higher steady-state ingestion than the host `insert_block` path —
+    reported as `ingest_ms_per_kpoint` (+ the A/B speedup) over the last
+    quarter of a long stream, after slot-bucket growth has settled.
 
   PYTHONPATH=src python -m benchmarks.fig8_streaming
 """
@@ -167,6 +173,53 @@ def _recluster_ab(eng, iters: int = 15):
     }
 
 
+def _ingest_ab(
+    n: int = 98304, d: int = 16, block: int = 8192, compression: float = 0.01,
+    seed: int = 0,
+):
+    """Sustained-ingestion A/B at serving-scale blocks: the host
+    `insert_block` path vs the device-online flat path, same stream, same
+    engine config.  The first 3/4 of the stream warms both paths (jit
+    compiles per power-of-two bucket; the flat state re-buckets as the
+    leaf count grows) — the metric is the steady-state ms per 1k points
+    over the final quarter.  Offline passes are disabled so this isolates
+    ingestion (the re-cluster plane is measured separately above).
+    ``n``/``compression`` are chosen so the measured window stays inside
+    one live-slot watermark bucket (L grows 737→983 < 1024): a
+    power-of-two crossing mid-window would charge a one-off recompile to
+    the steady-state number."""
+    X, _ = gaussian_mixtures(n, d=d, k=8, overlap=0.05, seed=seed)
+    out = {"n": n, "d": d, "block": block, "compression": compression}
+    for mode in ("host", "device"):
+        eng = StreamingClusterEngine(
+            dim=d, min_pts=10, compression=compression, epsilon=10.0,
+            max_block=block, backend="jnp",
+            min_offline_points=n + 1,  # never trigger: pure ingestion
+            device_online=(mode == "device"),
+        )
+        warm = 3 * n // 4
+        i = 0
+        while i < warm:
+            eng.submit_insert(X[i : i + block])
+            eng.poll()
+            i += block
+        with Timer() as t:
+            while i < n:
+                eng.submit_insert(X[i : i + block])
+                eng.poll()
+                i += block
+        out[f"{mode}_ms_per_kpoint"] = t.seconds / ((n - warm) / 1e3) * 1e3
+        out[f"{mode}_leaves"] = eng.tree.num_leaves
+        if mode == "device":
+            out["flat_loads"] = eng.stats["flat_loads"]
+            out["device_online_blocks"] = eng.stats["device_online_blocks"]
+    out["ingest_ms_per_kpoint"] = out["device_ms_per_kpoint"]
+    out["speedup_device_vs_host"] = (
+        out["host_ms_per_kpoint"] / max(out["device_ms_per_kpoint"], 1e-9)
+    )
+    return out
+
+
 def run(n: int = 6000, d: int = 4, seed: int = 0):
     X, _ = gaussian_mixtures(n, d=d, k=5, overlap=0.05, seed=seed)
     rep = {}
@@ -195,6 +248,16 @@ def run(n: int = 6000, d: int = 4, seed: int = 0):
         f"({ab['speedup']:.2f}x)",
     )
     rep["recluster_ab"] = ab
+    ingest = _ingest_ab()
+    emit(
+        "fig8/ingest_device_vs_host",
+        ingest["ingest_ms_per_kpoint"] / 1e3,
+        f"L={ingest['device_leaves']}, block={ingest['block']}: "
+        f"{ingest['ingest_ms_per_kpoint']:.1f} ms/kpt device vs "
+        f"{ingest['host_ms_per_kpoint']:.1f} host "
+        f"({ingest['speedup_device_vs_host']:.2f}x)",
+    )
+    rep["ingest_ab"] = ingest
     save_json("fig8_streaming", rep)
     return rep
 

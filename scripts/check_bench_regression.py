@@ -26,6 +26,10 @@ METRICS = [
     ("fig8_streaming.json", ("512", "recluster_ms_mean"), "ms"),
     ("fig8_streaming.json", ("speedup_512_vs_1",), "ratio"),
     ("fig8_streaming.json", ("recluster_ab", "device_labels_ms"), "ms"),
+    # the A/B speedup is recorded in the JSON but deliberately NOT gated:
+    # a quotient of two wall-clock timings on a shared CI core is too
+    # noisy for a hard floor — the absolute device-path cost is the gate
+    ("fig8_streaming.json", ("ingest_ab", "ingest_ms_per_kpoint"), "ms"),
     ("fig3_dynamic.json", ("incremental_per_update_ms_small",), "ms"),
     ("fig3_dynamic.json", ("offline_recluster_ms",), "ms"),
     ("fig3_dynamic.json", ("rows", 0, "speedup_vs_offline"), "ratio"),

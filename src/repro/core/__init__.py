@@ -2,6 +2,7 @@
 hierarchical spatial clustering (Bubble-tree + exact dynamic HDBSCAN)."""
 
 from .baselines import ClusTreeLite, IncrementalBubbles
+from .bubble_flat import BubbleFlat
 from .bubble_tree import BubbleTree
 from .bubbles import DataBubbles, bubble_mutual_reachability, bubbles_from_cf
 from .cf import CFTable, cf_extent, cf_nn_dist, cf_of_points, cf_rep
@@ -12,6 +13,7 @@ from .mst import UnionFind, boruvka_dense, boruvka_jax, kruskal_edges
 from .summarizer import BubbleTreeSummarizer, assign_points, cluster_bubbles
 
 __all__ = [
+    "BubbleFlat",
     "BubbleTree",
     "BubbleTreeSummarizer",
     "CFTable",

@@ -42,6 +42,7 @@ class BubbleTree:
         min_leaves: int = 2,
         capacity: int = 256,
         reorg_every: int = 1,
+        overfull_factor: float = 4.0,
         assign_fn=None,
     ):
         if m is None:
@@ -53,12 +54,18 @@ class BubbleTree:
         self.compression = float(compression)
         self.min_leaves = int(min_leaves)
         self.reorg_every = int(reorg_every)
+        self.overfull_factor = float(overfull_factor)
         self._op_count = 0
         self._assign_fn = assign_fn  # optional accelerated point->leaf argmin
         # dirty-mass accounting (DESIGN.md §5): points inserted/deleted
         # since the last offline pass — the staleness signal that steers
         # re-clustering the same way compression steers the leaf count.
         self.dirty_mass = 0.0
+        # leaves whose stats/liveness changed through *structural*
+        # maintenance (splits, dissolves, reorg, sequential descent) —
+        # changes a block-level device mirror (core.bubble_flat) cannot
+        # reproduce from the block's own scatter; it patches these rows.
+        self._struct_dirty: set[int] = set()
 
         # --- node SoA ---
         cap = capacity
@@ -118,18 +125,46 @@ class BubbleTree:
         self.leaf_points[nid] = []
         self._node_free.append(nid)
 
+    def _grow_point_store(self):
+        """Double the point store; newly-freed ids extend the free list so
+        they pop in ascending order (insertion-order pids on a fresh
+        store — offline consumers map point_ids to dataset rows by it)."""
+        cap = self.PX.shape[0]
+        self.PX = np.concatenate([self.PX, np.zeros((cap, self.dim))])
+        self.point_alive = np.concatenate([self.point_alive, np.zeros(cap, dtype=bool)])
+        self.point_leaf = np.concatenate([self.point_leaf, np.full(cap, -1, dtype=np.int64)])
+        self._point_free.extend(range(2 * cap - 1, cap - 1, -1))
+
     def _new_point(self, p: np.ndarray) -> int:
         if not self._point_free:
-            cap = self.PX.shape[0]
-            self.PX = np.concatenate([self.PX, np.zeros((cap, self.dim))])
-            self.point_alive = np.concatenate([self.point_alive, np.zeros(cap, dtype=bool)])
-            self.point_leaf = np.concatenate([self.point_leaf, np.full(cap, -1, dtype=np.int64)])
-            self._point_free.extend(range(2 * cap - 1, cap - 1, -1))
+            self._grow_point_store()
         pid = self._point_free.pop()
         self.PX[pid] = p
         self.point_alive[pid] = True
         self.point_leaf[pid] = -1
         return pid
+
+    def _new_points(self, P: np.ndarray) -> list[int]:
+        """Bulk point allocation: chunked slices off the free list plus
+        one fancy-indexed store (the per-point path costs a Python
+        round-trip per row on the throughput paths).  Semantics match n
+        repeated ``_new_point`` calls EXACTLY — grow only when the free
+        list is exhausted, never preemptively — because on a fresh store
+        that yields pids in insertion order, a property offline consumers
+        rely on to map point_ids back to their dataset rows."""
+        n = P.shape[0]
+        pids: list[int] = []
+        while len(pids) < n:
+            if not self._point_free:
+                self._grow_point_store()
+            take = min(len(self._point_free), n - len(pids))
+            pids.extend(self._point_free[-take:][::-1])  # == `take` pop()s
+            del self._point_free[-take:]
+        ids = np.asarray(pids, dtype=np.int64)
+        self.PX[ids] = P
+        self.point_alive[ids] = True
+        self.point_leaf[ids] = -1
+        return pids
 
     # ------------------------------------------------------------------
     # public API
@@ -142,6 +177,27 @@ class BubbleTree:
     @property
     def target_L(self) -> int:
         return max(self.min_leaves, int(round(self.compression * self.n_points)))
+
+    def _leaf_cap_at(self, n_points: int) -> int:
+        target = max(self.min_leaves, int(round(self.compression * n_points)))
+        mean = n_points / max(target, 1)
+        return max(2 * self.m, int(np.ceil(self.overfull_factor * mean)))
+
+    @property
+    def leaf_cap(self) -> int:
+        """Leaf-size invariant (paper §5.1 balance): block maintenance
+        runs until no alive leaf holds more than
+        ``max(2m, ceil(overfull_factor × n / target_L))`` points.
+        ``check_invariants`` allows one doubling of slack because the
+        sequential single-op paths rebalance one step per op."""
+        return self._leaf_cap_at(self.n_points)
+
+    def consume_struct_dirty(self) -> set[int]:
+        """Drain the set of leaves touched by structural maintenance
+        since the last call (see ``_struct_dirty``); the device mirror
+        patches exactly these rows from the host f64 truth."""
+        dirty, self._struct_dirty = self._struct_dirty, set()
+        return dirty
 
     def alive_leaf_ids(self) -> np.ndarray:
         return np.nonzero(self.node_alive & self.is_leaf)[0]
@@ -192,6 +248,7 @@ class BubbleTree:
         leaf = int(self.point_leaf[pid])
         p = self.PX[pid]
         self.leaf_points[leaf].remove(pid)
+        self._struct_dirty.add(leaf)
         self._cf_update_path(leaf, -p, -float(p @ p), -1.0)
         self.point_alive[pid] = False
         self.point_leaf[pid] = -1
@@ -204,49 +261,85 @@ class BubbleTree:
 
     def insert_block(self, X) -> list[int]:
         """Throughput path: vectorized point→leaf assignment for a block,
-        then CF bulk update + maintenance.  Matches repeated insert() up to
-        maintenance scheduling (CF additivity makes the stats identical)."""
+        then CF bulk update + maintenance to fixpoint.  Matches repeated
+        insert() up to maintenance scheduling (CF additivity makes the
+        stats identical)."""
         X = np.asarray(X, dtype=np.float64)
         if X.shape[0] == 0:
             return []
-        if self.n_points == 0 or self.num_leaves <= 1:
-            # bootstrap sequentially until structure exists
-            head = [self.insert(p) for p in X[: self.M]]
-            if X.shape[0] <= self.M:
-                return head
-            return head + self.insert_block(X[self.M:])
+        # bootstrap sequentially until structure exists — a flat loop:
+        # the old tail recursion re-paid this check per M-sized chunk and
+        # exhausted the recursion limit on huge blocks when the tree was
+        # slow to grow past one leaf (e.g. duplicate-heavy data)
+        pids: list[int] = []
+        i = 0
+        while i < X.shape[0] and (self.n_points == 0 or self.num_leaves <= 1):
+            pids.append(self.insert(X[i]))
+            i += 1
+        if i == X.shape[0]:
+            return pids
+        rest = X[i:]
         leaf_ids = self.alive_leaf_ids()
         reps = self.LS[leaf_ids] / np.maximum(self.N[leaf_ids], 1.0)[:, None]
         if self._assign_fn is not None:
-            assign = np.asarray(self._assign_fn(X, reps))
+            assign = np.asarray(self._assign_fn(rest, reps))
         else:
+            # center exactly like the engine's device assign_fn: argmin is
+            # translation-invariant, and the ‖x‖²+‖r‖²−2xr expansion
+            # cancels catastrophically off-origin (even f64 runs out of
+            # mantissa once coordinates dwarf the separations)
+            mu = reps.mean(axis=0)
+            Xc = rest - mu
+            Rc = reps - mu
             sq = (
-                np.einsum("id,id->i", X, X)[:, None]
-                + np.einsum("jd,jd->j", reps, reps)[None, :]
-                - 2.0 * X @ reps.T
+                np.einsum("id,id->i", Xc, Xc)[:, None]
+                + np.einsum("jd,jd->j", Rc, Rc)[None, :]
+                - 2.0 * Xc @ Rc.T
             )
             assign = np.argmin(sq, axis=1)
-        pids = []
-        for row, p in enumerate(X):
-            pid = self._new_point(p)
-            leaf = int(leaf_ids[assign[row]])
-            self.leaf_points[leaf].append(pid)
-            self.point_leaf[pid] = leaf
-            pids.append(pid)
-        # bulk CF update per leaf, then fix ancestors bottom-up
-        for row, pid in enumerate(pids):
-            leaf = int(self.point_leaf[pid])
-            p = X[row]
-            self.LS[leaf] += p
-            self.SS[leaf] += float(p @ p)
-            self.N[leaf] += 1.0
+        return pids + self.apply_assigned_block(rest, leaf_ids[assign])
+
+    def apply_assigned_block(self, X, leaf_per_row, overfull_hint=None) -> list[int]:
+        """Bulk bookkeeping for a block whose point→leaf assignment was
+        already computed (host argmin above, or the device flat path,
+        core.bubble_flat): allocate pids, extend membership grouped per
+        touched leaf, ONE CF update per leaf + ancestor rebuild, then
+        block maintenance to fixpoint.  ``overfull_hint`` is the device
+        work-list (leaf ids the scatter saw cross ``leaf_cap``) — when it
+        is provided, empty, and the leaf count already matches target,
+        the fixpoint scan is skipped outright."""
+        X = np.asarray(X, dtype=np.float64)
+        leaf_per_row = np.asarray(leaf_per_row, dtype=np.int64)
+        n = X.shape[0]
+        assert leaf_per_row.shape == (n,)
+        pids = self._new_points(X)
+        pid_arr = np.asarray(pids, dtype=np.int64)
+        self.point_leaf[pid_arr] = leaf_per_row
+        # segment-reduce the CF deltas: one reduceat per statistic beats a
+        # Python loop over touched leaves by ~an order of magnitude
+        order = np.argsort(leaf_per_row, kind="stable")
+        sorted_leaves = leaf_per_row[order]
+        uniq, starts = np.unique(sorted_leaves, return_index=True)
+        Xs = X[order]
+        self.LS[uniq] += np.add.reduceat(Xs, starts, axis=0)
+        self.SS[uniq] += np.add.reduceat(np.einsum("nd,nd->n", Xs, Xs), starts)
+        counts = np.diff(np.append(starts, n))
+        self.N[uniq] += counts
+        sorted_pids = pid_arr[order]
+        off = 0
+        for leaf, cnt in zip(uniq, counts):
+            self.leaf_points[int(leaf)].extend(sorted_pids[off : off + cnt].tolist())
+            off += int(cnt)
         self._recompute_internal_cfs()
-        self.n_points += len(pids)
-        self.dirty_mass += float(len(pids))
-        deficit = abs(self.target_L - self.num_leaves) + 2
-        for _ in range(deficit):
-            if not self._maintain(single_step=True):
-                break
+        self.n_points += n
+        self.dirty_mass += float(n)
+        if (
+            overfull_hint is not None
+            and len(overfull_hint) == 0
+            and self.num_leaves == self.target_L
+        ):
+            return pids
+        self._maintain_to_fixpoint()
         return pids
 
     def delete_block(self, pids):
@@ -294,10 +387,7 @@ class BubbleTree:
                 and self.num_leaves > 1
             ):
                 self._dissolve_leaf(leaf)
-        deficit = abs(self.target_L - self.num_leaves) + 2
-        for _ in range(deficit):
-            if not self._maintain(single_step=True):
-                break
+        self._maintain_to_fixpoint()
 
     # ------------------------------------------------------------------
     # insertion internals
@@ -329,6 +419,7 @@ class BubbleTree:
         leaf = self._descend_to_height(p, 0)
         self.leaf_points[leaf].append(pid)
         self.point_leaf[pid] = leaf
+        self._struct_dirty.add(leaf)
         self._cf_update_path(leaf, p, float(p @ p), 1.0)
 
     def _attach_node(self, child: int, target_parent: int):
@@ -383,13 +474,19 @@ class BubbleTree:
         s1, s2 = self._two_seeds(P)
         d1 = np.einsum("nd,nd->n", P - P[s1], P - P[s1])
         d2 = np.einsum("nd,nd->n", P - P[s2], P - P[s2])
-        side = d1 <= d2
         # enforce minimum group sizes by moving boundary entries
         margin = d1 - d2
         order = np.argsort(margin)  # most side-1-ish first
         side = np.zeros(P.shape[0], dtype=bool)
-        n1 = max(min_each, int((d1 <= d2).sum()))
-        n1 = min(n1, P.shape[0] - min_each)
+        if np.any(margin != 0.0):
+            n1 = max(min_each, int((d1 <= d2).sum()))
+            n1 = min(n1, P.shape[0] - min_each)
+        else:
+            # degenerate split (duplicate-heavy leaf): every margin ties,
+            # so halve instead of peeling min_each — an unbalanced peel
+            # makes the overfull-leaf fixpoint oscillate (split m out,
+            # count-steering dissolves them right back in)
+            n1 = P.shape[0] // 2
         side[order[:n1]] = True
         return side
 
@@ -406,6 +503,7 @@ class BubbleTree:
         for pid in move:
             self.point_leaf[pid] = sib
         self.leaf_points[leaf] = keep
+        self._struct_dirty.update((leaf, sib))
         Pm = self.PX[np.asarray(move, dtype=np.int64)]
         mLS = Pm.sum(axis=0)
         mSS = float(np.einsum("nd,nd->", Pm, Pm))
@@ -490,6 +588,7 @@ class BubbleTree:
     def _dissolve_leaf(self, leaf: int):
         pts = list(self.leaf_points[leaf])
         self.leaf_points[leaf] = []
+        self._struct_dirty.add(leaf)
         self._cf_update_path(
             leaf,
             -self.LS[leaf].copy(),
@@ -514,19 +613,53 @@ class BubbleTree:
         ids = self.alive_leaf_ids()
         return int(ids[np.argmax(self.N[ids])])
 
-    def _maintain(self, single_step: bool = False) -> bool:
-        """One application of Algorithm 1.  Returns True if a structural
-        change was made (used by insert_block's deficit loop)."""
+    def _maintain_step(self) -> bool:
+        """One Algorithm-1 rebalance step; True iff structure changed.
+
+        Priority order: the leaf-size invariant first (an overfull leaf
+        degrades summary quality at ANY leaf count — §5.1 — and pure
+        count steering never splits once ``num_leaves >= target_L``),
+        then leaf-count steering in either direction."""
         L = self.target_L
         nl = self.num_leaves
-        self._op_count += 1
+        ids = self.alive_leaf_ids()
+        o = int(ids[np.argmax(self.N[ids])])
+        if self.N[o] > self.leaf_cap and len(self.leaf_points[o]) >= 2 * self.m:
+            return self._split_leaf(o) is not None
         if nl > L and nl > 1:
-            u = self._most_underfilled()
-            self._dissolve_leaf(u)
+            self._dissolve_leaf(int(ids[np.argmin(self.N[ids])]))
             return True
         if nl < L:
-            o = self._most_overfilled()
             return self._split_leaf(o) is not None
+        return False
+
+    def _maintain_to_fixpoint(self):
+        """Block-op maintenance: run Algorithm-1 steps until no leaf
+        exceeds ``leaf_cap`` AND the leaf count matches ``target_L`` (or
+        provably cannot — every candidate too small to split).
+
+        Replaces the old ``abs(target_L - num_leaves) + 2`` deficit cap,
+        which starved exactly when a concentrated block landed in a leaf
+        without moving the count deficit (the leaf stayed arbitrarily
+        overfull, silently).  The safety cap is generous — shattering
+        every point into fresh leaves costs well under ``n/m`` splits —
+        and raises instead of silently stopping."""
+        budget = 4 * (self.n_points + self.num_leaves) + 64
+        for _ in range(budget):
+            if not self._maintain_step():
+                return
+        raise RuntimeError(
+            f"Bubble-tree maintenance did not reach a fixpoint within "
+            f"{budget} steps (n={self.n_points}, leaves={self.num_leaves}, "
+            f"target={self.target_L}, cap={self.leaf_cap})"
+        )
+
+    def _maintain(self) -> bool:
+        """One application of Algorithm 1 (the sequential single-op
+        cadence).  Returns True if a structural change was made."""
+        self._op_count += 1
+        if self._maintain_step():
+            return True
         if self.reorg_every and (self._op_count % self.reorg_every == 0):
             # dynamic reorganization: extract + reinsert m farthest points
             # of the most overfilled leaf
@@ -538,6 +671,7 @@ class BubbleTree:
                 diff = self.PX[ids] - rep[None, :]
                 far = np.argsort(-np.einsum("nd,nd->n", diff, diff))[: self.m]
                 far_pids = [pts[int(j)] for j in far]
+                self._struct_dirty.add(o)
                 for pid in far_pids:
                     self.leaf_points[o].remove(pid)
                     p = self.PX[pid]
@@ -564,9 +698,17 @@ class BubbleTree:
     def check_invariants(self):
         assert self.node_alive[self.root]
         total = 0
+        # leaf-size invariant: block maintenance fixpoints at leaf_cap;
+        # sequential single-op paths rebalance one step per op, so allow
+        # them one doubling of slack before calling it a violation
+        size_cap = 2 * self.leaf_cap
         for leaf in self.alive_leaf_ids():
             pts = self.leaf_points[int(leaf)]
             total += len(pts)
+            assert len(pts) <= size_cap, (
+                f"leaf {int(leaf)} holds {len(pts)} points > {size_cap} "
+                f"(2 x leaf_cap; maintenance starvation)"
+            )
             ids = np.asarray(pts, dtype=np.int64)
             P = self.PX[ids] if len(pts) else np.zeros((0, self.dim))
             np.testing.assert_allclose(self.LS[leaf], P.sum(axis=0), atol=1e-6)

@@ -46,6 +46,7 @@ __all__ = [
     "OfflineClusterResult",
     "offline_recluster",
     "offline_recluster_from_table",
+    "offline_recluster_from_device_table",
     "incremental_update",
     "incremental_recluster",
     "ClusterBackend",
@@ -517,6 +518,93 @@ def _unwrap_result(out, L: int, mcs: float, weights: np.ndarray) -> OfflineClust
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("min_pts", "use_ref", "method", "allow_single")
+)
+def _device_table_pipeline(
+    LS, LSe, SS, SSe, N, alive, mcs, min_pts: int, use_ref: bool,
+    method: str = "eom", allow_single: bool = False,
+):
+    """Offline pass straight from a device-resident flat leaf-CF state
+    (core.bubble_flat): compact the populated slots to rows 0..L-1
+    (stable argsort on the alive mask, like the incremental pipeline),
+    derive the bubble table ON DEVICE (Eqs. 3–4 over compensated
+    origin-centered sums), re-center at the mass centroid, and run the
+    same fused `_offline_pipeline` stages.  Nothing about the summary
+    crosses the host boundary on the way in — this is the zero-copy
+    handoff the streaming engine's device-online mode uses.  The
+    compacted representative rows and masses ride along in the output
+    dict so the serve plane gets everything from ONE host sync."""
+    Lp = LS.shape[0]
+    ok = alive & (N > 0)
+    n_valid = jnp.sum(ok.astype(jnp.int32))
+    perm = jnp.argsort(jnp.where(ok, 0, 1), stable=True)
+    LSs = (LS - LSe)[perm]
+    SSs = (SS - SSe)[perm]
+    Ns = N[perm]
+    mask = jnp.arange(Lp) < n_valid
+    safe_n = jnp.maximum(Ns, 1.0)
+    rep = LSs / safe_n[:, None]
+    tot = jnp.maximum(jnp.sum(jnp.where(mask, Ns, 0.0)), 1.0)
+    mu = jnp.sum(jnp.where(mask, Ns, 0.0)[:, None] * rep, axis=0) / tot
+    rep_c = jnp.where(mask[:, None], rep - mu[None, :], _PAD_COORD)
+    # extent = sqrt((2 n SS - 2 ||LS||^2) / (n (n-1)))  (Eq. 4, f32 on
+    # origin-centered sums — the same cancellation guard as the rep)
+    lsq = jnp.sum(LSs * LSs, axis=-1)
+    rad = (2.0 * Ns * SSs - 2.0 * lsq) / jnp.maximum(Ns * (safe_n - 1.0), 1.0)
+    extent = jnp.sqrt(jnp.maximum(rad, 0.0))
+    extent = jnp.where(mask & (Ns > 1.0), extent, 0.0)
+    nb = jnp.where(mask, Ns, 0.0)
+    out = _offline_pipeline(
+        rep_c, nb, extent, n_valid, mcs, min_pts, use_ref, method, allow_single
+    )
+    out["rep"] = rep  # origin frame; host adds the f64 origin back
+    out["nb"] = nb
+    out["mu"] = mu
+    out["n_valid"] = n_valid
+    return out
+
+
+def offline_recluster_from_device_table(
+    LS, LSe, SS, SSe, N, alive, origin, min_pts: int,
+    min_cluster_size: float | None = None, use_ref: bool | None = None,
+    method: str = "eom", allow_single_cluster: bool = False,
+):
+    """Streaming-engine offline hot path over a `BubbleFlat` view.
+
+    Unlike `offline_recluster_from_table` there is no host-side f64
+    derivation and no per-pass upload: the (already padded, already
+    origin-centered) device arrays feed one jit'd pipeline and only the
+    fixed-size result buffers come back.  ``min_pts`` must be pre-clamped
+    by the caller (it is static; the engine clamps against its own
+    point count — the flat table's mass equals it by construction).
+    NOTE: with ``min_cluster_size=None`` the default derives from that
+    CLAMPED min_pts, whereas `offline_recluster_from_table` defaults
+    from the raw value before clamping — callers needing tiny-population
+    parity across both paths (the engine does) pass it explicitly.
+
+    Returns (OfflineClusterResult, rep, n_b, center): ``rep`` the (L, d)
+    f64 uncentered serve-plane representatives, ``center`` the f64 mass
+    centroid every f32 assignment must subtract.
+    """
+    use = _resolve_ref(use_ref)
+    mcs = float(min_pts if min_cluster_size is None else min_cluster_size)
+    out = _device_table_pipeline(
+        LS, LSe, SS, SSe, N, alive,
+        jnp.asarray(mcs, jnp.float32), int(min_pts), use,
+        method, bool(allow_single_cluster),
+    )
+    out.pop("W")  # fused path never transfers the (Lp, Lp) matrix to host
+    out = jax.device_get(out)
+    L = int(out.pop("n_valid"))
+    origin = np.asarray(origin, dtype=np.float64)
+    rep = out.pop("rep").astype(np.float64)[:L] + origin[None, :]
+    nb = out.pop("nb").astype(np.float64)[:L]
+    center = out.pop("mu").astype(np.float64) + origin
+    result = _unwrap_result(out, L, mcs, nb)
+    return result, rep, nb, center
+
+
 # --------------------------------------------------------------------------
 # hybrid exact-dynamic fast path (core.dynamic_jax + hierarchy-only labels)
 # --------------------------------------------------------------------------
@@ -683,6 +771,23 @@ class ClusterBackend:
             rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
             use_ref=self.use_ref, return_w=return_w,
         )
+
+    def offline_recluster_from_device_table(
+        self, LS, LSe, SS, SSe, N, alive, origin, min_pts: int,
+        min_cluster_size: float | None = None, **kw,
+    ):
+        return offline_recluster_from_device_table(
+            LS, LSe, SS, SSe, N, alive, origin, min_pts,
+            min_cluster_size=min_cluster_size, use_ref=self.use_ref, **kw,
+        )
+
+    def make_flat(self, dim: int, capacity: int = 64):
+        """Device-resident flat leaf-CF state (core.bubble_flat) bound to
+        this backend's assign kernels — the online summarizer's
+        throughput path (DESIGN.md §8)."""
+        from repro.core.bubble_flat import BubbleFlat
+
+        return BubbleFlat(dim, use_ref=self.use_ref, capacity=capacity)
 
     def make_dynamic(self, min_pts: int, dim: int, capacity: int = 256, **kw):
         """Incremental-maintenance handle (core.dynamic_jax).  The

@@ -33,6 +33,17 @@ calls into a serving loop with three planes:
                   so reads never block on ingestion or re-clustering and
                   always see the newest complete hierarchy.
 
+  device-online ingestion (``device_online=True``, DESIGN.md §8): the
+  throughput half of every block op — point→leaf assignment and the CF
+  accumulation — runs as fixed-shape jit programs over a device-resident
+  flat leaf-CF state (core.bubble_flat, behind the same ClusterBackend
+  switch).  The host tree keeps topology and consumes the emitted
+  overfull/underfilled work-lists to run splits/dissolves to a fixpoint,
+  patching exactly the structurally-touched rows back into the flat
+  state; ε-triggered offline passes then consume the flat table
+  *directly* (`ops.offline_recluster_from_device_table`) — zero per-pass
+  host→device transfer of the summary.
+
   hybrid exact-dynamic fast path (``exact=True``, DESIGN.md §7): instead
   of summarizing into bubbles and re-clustering from scratch on ε drift,
   the engine maintains the *point-level* mutual-reachability MST
@@ -212,6 +223,17 @@ class StreamingClusterEngine:
       device_assign: route the online point→leaf argmin through the kernel
         backend (None = only when the backend is Pallas/TPU; host numpy is
         faster for CPU-sized blocks).
+      device_online: run block ingestion through the device-resident flat
+        leaf-CF state (core.bubble_flat): assignment + scatter CF updates
+        as fixed-shape jit programs, host tree consuming the emitted
+        work-lists for splits/dissolves, and ε-passes reading the flat
+        table with zero per-pass host→device transfer.  Default off —
+        explicit opt-in for serving-scale block workloads (the fig8
+        ingestion A/B shows where it wins, even on CPU).
+        NOTE: snapshot rows follow the flat state's
+        slot order, not ascending leaf id, so callers that correlate
+        snapshot rows with `leaf_cf_buffers()` must opt in knowingly.
+        Incompatible with ``exact=True``.
       exact: hybrid exact-dynamic fast path — maintain the point-level
         MST incrementally on device (core.dynamic_jax) and refresh exact
         labels every poll; ε-staleness and bubble summarization are
@@ -235,6 +257,7 @@ class StreamingClusterEngine:
         async_offline: bool = False,
         min_offline_points: int = 32,
         device_assign: bool | None = None,
+        device_online: bool | None = None,
         exact: bool = False,
         update_policy: UpdatePolicy | None = None,
         exact_capacity: int = 256,
@@ -268,6 +291,14 @@ class StreamingClusterEngine:
         self._inflight_consumed = 0.0  # dirty mass captured by the running pass
         self._offline_error: BaseException | None = None
         self.exact = bool(exact)
+        if device_online and exact:
+            raise ValueError(
+                "device_online summarizes into the flat leaf-CF state; "
+                "exact=True bypasses bubble summarization entirely"
+            )
+        if device_online is None:
+            device_online = False  # explicit opt-in (row-order contract above)
+        self._flat = self.backend.make_flat(dim) if device_online else None
         self.update_policy = update_policy if update_policy is not None else UpdatePolicy()
         self._dyn = None
         self._dyn_stale = True  # no incremental state until the first rebuild
@@ -292,6 +323,8 @@ class StreamingClusterEngine:
             "incremental_blocks": 0,
             "exact_full_blocks": 0,
             "exact_rebuilds": 0,
+            "device_online_blocks": 0,
+            "flat_loads": 0,
         }
 
     # -- request plane -----------------------------------------------------
@@ -326,7 +359,7 @@ class StreamingClusterEngine:
             kind, items = self._next_point_block()
             if kind == "insert":
                 X = np.concatenate([x for x, _ in items], axis=0)
-                pids = self.tree.insert_block(X)
+                pids = self._apply_insert_block(X)
                 self._exact_apply_insert(X, pids)
                 off = 0
                 for x, ticket in items:  # requests are never split: one fill
@@ -336,9 +369,9 @@ class StreamingClusterEngine:
                 self.stats["inserts"] += X.shape[0]
                 applied += X.shape[0]
             else:
-                flat = [p for chunk in items for p in chunk]
+                flat_pids = [p for chunk in items for p in chunk]
                 try:
-                    self.tree.delete_block(flat)
+                    self._apply_delete_block(flat_pids)
                 except KeyError:
                     # coalescing must not change failure semantics vs the
                     # sequential stream: a bad request (dead/duplicate pid)
@@ -348,7 +381,7 @@ class StreamingClusterEngine:
                     done, err = 0, None
                     for chunk in items:
                         try:
-                            self.tree.delete_block(chunk)
+                            self._apply_delete_block(chunk)
                             done += len(chunk)
                         except KeyError as e:
                             if err is None:
@@ -359,9 +392,9 @@ class StreamingClusterEngine:
                     if err is not None:
                         raise err
                 else:
-                    self._exact_apply_delete(flat)
-                    self.stats["deletes"] += len(flat)
-                    applied += len(flat)
+                    self._exact_apply_delete(flat_pids)
+                    self.stats["deletes"] += len(flat_pids)
+                    applied += len(flat_pids)
             self.stats["blocks_applied"] += 1
             blocks += 1
         self.maybe_recluster()
@@ -390,6 +423,66 @@ class StreamingClusterEngine:
         """Synchronous convenience: submit deletions + drain."""
         self.submit_delete(pids)
         self.poll()
+
+    # -- device-online ingestion (core.bubble_flat, DESIGN.md §8) ----------
+
+    def _apply_insert_block(self, X) -> list:
+        """Apply one coalesced insert block: the device-online path runs
+        assignment + scatter CF updates as one jit dispatch, hands the
+        tree the pre-computed assignment plus the overfull work-list, and
+        patches structurally-touched rows back; otherwise the host
+        `insert_block` path."""
+        if self._flat is None or self.tree.num_leaves <= 1:
+            pids = self.tree.insert_block(X)
+            if self._flat is not None:
+                if self.tree.num_leaves > 1:
+                    # bootstrap done: load eagerly so this poll's ε-pass
+                    # already reads the device table
+                    self._flat.load(self.tree)
+                    self.stats["flat_loads"] = self._flat.loads
+                else:
+                    self._flat.stale = True
+            return pids
+        if self._flat.stale:
+            self._flat.load(self.tree)
+        cap = self.tree._leaf_cap_at(self.tree.n_points + X.shape[0])
+        try:
+            leaf_ids, work = self._flat.insert_block(X, cap)
+        except RuntimeError:
+            # dead-slot guard (stream drifted outside the centered frame)
+            # or a device failure mid-dispatch: either way the flat table
+            # did not absorb this block, so it MUST reload before the next
+            # scatter or ε-pass (the guard sets stale itself; a raw XLA
+            # RuntimeError would not) — then apply via the host path
+            self._flat.stale = True
+            return self.tree.insert_block(X)
+        pids = self.tree.apply_assigned_block(X, leaf_ids, overfull_hint=work)
+        self._flat.sync_struct(self.tree)
+        self.stats["device_online_blocks"] += 1
+        self.stats["flat_loads"] = self._flat.loads
+        return pids
+
+    def _apply_delete_block(self, pids):
+        """Apply one coalesced delete block; the device-online path
+        mirrors the per-leaf CF subtraction as a scatter (victim leaves
+        are captured from `point_leaf` BEFORE the tree mutates, and the
+        device table is touched only after the tree's atomic validation
+        passed)."""
+        if self._flat is None or self._flat.stale:
+            self.tree.delete_block(pids)
+            return
+        arr = np.asarray(pids, dtype=np.int64)
+        ok = arr.size > 0 and bool(
+            ((arr >= 0) & (arr < self.tree.point_alive.shape[0])).all()
+        )
+        leaves = self.tree.point_leaf[arr].copy() if ok else None
+        Xv = self.tree.PX[arr].copy() if ok else None
+        self.tree.delete_block(pids)  # raises before any mutation on bad pids
+        if leaves is not None and len(leaves):
+            self._flat.delete_block(leaves, Xv, self.tree.m)
+        self._flat.sync_struct(self.tree)
+        self.stats["device_online_blocks"] += 1
+        self.stats["flat_loads"] = self._flat.loads
 
     # -- hybrid exact-dynamic fast path ------------------------------------
 
@@ -518,9 +611,29 @@ class StreamingClusterEngine:
             # absorbed (the next pass sees the accumulated dirty mass)
             self.stats["recluster_skipped_busy"] += 1
             return False
-        # capture: dirty mass consumed by this pass + the leaf CF rows
+        # capture: dirty mass consumed by this pass + the summary rows
         dirty_captured = self.tree.dirty_mass
         n_points = self.tree.n_points
+        if self._flat is not None and not self._flat.stale:
+            # device-online: the flat table IS the summary and already
+            # lives on device — zero per-pass host→device transfer.  jax
+            # arrays are immutable, so the captured view is a free
+            # snapshot (async workers need no isolation copy).
+            view = self._flat.device_view()
+            origin = self._flat.origin.copy()
+            if self.async_offline:
+                self._inflight_consumed = dirty_captured
+                th = threading.Thread(
+                    target=self._offline_pass_guarded,
+                    args=(self._offline_pass_flat, view, origin, n_points, dirty_captured),
+                    daemon=True,
+                )
+                self._offline_thread = th
+                th.start()
+            else:
+                self._offline_pass_flat(view, origin, n_points, dirty_captured)
+                self._settle()
+            return True
         ids, LS, SS, N = self.tree.leaf_cf_buffers()
         if self.async_offline:
             # snapshot the L gathered rows (O(L·d) — the summary, never the
@@ -532,7 +645,7 @@ class StreamingClusterEngine:
             ids_c = np.arange(len(ids))
             th = threading.Thread(
                 target=self._offline_pass_guarded,
-                args=(ids_c, LSc, SSc, Nc, n_points, dirty_captured),
+                args=(self._offline_pass, ids_c, LSc, SSc, Nc, n_points, dirty_captured),
                 daemon=True,
             )
             self._offline_thread = th
@@ -542,12 +655,12 @@ class StreamingClusterEngine:
             self._settle()
         return True
 
-    def _offline_pass_guarded(self, *args):
+    def _offline_pass_guarded(self, fn, *args):
         """Worker entry: capture failures for the main thread instead of
         dying silently with the traceback lost to stderr; join()/poll()
         re-raise so a failed pass can't masquerade as a fresh hierarchy."""
         try:
-            self._offline_pass(*args)
+            fn(*args)
         except BaseException as e:  # noqa: BLE001 — transported, not handled
             self._offline_error = e
             self.stats["recluster_failures"] += 1
@@ -582,6 +695,37 @@ class StreamingClusterEngine:
         )
         # publish only; dirty-mass settlement happens on the main thread
         # (updates that raced this pass stay dirty for the next one)
+        with self._snapshot_lock:
+            self._snapshot = snap
+        self.stats["recluster_count"] += 1
+        self.stats["offline_seconds_total"] += wall
+        return snap
+
+    def _offline_pass_flat(self, view, origin, n_points, dirty_captured):
+        """Offline pass over a captured BubbleFlat device view: ONE jit'd
+        call derives the bubble table on device and runs the fused
+        hierarchy stages; only fixed-size result buffers (plus the
+        serve-plane rep rows) come back (ops.offline_recluster_from_
+        device_table)."""
+        t0 = time.perf_counter()
+        # min_pts is a static arg: clamp host-side against the captured
+        # population (the flat table's mass equals it by construction)
+        mp = max(1, min(self.min_pts, int(n_points)))
+        res, rep, n_b, center = self.backend.offline_recluster_from_device_table(
+            *view, origin, mp, min_cluster_size=self.min_cluster_size
+        )
+        wall = time.perf_counter() - t0
+        self._version += 1
+        snap = ClusterSnapshot(
+            version=self._version,
+            n_points=int(n_points),
+            bubble_rep=rep,
+            bubble_n=n_b,
+            center=center,
+            result=res,
+            wall_seconds=wall,
+            dirty_consumed=float(dirty_captured),
+        )
         with self._snapshot_lock:
             self._snapshot = snap
         self.stats["recluster_count"] += 1

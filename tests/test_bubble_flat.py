@@ -1,0 +1,311 @@
+"""Differential suite for the device-resident online path (ISSUE 4
+tentpole): `core.bubble_flat.BubbleFlat` + the engine's
+``device_online=True`` mode vs the host `BubbleTree` oracle.
+
+Contracts pinned here:
+  * CF parity — after EVERY applied block the flat device table's
+    uncentered f64 CFs (compensated sums) match the tree's per alive
+    leaf at 1e-6 rel;
+  * label parity — every ε-triggered device-table offline pass matches
+    the host-derivation pass (`ops.offline_recluster`, f64 bubble table)
+    on the same tree, partition-equal per leaf;
+  * invariants — `check_invariants()` (incl. the leaf-size cap) holds
+    after every block op;
+  * the fuzz schedule runs ≥ 200 interleaved insert/delete/query steps
+    on BOTH backends (jnp reference and Pallas tiles), scaled by
+    ``REPRO_FUZZ_SCALE`` in the nightly job.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from conftest import assert_same_partition
+from repro.core.bubble_flat import BubbleFlat
+from repro.core.bubble_tree import BubbleTree
+from repro.kernels import ops
+from repro.serving.stream import StreamingClusterEngine
+
+MIN_PTS = 6
+MCS = 6.0
+FUZZ_SCALE = max(1, int(os.environ.get("REPRO_FUZZ_SCALE", "1")))
+SEED_OFFSET = int(os.environ.get("REPRO_FUZZ_SEED_OFFSET", "0"))
+
+
+def _assert_cf_parity(eng, rtol=1e-6):
+    """Flat device table vs host tree, per alive non-empty leaf."""
+    leaf_ids, LS, SS, N = eng._flat.host_cfs()
+    ids = eng.tree.alive_leaf_ids()
+    tids = np.sort(ids[eng.tree.N[ids] > 0])
+    srt = np.sort(leaf_ids)
+    np.testing.assert_array_equal(srt, tids)
+    order = np.argsort(leaf_ids)
+    scale = max(1.0, float(np.abs(eng.tree.LS[srt]).max()))
+    np.testing.assert_allclose(
+        LS[order], eng.tree.LS[srt], rtol=rtol, atol=rtol * scale
+    )
+    np.testing.assert_allclose(
+        SS[order], eng.tree.SS[srt], rtol=rtol,
+        atol=rtol * max(1.0, float(np.abs(eng.tree.SS[srt]).max())),
+    )
+    np.testing.assert_array_equal(N[order], eng.tree.N[srt])
+
+
+def _assert_label_parity(eng, use_ref):
+    """Device-table pass labels vs the host f64-derivation pass on the
+    same tree, aligned per leaf id (snapshot rows are ascending-slot;
+    the host pass rows are ascending-leaf)."""
+    snap = eng.snapshot
+    ids, LS, SS, N = eng.tree.leaf_cf_buffers()
+    res = ops.offline_recluster(
+        LS, SS, N, ids, MIN_PTS, min_cluster_size=MCS, use_ref=use_ref
+    )
+    flat_leaves = eng._flat.leaf_of_slot[eng._flat.alive_slots()]
+    assert snap.bubble_labels.shape[0] == len(flat_leaves)
+    # reorder the host labels (ascending leaf id) into flat row order
+    pos = {int(leaf): i for i, leaf in enumerate(ids)}
+    host_rows = np.asarray([pos[int(leaf)] for leaf in flat_leaves])
+    assert_same_partition(snap.bubble_labels, res.labels[host_rows])
+    np.testing.assert_allclose(
+        snap.total_mst_weight, float(np.sum(res.mst[2])), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("use_ref", [True, False], ids=["jnp", "pallas"])
+def test_flat_differential_fuzz(use_ref):
+    """≥ 200 interleaved insert/delete/query steps per backend; every
+    block op re-checks CF parity + tree invariants, every ε-pass
+    re-checks label parity against the host-derivation pipeline."""
+    rng = np.random.default_rng(SEED_OFFSET + (0 if use_ref else 1))
+    n_steps = 200 * FUZZ_SCALE
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, min_cluster_size=MCS, compression=0.12,
+        epsilon=0.15, backend="jnp" if use_ref else "pallas",
+        min_offline_points=10, max_block=64, device_online=True,
+    )
+    centers = np.asarray([[0.0, 0.0], [5.0, 5.0], [-5.0, 4.0]])
+    live = []
+    passes_checked = 0
+    for _ in range(n_steps):
+        op = rng.random()
+        before = eng.stats["recluster_count"]
+        if op < 0.55 or len(live) < 12:
+            k = int(rng.integers(1, 16))
+            c = centers[rng.integers(0, len(centers))]
+            t = eng.submit_insert(rng.normal(size=(k, 2)) * 0.4 + c)
+            eng.poll()
+            live.extend(t.pids)
+        elif op < 0.85:
+            k = min(len(live), int(rng.integers(1, 10)))
+            idx = rng.choice(len(live), size=k, replace=False)
+            pids = [live[i] for i in idx]
+            live = [p for i, p in enumerate(live) if i not in set(idx.tolist())]
+            eng.submit_delete(pids)
+            eng.poll()
+        else:
+            q = rng.normal(size=(5, 2)) * 3.0
+            labels = eng.query(q)
+            assert labels.shape == (5,)
+        # invariant fuzz: structural violations fail loudly, every op
+        eng.tree.check_invariants()
+        if not eng._flat.stale:
+            _assert_cf_parity(eng)
+        if eng.stats["recluster_count"] > before and not eng._flat.stale:
+            _assert_label_parity(eng, use_ref)
+            passes_checked += 1
+    assert eng.stats["device_online_blocks"] > n_steps // 2
+    assert passes_checked >= 2
+    eng.flush()
+    eng.tree.check_invariants()
+    if not eng._flat.stale:
+        _assert_label_parity(eng, use_ref)
+
+
+def test_flat_matches_tree_far_from_origin(rng):
+    """f32-hostile regime: clusters at offset 1e4 with unit separations.
+    The origin-centered compensated table must still track the f64 tree
+    at 1e-6 rel, and the device pass must produce the same partition."""
+    off = np.array([1.0e4, -7.5e3])
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, min_cluster_size=MCS, compression=0.1,
+        epsilon=0.1, backend="jnp", min_offline_points=10, max_block=128,
+        device_online=True,
+    )
+    centers = np.asarray([[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]]) + off
+    pids = []
+    for rep in range(6):
+        for c in centers:
+            t = eng.submit_insert(rng.normal(size=(20, 2)) * 0.3 + c)
+            eng.poll()
+            pids.extend(t.pids)
+        eng.tree.check_invariants()
+        if not eng._flat.stale:
+            _assert_cf_parity(eng)
+    eng.flush()
+    _assert_label_parity(eng, use_ref=True)
+    # the three true blobs must separate
+    assert eng.snapshot.n_clusters == 3
+    labels = eng.query(centers)
+    assert len(set(labels.tolist())) == 3
+    # retire one blob's worth and keep parity through the shrink
+    eng.retire(pids[: len(pids) // 3])
+    eng.tree.check_invariants()
+    if not eng._flat.stale:
+        _assert_cf_parity(eng)
+
+
+def test_flat_work_list_drives_host_fixpoint(rng):
+    """The dense overfull work-list: a concentrated block through the
+    device path must come back flagged, and the host fixpoint it feeds
+    must shatter the leaf (no silent starvation through the flat path)."""
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, compression=0.05, epsilon=10.0,
+        backend="jnp", min_offline_points=10**9, max_block=4096,
+        device_online=True,
+    )
+    eng.ingest(rng.normal(size=(400, 2)) * 5.0)
+    assert not eng._flat.stale
+    # concentrated block: lands in O(1) leaves, far over leaf_cap
+    eng.ingest(rng.normal(size=(1024, 2)) * 0.01 + 2.0)
+    eng.tree.check_invariants()
+    _assert_cf_parity(eng)
+    cap = eng.tree.leaf_cap
+    for leaf in eng.tree.alive_leaf_ids():
+        assert len(eng.tree.leaf_points[int(leaf)]) <= cap
+
+
+def test_flat_delete_scatter_and_dissolve(rng):
+    """Deletes through the device path: scatter subtraction + dissolve
+    patches keep parity even when whole leaves die."""
+    eng = StreamingClusterEngine(
+        dim=3, min_pts=MIN_PTS, compression=0.08, epsilon=10.0,
+        backend="jnp", min_offline_points=10**9, device_online=True,
+    )
+    pids = eng.ingest(rng.normal(size=(300, 3)))
+    order = rng.permutation(len(pids))
+    for i in range(0, 260, 13):
+        eng.retire([pids[j] for j in order[i : i + 13]])
+        eng.tree.check_invariants()
+        if not eng._flat.stale:
+            _assert_cf_parity(eng)
+    assert eng.tree.n_points == 300 - 260
+
+
+def test_flat_bootstrap_and_bucket_growth(rng):
+    """0 → tiny → large growth: the bootstrap blocks go through the host
+    path (flat stale), the first structured block loads the flat state,
+    and leaf-count growth across the slot bucket forces a clean reload."""
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, compression=0.2, epsilon=10.0,
+        backend="jnp", min_offline_points=10**9, device_online=True,
+    )
+    eng.ingest(rng.normal(size=(3, 2)))
+    assert eng._flat.stale  # bootstrap went through the host path
+    eng.ingest(rng.normal(size=(40, 2)))
+    assert not eng._flat.stale
+    lp0 = eng._flat.Lp
+    eng.ingest(rng.normal(size=(2000, 2)) * 3.0)  # ~400 leaves at c=0.2
+    eng.tree.check_invariants()
+    _assert_cf_parity(eng)
+    assert eng._flat.Lp > lp0  # bucket grew via reload
+    assert eng.stats["flat_loads"] >= 1
+
+
+def test_flat_standalone_kahan_drift(rng):
+    """Unit-level: hammer one BubbleFlat with many tiny scatter blocks and
+    verify the compensated sums stay at f64-oracle precision (a plain f32
+    accumulator drifts ~1e-4 rel over this schedule)."""
+    tree = BubbleTree(dim=2, compression=0.1)
+    tree.insert_block(rng.normal(size=(200, 2)) + 3.0)
+    flat = BubbleFlat(2, use_ref=True)
+    flat.load(tree)
+    for _ in range(300):
+        X = rng.normal(size=(4, 2)) * 0.3 + 3.0
+        cap = tree._leaf_cap_at(tree.n_points + X.shape[0])
+        leaf_ids, work = flat.insert_block(X, cap)
+        tree.apply_assigned_block(X, leaf_ids, overfull_hint=work)
+        flat.sync_struct(tree)
+    leaf_ids, LS, SS, N = flat.host_cfs()
+    srt = np.sort(leaf_ids)
+    order = np.argsort(leaf_ids)
+    np.testing.assert_allclose(LS[order], tree.LS[srt], rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(SS[order], tree.SS[srt], rtol=1e-6, atol=1e-4)
+    np.testing.assert_array_equal(N[order], tree.N[srt])
+
+
+def test_device_online_async_offline(rng):
+    """device_online composes with async_offline: captured device views
+    are immutable snapshots, so a worker-thread pass never races the
+    ingest path; results match the sync engine's."""
+    kw = dict(
+        dim=2, min_pts=MIN_PTS, min_cluster_size=MCS, compression=0.1,
+        epsilon=0.1, backend="jnp", min_offline_points=10,
+        device_online=True,
+    )
+    a = StreamingClusterEngine(async_offline=False, **kw)
+    b = StreamingClusterEngine(async_offline=True, **kw)
+    X = np.concatenate(
+        [rng.normal(size=(60, 2)) * 0.4 + c for c in ([0, 0], [6, 0], [0, 6])]
+    )
+    for eng in (a, b):
+        for i in range(0, X.shape[0], 40):
+            eng.submit_insert(X[i : i + 40])
+            eng.poll()
+        eng.flush()
+        eng.tree.check_invariants()
+    assert b.stats["recluster_count"] >= 1
+    assert_same_partition(
+        a.query(np.asarray([[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]])),
+        b.query(np.asarray([[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]])),
+    )
+
+
+def test_drift_outside_frame_falls_back_and_reloads(rng):
+    """A block further from every live rep than the dead-slot parking
+    coordinate must NOT reach the tree as a -1 leaf id: the flat state
+    refuses, the engine applies the block through the host path, and the
+    next block reloads at a fresh origin."""
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, compression=0.1, epsilon=10.0,
+        backend="jnp", min_offline_points=10**9, device_online=True,
+    )
+    eng.ingest(rng.normal(size=(200, 2)))
+    assert not eng._flat.stale
+    pids = eng.ingest(rng.normal(size=(32, 2)) + 3.0e6)  # outside the frame
+    assert len(pids) == 32
+    # structural safety in place of full check_invariants: mixed 0/3e6
+    # scale data puts f64 CF *sums* beyond its absolute tolerance, but a
+    # -1 leaf id would file points into a dead SoA row — every pid must
+    # live in an alive leaf and the membership count must balance
+    alive = set(eng.tree.alive_leaf_ids().tolist())
+    assert sum(len(eng.tree.leaf_points[leaf]) for leaf in alive) == eng.tree.n_points
+    assert all(int(eng.tree.point_leaf[p]) in alive for p in pids)
+    assert eng._flat.stale  # guard tripped; reload pending
+    eng.ingest(rng.normal(size=(32, 2)) + 3.0e6)
+    assert not eng._flat.stale  # reloaded at a fresh origin
+    _assert_cf_parity(eng)
+
+
+def test_device_online_rejects_exact_mode():
+    with pytest.raises(ValueError):
+        StreamingClusterEngine(dim=2, exact=True, device_online=True)
+
+
+def test_bad_delete_leaves_flat_consistent(rng):
+    """Atomicity: a delete block with a dead pid raises without touching
+    the device table (the tree validates before any mutation; the engine
+    scatters only after it passes)."""
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, compression=0.1, epsilon=10.0,
+        backend="jnp", min_offline_points=10**9, device_online=True,
+    )
+    pids = eng.ingest(rng.normal(size=(120, 2)))
+    with pytest.raises(KeyError):
+        eng.retire([pids[0], 10**6])
+    # the bad block must not have corrupted parity
+    eng.tree.check_invariants()
+    _assert_cf_parity(eng)
+    # pids[0] must still be deletable exactly once
+    eng.retire([pids[0]])
+    _assert_cf_parity(eng)

@@ -9,7 +9,10 @@ the oracle re-derives the table from `leaf_cf_buffers()` at that moment
 and must land on the identical partition.  The oracle is fed the device
 pass's own W (f64), making any disagreement a hierarchy bug rather than
 f32-geometry drift; a second check re-runs the fused pipeline from
-scratch and demands bitwise-equal labels (determinism).
+scratch and demands bitwise-equal labels (determinism).  ISSUE 4 added
+``check_invariants()`` after every block op (CF consistency, fanout,
+uniform depth, the leaf-size cap), so structural violations fail loudly
+here instead of silently degrading summary quality.
 
 The nightly CI job scales the schedule with ``REPRO_FUZZ_SCALE`` (10×
 steps) and rotates the seed matrix with ``REPRO_FUZZ_SEED_OFFSET``.
@@ -90,6 +93,9 @@ def test_interleaved_schedule_every_pass_matches_static(seed, use_ref):
             snap = eng.snapshot
             hi = -1 if snap is None else snap.n_clusters - 1
             assert labels.min() >= -1 and labels.max() <= hi
+        # invariant fuzz (ISSUE 4): structural violations — CF drift,
+        # fanout breaks, leaf-size starvation — fail loudly on every op
+        eng.tree.check_invariants()
         if eng.stats["recluster_count"] > before:
             _check_snapshot_matches_scratch(eng, use_ref)
             passes_checked += 1
@@ -98,6 +104,7 @@ def test_interleaved_schedule_every_pass_matches_static(seed, use_ref):
     # final flush: one more forced pass, same contract
     if eng.tree.n_points >= 2:
         eng.flush()
+        eng.tree.check_invariants()
         _check_snapshot_matches_scratch(eng, use_ref)
 
 
@@ -113,10 +120,12 @@ def test_delete_heavy_shrink_then_regrow(rng):
     for i in range(0, 110, 11):
         before = eng.stats["recluster_count"]
         eng.retire(pids[i : i + 11])
+        eng.tree.check_invariants()
         if eng.stats["recluster_count"] > before and eng.tree.n_points >= 2:
             _check_snapshot_matches_scratch(eng, use_ref=True)
     eng.ingest(rng.normal(size=(80, 2)) + 4.0)
     eng.flush()
+    eng.tree.check_invariants()
     _check_snapshot_matches_scratch(eng, use_ref=True)
     pids2, labels = eng.labels()
     assert labels.shape == pids2.shape
