@@ -1,17 +1,27 @@
 """Paper Fig. 5 — per-slide latency of the online summarizers under the
-sliding-window workload (window 10⁶, slide 10⁵ in the paper; scaled here).
+sliding-window workload (window 10⁶, slide 10⁵ in the paper; scaled here),
+plus the serve-plane query latency/throughput A/B (ISSUE 5).
 
 Compares Bubble-tree / ClusTree / Incremental per-slide insert+delete
-latency across the four (synthetic stand-in) datasets."""
+latency across the four (synthetic stand-in) datasets; the ``query``
+section measures p50/p99 `query_detailed` latency at batch 1/64/1024
+through the versioned device cache (serving.query) against the PR 4-era
+per-call-upload path, at serving scale (L ≈ 1000, d = 16).  The CI
+bench-smoke job runs the query section alone (``--only fig5_query``) and
+`scripts/check_bench_regression.py` gates it — including a hard ≥ 2×
+floor on the batch-1024 p50 speedup."""
 
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from repro.core import BubbleTree, ClusTreeLite, IncrementalBubbles
 from repro.data.synthetic import DATASET_SPECS, dataset, sliding_window_workload
 
-from .common import Timer, emit, save_json
+from .common import RESULTS_DIR, Timer, emit, save_json
 
 
 def _run_one(name: str, X, window: int, slide: int):
@@ -52,6 +62,84 @@ def _run_one(name: str, X, window: int, slide: int):
     return out
 
 
+def _build_query_snapshot(L: int, d: int, seed: int):
+    """Serving-scale `ClusterSnapshot` straight from a synthetic bubble
+    table through the real fused offline pass — the query benches need a
+    published snapshot, not a whole ingestion run."""
+    from repro.kernels import ops as kops
+    from repro.serving.stream import ClusterSnapshot
+
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)) * 10.0
+    rep = centers[rng.integers(0, 8, size=L)] + rng.normal(size=(L, d)) * 0.5
+    n_b = rng.integers(5, 50, size=L).astype(np.float64)
+    extent = np.abs(rng.normal(size=L)) * 0.3
+    res = kops.offline_recluster_from_table(
+        rep, n_b, extent, min_pts=10, min_cluster_size=10.0, use_ref=True
+    )
+    center = (n_b @ rep) / n_b.sum()
+    return ClusterSnapshot(
+        version=1, n_points=int(n_b.sum()), bubble_rep=rep, bubble_n=n_b,
+        center=center, result=res, wall_seconds=0.0,
+    )
+
+
+def run_query(L: int = 1000, d: int = 16, batches=(1, 64, 1024), seed: int = 0):
+    """Serve-plane A/B: device-cached fused query vs the per-call-upload
+    path, p50/p99 at each batch size.  Merges a ``query`` section into
+    fig5_latency.json (preserving the sliding-window section when
+    present) so the smoke job can run it standalone."""
+    from repro.kernels import ops as kops
+    from repro.serving.query import QueryEngine, query_percall
+
+    backend = kops.get_backend("jnp")  # CPU smoke: the compiled jnp path
+    snap = _build_query_snapshot(L, d, seed)
+    qe = QueryEngine(backend, d)
+    rng = np.random.default_rng(seed + 1)
+    out = {"L": L, "dim": d, "n_clusters": snap.n_clusters}
+    for B in batches:
+        Q = rng.normal(size=(B, d)) * 10.0
+        iters = max(50, min(300, 20000 // max(B, 1)))
+        qe.query_detailed(snap, Q)  # warm: entry build + bucket compile
+        query_percall(backend, snap, Q)
+        lat_c, lat_p = [], []
+        # interleave the A/B: a shared-core contention burst then hits
+        # both paths alike, so the p50 QUOTIENT (the gated ≥2× floor)
+        # stays stable even when absolute timings wander
+        for _ in range(iters):
+            with Timer() as t:
+                qe.query_detailed(snap, Q)
+            lat_c.append(t.seconds)
+            with Timer() as t:
+                query_percall(backend, snap, Q)
+            lat_p.append(t.seconds)
+        c50, c99 = np.percentile(lat_c, [50, 99])
+        p50, p99 = np.percentile(lat_p, [50, 99])
+        rec = {
+            "iters": iters,
+            "cached_p50_ms": float(c50 * 1e3),
+            "cached_p99_ms": float(c99 * 1e3),
+            "percall_p50_ms": float(p50 * 1e3),
+            "percall_p99_ms": float(p99 * 1e3),
+            "speedup_p50": float(p50 / c50),
+            "cached_qps": float(B / c50),
+        }
+        out[f"batch_{B}"] = rec
+        emit(
+            f"fig5/query/batch_{B}", float(c50),
+            f"p99={c99 * 1e3:.2f}ms percall_p50={p50 * 1e3:.2f}ms "
+            f"speedup={rec['speedup_p50']:.2f}x",
+        )
+    path = os.path.join(RESULTS_DIR, "fig5_latency.json")
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["query"] = out
+    save_json("fig5_latency", data)
+    return out
+
+
 def run(window: int = 2000, slide: int = 500, n_slides: int = 4, seed: int = 0):
     n = window + slide * n_slides
     rep = {}
@@ -67,14 +155,16 @@ def run(window: int = 2000, slide: int = 500, n_slides: int = 4, seed: int = 0):
         }
         for k, v in rep[name].items():
             emit(f"fig5/{name}/{k}", v["mean_slide_s"], f"max={v['max_slide_s']:.3f}s")
-    save_json("fig5_latency", {"window": window, "slide": slide, "datasets": rep})
+    out = {"window": window, "slide": slide, "datasets": rep}
+    save_json("fig5_latency", out)
+    out["query"] = run_query()  # loads the file above and merges itself in
     # paper claim: Bubble-tree beats Incremental on per-slide latency
     beats = sum(
         rep[d]["bubble_tree"]["mean_slide_s"] < rep[d]["incremental"]["mean_slide_s"]
         for d in rep
     )
     assert beats >= len(rep) - 1, rep
-    return rep
+    return out
 
 
 if __name__ == "__main__":

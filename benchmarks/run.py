@@ -19,7 +19,7 @@ def main(argv=None):
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig6,fig7,fig8,kernels,roofline",
+        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig8,kernels,roofline",
     )
     ap.add_argument("--dryrun", default="dryrun_results.json")
     args = ap.parse_args(argv)
@@ -48,6 +48,12 @@ def main(argv=None):
         from . import fig5_latency
 
         _guard(fig5_latency.run, failures, "fig5")
+    elif want("fig5_query"):
+        # serve-plane query A/B alone (the full fig5 runs it too); merges
+        # the `query` section into an existing fig5_latency.json
+        from . import fig5_latency
+
+        _guard(fig5_latency.run_query, failures, "fig5_query")
     if want("fig6"):
         from . import fig6_nmi
 

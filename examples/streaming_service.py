@@ -62,14 +62,20 @@ def main():
         row_of.update({pid: row for row, pid in zip(range(i, i + 400), t.pids)})
         i += 400
         round_no += 1
-        # serve from whatever hierarchy is cached RIGHT NOW
+        # serve from whatever hierarchy is cached RIGHT NOW — the
+        # device-cached path (DESIGN.md §9): one upload per snapshot
+        # version, one fused jit per query batch, and query_detailed
+        # adds distance + condensed-tree membership strength
         q = rng.choice(len(X), size=200, replace=False)
-        labels = eng.query(X[q])
+        res = eng.query_detailed(X[q])
+        labels = res.labels
         snap = eng.snapshot
         served = (labels >= 0).mean()
+        strong = res.strength[labels >= 0].mean() if (labels >= 0).any() else 0.0
         print(f"[round {round_no}] n={eng.tree.n_points} "
-              f"dirty={eng.tree.dirty_fraction():.2f} serving v{snap.version} "
-              f"({snap.n_clusters} clusters, {100 * served:.0f}% non-noise)")
+              f"dirty={eng.tree.dirty_fraction():.2f} serving v{res.version} "
+              f"({snap.n_clusters} clusters, {100 * served:.0f}% non-noise, "
+              f"mean strength {strong:.2f})")
 
     # -- final: drain + force a last pass, score against ground truth -------
     snap = eng.flush()

@@ -20,7 +20,9 @@ import os
 import sys
 
 # (file, path-into-json, kind): kind "ms" = lower is better (tolerance ×),
-# "ratio" = higher is better (tolerance ÷)
+# "ratio" = higher is better (tolerance ÷), ("floor", x) = the FRESH value
+# must clear the absolute floor x regardless of baseline/tolerance (used
+# for acceptance-criterion speedups that must never erode)
 METRICS = [
     ("fig8_streaming.json", ("64", "recluster_ms_mean"), "ms"),
     ("fig8_streaming.json", ("512", "recluster_ms_mean"), "ms"),
@@ -33,6 +35,17 @@ METRICS = [
     ("fig3_dynamic.json", ("incremental_per_update_ms_small",), "ms"),
     ("fig3_dynamic.json", ("offline_recluster_ms",), "ms"),
     ("fig3_dynamic.json", ("rows", 0, "speedup_vs_offline"), "ratio"),
+    # serve plane (ISSUE 5): device-cached query latency at serving
+    # scale, plus the acceptance-criterion floor — batch-1024 p50 must
+    # stay ≥ 2× over the per-call-upload path.  Unlike the fig8 quotient
+    # above, these ARE gated: the A/B is interleaved per iteration, so
+    # the quotient shrugs off shared-core contention, and removing the
+    # device cache regresses it far beyond any timing noise.  batch_1
+    # rides a (looser) floor too — its absolute p50 is sub-ms, under
+    # MIN_BASELINE_MS, so an "ms" gate would be permanently skipped.
+    ("fig5_latency.json", ("query", "batch_1", "speedup_p50"), ("floor", 1.5)),
+    ("fig5_latency.json", ("query", "batch_1024", "cached_p50_ms"), "ms"),
+    ("fig5_latency.json", ("query", "batch_1024", "speedup_p50"), ("floor", 2.0)),
 ]
 
 MIN_BASELINE_MS = 2.0
@@ -76,6 +89,8 @@ def main(argv=None):
             continue
         if kind == "ms":
             ok = new <= base * args.tolerance
+        elif isinstance(kind, tuple) and kind[0] == "floor":
+            ok = new >= kind[1]
         else:
             ok = new >= base / args.tolerance
         rows.append((label, base, new, "ok" if ok else "REGRESSION"))

@@ -61,6 +61,10 @@ class BubbleTree:
         # since the last offline pass — the staleness signal that steers
         # re-clustering the same way compression steers the leaf count.
         self.dirty_mass = 0.0
+        # monotonic ingest/retire counter — unlike dirty_mass it is never
+        # settled back, so serve-plane caches (engine.labels()) can key
+        # on (snapshot version, mutations) and invalidate on any churn
+        self.mutations = 0
         # leaves whose stats/liveness changed through *structural*
         # maintenance (splits, dissolves, reorg, sequential descent) —
         # changes a block-level device mirror (core.bubble_flat) cannot
@@ -238,6 +242,7 @@ class BubbleTree:
         self._insert_point_into_tree(pid)
         self.n_points += 1
         self.dirty_mass += 1.0
+        self.mutations += 1
         self._maintain()
         return pid
 
@@ -255,6 +260,7 @@ class BubbleTree:
         self._point_free.append(pid)
         self.n_points -= 1
         self.dirty_mass += 1.0
+        self.mutations += 1
         if len(self.leaf_points[leaf]) < self.m and self.num_leaves > 1:
             self._dissolve_leaf(leaf)
         self._maintain()
@@ -333,6 +339,7 @@ class BubbleTree:
         self._recompute_internal_cfs()
         self.n_points += n
         self.dirty_mass += float(n)
+        self.mutations += 1
         if (
             overfull_hint is not None
             and len(overfull_hint) == 0
@@ -379,6 +386,7 @@ class BubbleTree:
         self._recompute_internal_cfs()
         self.n_points -= len(pids)
         self.dirty_mass += float(len(pids))
+        self.mutations += 1
         for leaf in list(by_leaf):
             if (
                 self.node_alive[leaf]

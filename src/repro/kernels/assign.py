@@ -18,7 +18,7 @@ from jax.experimental import pallas as pl
 DEFAULT_BN = 256
 
 
-def _assign_kernel(x_ref, rep_ref, out_ref, *, bn, L):
+def _assign_kernel(x_ref, rep_ref, out_ref, *dist_ref, bn, L):
     x = x_ref[...]
     r = rep_ref[...]
     xx = jnp.sum(x * x, axis=-1, keepdims=True)
@@ -31,22 +31,36 @@ def _assign_kernel(x_ref, rep_ref, out_ref, *, bn, L):
     row_min = jnp.min(sq, axis=1, keepdims=True)
     win = jnp.min(jnp.where(sq == row_min, cols, L), axis=1)
     out_ref[...] = win
+    if dist_ref:
+        # the serve plane's fused query path wants the nearest distance
+        # too — the row minimum is already in registers, so emitting it
+        # here saves a second O(n·d) gather+reduction pass
+        dist_ref[0][...] = jnp.sqrt(row_min[:, 0])
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "interpret", "with_dist"))
 def assign(
     x: jax.Array,
     reps: jax.Array,
     *,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
+    with_dist: bool = False,
 ) -> jax.Array:
-    """(n,d),(L,d) -> (n,) int32 index of nearest representative."""
+    """(n,d),(L,d) -> (n,) int32 index of nearest representative.
+
+    With ``with_dist=True`` also returns the (n,) f32 euclidean distance
+    to that representative (fused from the same row minimum)."""
     n, d = x.shape
     L = reps.shape[0]
     assert n % bn == 0, (n, bn)
     grid = (n // bn,)
     kernel = functools.partial(_assign_kernel, bn=bn, L=L)
+    out_specs = pl.BlockSpec((bn,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.int32)
+    if with_dist:
+        out_specs = [out_specs, pl.BlockSpec((bn,), lambda i: (i,))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((n,), jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -54,7 +68,7 @@ def assign(
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
             pl.BlockSpec((L, d), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x.astype(jnp.float32), reps.astype(jnp.float32))

@@ -154,10 +154,13 @@ def core_distances(x, min_pts: int):
     return d[:, min(min_pts, x.shape[0]) - 1]
 
 
-def assign(x, reps, use_ref: bool | None = None):
+def assign(x, reps, use_ref: bool | None = None, with_dist: bool = False):
+    """Nearest-representative index per row; with ``with_dist=True`` also
+    the euclidean distance to it (one fused pass — the serve plane's
+    query path wants both without a second gather)."""
     x, reps = jnp.asarray(x), jnp.asarray(reps)
     if _resolve_ref(use_ref):
-        return _ref.assign(x, reps)
+        return _ref.assign_with_dist(x, reps) if with_dist else _ref.assign(x, reps)
     n = x.shape[0]
     bn = min(_assign_k.DEFAULT_BN, max(8, 1 << (max(n - 1, 1)).bit_length()))
     xp = _pad_feats(_pad_rows(x, bn))
@@ -169,7 +172,9 @@ def assign(x, reps, use_ref: bool | None = None):
     else:
         rp = reps
     rp = _pad_feats(rp)
-    out = _assign_k.assign(xp, rp, bn=bn, interpret=_interpret())
+    out = _assign_k.assign(xp, rp, bn=bn, interpret=_interpret(), with_dist=with_dist)
+    if with_dist:
+        return out[0][:n], out[1][:n]
     return out[:n]
 
 
@@ -747,6 +752,9 @@ class ClusterBackend:
 
     def assign(self, x, reps):
         return assign(x, reps, use_ref=self.use_ref)
+
+    def assign_with_dist(self, x, reps):
+        return assign(x, reps, use_ref=self.use_ref, with_dist=True)
 
     def bubble_core_distances(self, rep, n_b, extent, min_pts: int):
         return bubble_core_distances(rep, n_b, extent, min_pts, use_ref=self.use_ref)

@@ -33,9 +33,43 @@ def knn(x, y, k):
     return -neg_d, idx.astype(jnp.int32)
 
 
+def _nearest(x, reps):
+    """Lowest nearest-rep column per row + the ROW-SHIFTED squared
+    distance it attains (true sq = shifted + ‖x‖², added back only where
+    a caller wants the distance itself).
+
+    Two deliberate deviations from a naive `argmin(pairwise_sqdist(…))`,
+    both for the serve-plane latency gate (benchmarks/fig5_latency.py
+    query section):
+      * ‖x‖² is elided from the minimized matrix — it is constant per
+        row, so the argmin is invariant and one full (n, L) broadcast
+        pass disappears;
+      * the index comes from min + masked index-min instead of argmin —
+        XLA CPU lowers argmin to a variadic (value, index) pair reduce
+        ~6× slower than two simple vectorized reductions, and the
+        where(== row_min) form matches argmin's first-occurrence
+        tie-break AND the Pallas assign kernel's extraction."""
+    x = x.astype(jnp.float32)
+    r = reps.astype(jnp.float32)
+    L = r.shape[0]
+    sq = jnp.sum(r * r, axis=-1)[None, :] - 2.0 * x @ r.T
+    m = jnp.min(sq, axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, sq.shape, 1)
+    idx = jnp.min(jnp.where(sq == m[:, None], cols, L), axis=1).astype(jnp.int32)
+    return idx, m
+
+
 def assign(x, reps):
-    sq = pairwise_sqdist(x, reps)
-    return jnp.argmin(sq, axis=1).astype(jnp.int32)
+    idx, _ = _nearest(x, reps)
+    return idx
+
+
+def assign_with_dist(x, reps):
+    """Nearest-rep index + euclidean distance (the serve plane's fused
+    query path; mirrors the kernel's dual output)."""
+    idx, m = _nearest(x, reps)
+    xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    return idx, jnp.sqrt(jnp.maximum(xx + m, 0.0))
 
 
 def bubble_core_distances(rep, n_b, extent, min_pts, dim):

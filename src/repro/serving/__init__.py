@@ -1,4 +1,5 @@
 from .engine import HostBatcher, Request, ServeEngine
+from .query import QueryBatcher, QueryEngine, QueryResult, SnapshotDeviceCache
 from .stream import ClusterSnapshot, StalenessPolicy, StreamingClusterEngine, Ticket
 
 __all__ = [
@@ -6,6 +7,10 @@ __all__ = [
     "Request",
     "ServeEngine",
     "ClusterSnapshot",
+    "QueryBatcher",
+    "QueryEngine",
+    "QueryResult",
+    "SnapshotDeviceCache",
     "StalenessPolicy",
     "StreamingClusterEngine",
     "Ticket",

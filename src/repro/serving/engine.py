@@ -36,10 +36,18 @@ class HostBatcher:
 
     A FIFO of (kind, item) ops drained either one at a time (slot-at-a-time
     admission, ServeEngine) or as contiguous same-kind blocks of at most
-    ``max_block`` items (StreamingClusterEngine).  FIFO order is preserved
-    across kinds — an op never jumps an earlier op of a different kind —
-    which is what makes batched ingestion equivalent to replaying the
-    sequential stream (CF additivity does the rest).
+    ``max_block`` items (StreamingClusterEngine's ingestion scheduler and
+    the serve plane's `QueryBatcher` micro-batching, both via the
+    size-counted ``next_block``).  FIFO order is preserved across kinds —
+    an op never jumps an earlier op of a different kind — which is what
+    makes batched ingestion equivalent to replaying the sequential stream
+    (CF additivity does the rest).
+
+    Threading contract: ``push`` is safe from any thread (a single
+    GIL-atomic deque append), but draining (``pop_one``/``next_block``)
+    must be serialized by the caller — the streaming engine drains from
+    its poll thread only, and QueryBatcher elects one drainer at a time
+    via its dispatch lock.
     """
 
     def __init__(self, max_block: int = 512):

@@ -28,10 +28,15 @@ calls into a serving loop with three planes:
                   the stages).  Async mode runs it in a background
                   thread against a snapshot of those rows.
 
-  serve plane     `query(X)` labels points against the *cached* snapshot —
-                  nearest-bubble assignment through the engine's backend —
-                  so reads never block on ingestion or re-clustering and
-                  always see the newest complete hierarchy.
+  serve plane     `query(X)` / `query_detailed(X)` label points against
+                  the *cached* snapshot through the versioned device
+                  cache (serving.query, DESIGN.md §9): each published
+                  snapshot's rep/label/λ arrays go to the device ONCE,
+                  and queries run a jit'd fused assign → label-gather →
+                  membership-strength program under power-of-two batch
+                  buckets — reads never block on ingestion or
+                  re-clustering, never re-upload the summary, and always
+                  see one complete snapshot version end to end.
 
   device-online ingestion (``device_online=True``, DESIGN.md §8): the
   throughput half of every block op — point→leaf assignment and the CF
@@ -72,12 +77,14 @@ from repro.core.bubble_tree import BubbleTree
 from repro.kernels import ops
 
 from .engine import HostBatcher
+from .query import QueryEngine, QueryResult
 
 __all__ = [
     "Ticket",
     "StalenessPolicy",
     "UpdatePolicy",
     "ClusterSnapshot",
+    "QueryResult",
     "StreamingClusterEngine",
 ]
 
@@ -312,6 +319,11 @@ class StreamingClusterEngine:
             self._dyn = self.backend.make_dynamic(
                 self.min_pts, dim, capacity=int(exact_capacity)
             )
+        # serve plane: versioned device cache + fused query program
+        # (serving.query); labels() memoizes per-pid labels keyed on
+        # (snapshot version, tree mutation counter)
+        self._query_engine = QueryEngine(self.backend, dim)
+        self._labels_cache: tuple | None = None
         self.stats = {
             "inserts": 0,
             "deletes": 0,
@@ -325,6 +337,7 @@ class StreamingClusterEngine:
             "exact_rebuilds": 0,
             "device_online_blocks": 0,
             "flat_loads": 0,
+            "label_cache_hits": 0,
         }
 
     # -- request plane -----------------------------------------------------
@@ -763,18 +776,37 @@ class StreamingClusterEngine:
         """Cluster labels for query points from the cached hierarchy:
         nearest-bubble assignment, label inherited (paper offline step 2).
         Never blocks on ingestion or re-clustering; -1 (noise) for all
-        points when no snapshot exists yet."""
-        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
-        snap = self.snapshot
-        if snap is None or snap.n_bubbles == 0:
-            return np.full(X.shape[0], -1, dtype=np.int64)
-        a = np.asarray(
-            self.backend.assign(X - snap.center, snap.bubble_rep - snap.center)
-        )
-        return snap.bubble_labels[a]
+        points when no snapshot exists yet.  Thin wrapper over the
+        device-cached fused path (serving.query) — the snapshot's rep
+        table is uploaded once per version, not per call."""
+        return self.query_detailed(X).labels
+
+    def query_detailed(self, X, *, snapshot: ClusterSnapshot | None = None) -> QueryResult:
+        """Full per-query serve output: flat label, nearest-bubble row,
+        distance to its representative, and membership strength derived
+        from the condensed tree (DESIGN.md §9).  ``snapshot`` pins the
+        pass to serve against (default: the newest published one) —
+        label, representative, and λ arrays all come from that ONE
+        snapshot object, so a concurrent swap can never mix versions."""
+        snap = self.snapshot if snapshot is None else snapshot
+        return self._query_engine.query_detailed(snap, X)
 
     def labels(self) -> tuple[np.ndarray, np.ndarray]:
         """(pids, labels) for every currently-alive point, via the cached
-        snapshot (points inserted since the pass are assigned, not noise)."""
+        snapshot (points inserted since the pass are assigned, not noise).
+
+        Memoized on (snapshot version, tree mutation counter): repeated
+        calls with no ingest/retire/pass in between skip the full
+        alive-point round-trip and assignment; any churn invalidates."""
+        snap = self.snapshot
+        key = (0 if snap is None else snap.version, self.tree.mutations)
+        cache = self._labels_cache  # ONE read: a concurrent overwrite
+        #   between key check and payload unpack must not mix entries
+        if cache is not None and cache[0] == key:
+            pids, lab = cache[1]
+            self.stats["label_cache_hits"] += 1
+            return pids.copy(), lab.copy()
         pids, X = self.tree.alive_points()
-        return pids, self.query(X)
+        lab = self._query_engine.query(snap, X)
+        self._labels_cache = (key, (pids, lab))
+        return pids.copy(), lab.copy()

@@ -1,0 +1,132 @@
+"""Concurrent-query fuzz (ISSUE 5 satellite): N reader threads hammer
+`query()` / `query_detailed()` through the versioned device cache while
+the main thread runs the randomized interleaved insert/retire schedule
+from tests/test_streaming_fuzz.py and ASYNC ε-passes swap snapshots
+underneath them.
+
+Every reader captures the snapshot it observed and pins its query to it;
+the returned labels must match a pure-host f64 nearest-bubble replay
+against exactly that snapshot version (tie-tolerant: at a genuine f32
+argmin tie the chosen bubble must still be near-nearest in f64 and the
+label must be the chosen bubble's own).  The nightly CI job scales the
+schedule with ``REPRO_FUZZ_SCALE`` / ``REPRO_FUZZ_SEED_OFFSET``.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving import StreamingClusterEngine
+
+MIN_PTS = 6
+MCS = 6.0
+FUZZ_SCALE = max(1, int(os.environ.get("REPRO_FUZZ_SCALE", "1")))
+SEED_OFFSET = int(os.environ.get("REPRO_FUZZ_SEED_OFFSET", "0"))
+N_READERS = 4
+
+
+def _replay_check(snap, q, res):
+    """Pure-host replay against the snapshot version the reader observed."""
+    assert res.version == snap.version
+    assert res.labels.shape == (q.shape[0],)
+    if snap.n_bubbles == 0:
+        assert (res.labels == -1).all()
+        return
+    # self-consistency: label IS the chosen bubble's label in THIS snapshot
+    np.testing.assert_array_equal(
+        res.labels, snap.bubble_labels[res.bubble_index]
+    )
+    Xc = q - snap.center[None, :]
+    Rc = snap.bubble_rep - snap.center[None, :]
+    sq = ((Xc[:, None, :] - Rc[None, :, :]) ** 2).sum(-1)
+    chosen = sq[np.arange(q.shape[0]), res.bubble_index]
+    best = sq.min(axis=1)
+    assert (chosen <= best * (1 + 1e-4) + 1e-8).all()
+    assert ((res.strength >= 0.0) & (res.strength <= 1.0)).all()
+    assert (res.strength[res.labels == -1] == 0.0).all()
+
+
+@pytest.mark.parametrize("use_ref", [True, False], ids=["jnp", "pallas"])
+def test_readers_vs_ingest_retire_and_async_swaps(use_ref):
+    seed = SEED_OFFSET + (7 if use_ref else 8)
+    rng = np.random.default_rng(seed)
+    n_steps = (50 if use_ref else 14) * FUZZ_SCALE
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=MIN_PTS, min_cluster_size=MCS, compression=0.12,
+        epsilon=0.12, backend="jnp" if use_ref else "pallas",
+        async_offline=True, min_offline_points=10, max_block=64,
+    )
+    centers = np.asarray([[0.0, 0.0], [5.0, 5.0], [-5.0, 4.0]])
+    # warm up: an initial population + one joined pass, so the offline
+    # pipeline is compiled for this L-bucket BEFORE readers start and
+    # ε-triggered background passes actually swap snapshots mid-schedule
+    warm = rng.normal(size=(150, 2)) * 0.4 + centers[rng.integers(0, 3, size=150)]
+    live: list[int] = list(eng.ingest(warm))
+    eng.flush()
+    assert eng.snapshot is not None
+    stop = threading.Event()
+    errors: list[BaseException] = []
+    checks = [0] * N_READERS
+
+    def reader(k):
+        rlocal = np.random.default_rng(1000 + seed * 10 + k)
+        while not stop.is_set():
+            q = rlocal.normal(size=(int(rlocal.integers(1, 9)), 2)) * 3.0
+            snap = eng.snapshot  # the version this reader observed
+            try:
+                if snap is None:
+                    assert (eng.query_detailed(q, snapshot=snap).labels == -1).all()
+                    continue
+                res = eng.query_detailed(q, snapshot=snap)
+                _replay_check(snap, q, res)
+                # the un-pinned wrappers stay shape/range-sane mid-swap
+                lab = eng.query(q[:1])
+                assert lab.shape == (1,) and lab.dtype == np.int64
+                checks[k] += 1
+            except BaseException as e:  # noqa: BLE001 — surfaced in main
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=reader, args=(k,)) for k in range(N_READERS)]
+    for t in threads:
+        t.start()
+    versions = {eng.snapshot.version}
+    try:
+        for _ in range(n_steps):
+            if errors:
+                break
+            op = rng.random()
+            if op < 0.6 or len(live) < 12:
+                k = int(rng.integers(1, 16))
+                c = centers[rng.integers(0, len(centers))]
+                t = eng.submit_insert(rng.normal(size=(k, 2)) * 0.4 + c)
+                eng.poll()
+                live.extend(t.pids)
+            else:
+                k = min(len(live), int(rng.integers(1, 10)))
+                idx = rng.choice(len(live), size=k, replace=False)
+                pids = [live[i] for i in idx]
+                live = [p for i, p in enumerate(live) if i not in set(idx.tolist())]
+                eng.submit_delete(pids)
+                eng.poll()
+            snap = eng.snapshot
+            if snap is not None:
+                versions.add(snap.version)
+        eng.flush()
+        if eng.snapshot is not None:
+            versions.add(eng.snapshot.version)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    if errors:
+        raise errors[0]
+    # the schedule must actually have swapped snapshots under the readers
+    assert len(versions) >= 2, versions
+    assert sum(checks) >= 4 * N_READERS, checks
+    # drained engine still answers the edge cases (pinned regressions)
+    assert eng.query([]).shape == (0,)
+    with pytest.raises(ValueError):
+        eng.query(np.zeros((2, 7)))
