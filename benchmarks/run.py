@@ -19,7 +19,7 @@ def main(argv=None):
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig8,kernels,roofline",
+        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig7_pruned,fig8,kernels,roofline",
     )
     ap.add_argument("--dryrun", default="dryrun_results.json")
     args = ap.parse_args(argv)
@@ -62,6 +62,13 @@ def main(argv=None):
         from . import fig7_scalability
 
         _guard(fig7_scalability.run, failures, "fig7")
+        _guard(fig7_scalability.run_pruned, failures, "fig7_pruned")
+    elif want("fig7_pruned"):
+        # grid-pruned vs dense neighbor-engine L-sweep alone; merges the
+        # `pruned` section into an existing fig7_scalability.json
+        from . import fig7_scalability
+
+        _guard(fig7_scalability.run_pruned, failures, "fig7_pruned")
     if want("fig8"):
         from . import fig8_streaming
 

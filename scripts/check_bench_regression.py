@@ -46,6 +46,12 @@ METRICS = [
     ("fig5_latency.json", ("query", "batch_1", "speedup_p50"), ("floor", 1.5)),
     ("fig5_latency.json", ("query", "batch_1024", "cached_p50_ms"), "ms"),
     ("fig5_latency.json", ("query", "batch_1024", "speedup_p50"), ("floor", 2.0)),
+    # sub-quadratic neighbor engine (kernels.grid): the grid-pruned
+    # offline pass must clear ≥ 2× over the dense O(L²) pass at the
+    # largest L the CI sweep runs — the fig7 acceptance criterion.  An
+    # interleaved A/B quotient, so it rides shared-core noise the same
+    # way the fig5 floors do.
+    ("fig7_scalability.json", ("pruned", "speedup_at_max_L"), ("floor", 2.0)),
 ]
 
 MIN_BASELINE_MS = 2.0

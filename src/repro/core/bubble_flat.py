@@ -61,22 +61,32 @@ def _kahan_add(hi, err, delta):
     return t, err
 
 
-@functools.partial(jax.jit, static_argnames=("hp", "use_ref"))
-def _flat_insert(LS, LSe, SS, SSe, N, alive, Xc, valid, cap, hp, use_ref):
+@functools.partial(jax.jit, static_argnames=("hp", "use_ref", "spatial"))
+def _flat_insert(LS, LSe, SS, SSe, N, alive, Xc, valid, cap, hp, use_ref,
+                 spatial=False):
     """Fixed-shape insert program: assignment + scatter CF update +
     overfull detection, one dispatch.  Shapes: (Lp, d)/(Lp,) state,
     (Bp, d) centered block, (Bp,) row-valid mask.  ``hp`` is the
     power-of-two ceiling of the live-slot watermark: the slot bucket
     carries ~2x headroom so structural churn rarely forces a reload, but
     the O(B·L·d) assignment only runs over the prefix that can actually
-    hold live slots — the scatters still cover the full bucket."""
+    hold live slots — the scatters still cover the full bucket.
+
+    With ``spatial`` the grid-pruned assignment excludes dead slots via
+    the live mask instead of parking them at ``_PAD_COORD`` — a block
+    outside the centered frame then lands on the nearest LIVE slot
+    rather than tripping the dead-slot drift guard (same answer inside
+    the sane envelope, where parked slots are never nearest anyway)."""
     from repro.kernels import ops
 
     Lp = LS.shape[0]
     reps = LS[:hp] / jnp.maximum(N[:hp], 1.0)[:, None]
     live = alive[:hp] & (N[:hp] > 0)
     reps = jnp.where(live[:, None], reps, _PAD_COORD)
-    a = ops.assign(Xc, reps, use_ref=use_ref).astype(jnp.int32)
+    a = ops.assign(
+        Xc, reps, use_ref=use_ref, spatial_index=spatial,
+        valid=live if spatial else None,
+    ).astype(jnp.int32)
     seg = jnp.where(valid, a, Lp)  # padded rows land in a dropped bin
     w = valid.astype(Xc.dtype)
     dLS = jax.ops.segment_sum(Xc * w[:, None], seg, num_segments=Lp + 1)[:Lp]
@@ -135,9 +145,11 @@ class BubbleFlat:
     differential tests.
     """
 
-    def __init__(self, dim: int, use_ref: bool = True, capacity: int = 64):
+    def __init__(self, dim: int, use_ref: bool = True, capacity: int = 64,
+                 spatial_index: bool = False):
         self.dim = int(dim)
         self.use_ref = bool(use_ref)
+        self.spatial_index = bool(spatial_index)
         self.stale = True  # needs a full load before first use
         self.loads = 0  # full host->device uploads (bootstrap + re-buckets)
         self.origin = np.zeros(self.dim, dtype=np.float64)
@@ -222,7 +234,7 @@ class BubbleFlat:
         self.LS, self.LSe, self.SS, self.SSe, self.N, a, over = _flat_insert(
             self.LS, self.LSe, self.SS, self.SSe, self.N, self.alive,
             jnp.asarray(Xc), jnp.asarray(valid), jnp.float32(cap),
-            _pow2(self._hi), self.use_ref,
+            _pow2(self._hi), self.use_ref, spatial=self.spatial_index,
         )
         slots = np.asarray(a)[:B]
         leaf_ids = self.leaf_of_slot[slots]

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ref as _ref
+
 DEFAULT_BN = 8
 
 # Mask value for visited candidates: above any real distance (pads sit at
@@ -91,7 +93,7 @@ def _bubble_cd_kernel(x_ref, y_ref, nb_ref, ext_ref, out_ref, *, bn, min_pts, di
 
     n_c = jnp.maximum(nb_c, 1.0)
     k_resid = jnp.clip(jnp.maximum(mp - before, 1.0), 0.0, n_c)
-    nnd = jnp.power(k_resid / n_c, 1.0 / float(dim)) * ext_c
+    nnd = _ref.dim_root(k_resid / n_c, dim) * ext_c
     out_ref[...] = dstar + nnd
 
 

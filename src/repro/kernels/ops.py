@@ -154,11 +154,50 @@ def core_distances(x, min_pts: int):
     return d[:, min(min_pts, x.shape[0]) - 1]
 
 
-def assign(x, reps, use_ref: bool | None = None, with_dist: bool = False):
+def _pow2_rows(n: int) -> int:
+    return max(8, 1 << (max(n - 1, 1)).bit_length())
+
+
+def assign(
+    x, reps, use_ref: bool | None = None, with_dist: bool = False,
+    spatial_index: bool = False, valid=None,
+):
     """Nearest-representative index per row; with ``with_dist=True`` also
     the euclidean distance to it (one fused pass — the serve plane's
-    query path wants both without a second gather)."""
+    query path wants both without a second gather).
+
+    ``spatial_index=True`` routes through the grid-pruned engine
+    (kernels.grid): index-exact against the dense path, sub-quadratic in
+    the rep count.  ``valid`` (spatial only) masks rep rows out of the
+    candidate set entirely — the dense path instead relies on dead rows
+    being parked far away (``_PAD_COORD``), so the two differ only for
+    queries outside the sane data envelope (see kernels/grid.py).
+    """
     x, reps = jnp.asarray(x), jnp.asarray(reps)
+    if spatial_index:
+        from repro.kernels.grid import build_grid, grid_assign
+
+        B, d = x.shape
+        L = reps.shape[0]
+        reps = reps.astype(jnp.float32)
+        if valid is None:
+            valid = jnp.ones((L,), bool)
+        Lp = _pow2_rows(L)
+        if Lp != L:
+            far = jnp.full((Lp - L, d), _PAD_COORD, dtype=jnp.float32)
+            reps = jnp.concatenate([reps, far], axis=0)
+            valid = jnp.concatenate([valid, jnp.zeros((Lp - L,), bool)])
+        Bp = _pow2_rows(B)
+        xq = _pad_rows(x.astype(jnp.float32), Bp)
+        g = build_grid(reps, valid)
+        idx, m = grid_assign(g, xq)
+        # no valid candidate at all (empty table) degrades to row L-1 so
+        # gathers stay in range; dense lands on a parked row there too
+        idx = jnp.minimum(idx[:B], L - 1)
+        if not with_dist:
+            return idx
+        xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+        return idx, jnp.sqrt(jnp.maximum(xx + m[:B], 0.0))
     if _resolve_ref(use_ref):
         return _ref.assign_with_dist(x, reps) if with_dist else _ref.assign(x, reps)
     n = x.shape[0]
@@ -188,10 +227,15 @@ def _bubble_cd(rep, n_b, extent, min_pts: int):
 _BCD_VMEM_LIMIT = 1 << 13
 
 
-def bubble_core_distances(rep, n_b, extent, min_pts: int, use_ref: bool | None = None):
+def bubble_core_distances(
+    rep, n_b, extent, min_pts: int, use_ref: bool | None = None,
+    spatial_index: bool = False,
+):
     """Eq. 6 bubble core distances: tiled Pallas strip kernel (blockwise
     over bubble rows, no L×L materialization) or the jnp sort+cumsum
-    reference under the backend switch."""
+    reference under the backend switch.  ``spatial_index=True`` instead
+    routes through the grid-pruned engine (kernels.grid) — bit-identical
+    to the jnp reference for power-of-two dims, sub-quadratic in L."""
     rep = jnp.asarray(rep)
     n_b = jnp.asarray(n_b)
     extent = jnp.asarray(extent)
@@ -206,6 +250,20 @@ def bubble_core_distances(rep, n_b, extent, min_pts: int, use_ref: bool | None =
         min_pts = max(1, min(int(min_pts), int(jnp.sum(n_b))))
     except jax.errors.ConcretizationTypeError:
         pass
+    if spatial_index:
+        from repro.kernels.grid import build_grid, grid_core_distances
+
+        Lp = _pow2_rows(L)
+        repp = rep.astype(jnp.float32)
+        nbp = n_b.astype(jnp.float32)
+        extp = extent.astype(jnp.float32)
+        if Lp != L:
+            far = jnp.full((Lp - L, d), _PAD_COORD, dtype=jnp.float32)
+            repp = jnp.concatenate([repp, far], axis=0)
+            nbp = _pad_rows(nbp, Lp)
+            extp = _pad_rows(extp, Lp)
+        g = build_grid(repp, jnp.arange(Lp) < L)
+        return grid_core_distances(g, nbp, extp, int(min_pts), d)[:L]
     if _resolve_ref(use_ref) or L > _BCD_VMEM_LIMIT:
         return _bubble_cd(rep, n_b, extent, min_pts)
     # shrink blocks toward tiny tables, floor at the f32 sublane count
@@ -227,15 +285,24 @@ def bubble_core_distances(rep, n_b, extent, min_pts: int, use_ref: bool | None =
     return cd[:L]
 
 
-def bubble_mutual_reachability(rep, n_b, extent, min_pts: int, use_ref: bool | None = None):
+def bubble_mutual_reachability(
+    rep, n_b, extent, min_pts: int, use_ref: bool | None = None,
+    spatial_index: bool = False,
+):
     """Offline phase: (L,L) bubble d_m matrix (Eqs. 6–7).
 
     Pallas path: the tiled Eq. 6 strip kernel feeds the fused
     mutual-reach tile kernel; jnp path: the sort+cumsum reference scan.
+    ``spatial_index=True`` computes the Eq. 6 core distances through the
+    grid-pruned engine (the matrix assembly itself is inherently dense);
+    the matrix then carries jnp-reference bits on both backends.
     """
     rep = jnp.asarray(rep)
     n_b = jnp.asarray(n_b)
     extent = jnp.asarray(extent)
+    if spatial_index:
+        cd = bubble_core_distances(rep, n_b, extent, min_pts, spatial_index=True)
+        return mutual_reachability(rep, rep, cd, cd, zero_diag=True, use_ref=True)
     cd = bubble_core_distances(rep, n_b, extent, min_pts, use_ref=use_ref)
     return mutual_reachability(rep, rep, cd, cd, zero_diag=True, use_ref=use_ref)
 
@@ -313,11 +380,15 @@ def bubble_table(LS, SS, N, ids):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("min_pts", "use_ref", "method", "allow_single")
+    jax.jit,
+    static_argnames=(
+        "min_pts", "use_ref", "method", "allow_single", "spatial", "with_w",
+    ),
 )
 def _offline_pipeline(
     rep, n_b, extent, n_valid, mcs, min_pts: int, use_ref: bool,
     method: str = "eom", allow_single: bool = False,
+    spatial: bool = False, with_w: bool = True,
 ):
     """Device-side offline pass over a size-bucketed bubble table, fused
     end to end under ONE jit: (Lp, Lp) mutual-reachability matrix (Eqs.
@@ -329,19 +400,35 @@ def _offline_pipeline(
     stage re-attaches them at PAD_DIST where they are invisible to
     stabilities and labels (core.hierarchy_jax docstring)."""
     from repro.core.hierarchy_jax import hierarchy_fixed
-    from repro.core.mst import boruvka_jax
+    from repro.core.mst import boruvka_grid_jax, boruvka_jax
 
-    W = bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=use_ref)
     iota = jnp.arange(rep.shape[0])
     is_pad = iota >= n_valid
-    W = jnp.where(is_pad[:, None] | is_pad[None, :], jnp.inf, W)
-    eu, ev, ew, valid = boruvka_jax(W)
+    out = {}
+    if spatial:
+        # grid-pruned sub-quadratic pass (kernels.grid): cd and the MST
+        # come from tile-pruned exact searches and carry jnp-reference
+        # bits on BOTH backends; the (Lp, Lp) matrix is only assembled
+        # when a caller asked for it (return_w) — skipping it is where
+        # the quadratic memory/compute goes away
+        from repro.kernels.grid import build_grid, grid_core_distances
+
+        grid = build_grid(rep, ~is_pad)
+        cd = grid_core_distances(grid, n_b, extent, min_pts, rep.shape[1])
+        eu, ev, ew, valid = boruvka_grid_jax(grid, cd)
+        if with_w:
+            W = mutual_reachability(rep, rep, cd, cd, zero_diag=True, use_ref=True)
+            out["W"] = jnp.where(is_pad[:, None] | is_pad[None, :], jnp.inf, W)
+    else:
+        W = bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=use_ref)
+        W = jnp.where(is_pad[:, None] | is_pad[None, :], jnp.inf, W)
+        eu, ev, ew, valid = boruvka_jax(W)
+        out["W"] = W
     slt, ct, ex = hierarchy_fixed(
         eu, ev, ew, valid, n_valid, n_b, mcs,
         method=method, allow_single_cluster=allow_single,
     )
-    return {
-        "W": W,
+    out.update({
         "eu": eu, "ev": ev, "ew": ew, "valid": valid,
         "labels": ex.labels,
         "stability": ex.stability,
@@ -353,7 +440,8 @@ def _offline_pipeline(
         "cluster_birth": ct.cluster_birth,
         "cluster_weight": ct.cluster_weight,
         "n_labels": ct.n_labels,
-    }
+    })
+    return out
 
 
 @dataclasses.dataclass
@@ -412,6 +500,7 @@ class OfflineClusterResult:
 def offline_recluster(
     LS, SS, N, ids, min_pts: int, min_cluster_size: float | None = None,
     use_ref: bool | None = None, return_w: bool = False,
+    spatial_index: bool = False,
 ):
     """Offline re-clustering over leaf CF buffers: `bubble_table` (f64
     host derivation, Eqs. 3–4) + `offline_recluster_from_table`.  Callers
@@ -421,7 +510,7 @@ def offline_recluster(
     rep, extent, Ng, _ = bubble_table(LS, SS, N, ids)
     return offline_recluster_from_table(
         rep, Ng, extent, min_pts, min_cluster_size=min_cluster_size,
-        use_ref=use_ref, return_w=return_w,
+        use_ref=use_ref, return_w=return_w, spatial_index=spatial_index,
     )
 
 
@@ -429,6 +518,7 @@ def offline_recluster_from_table(
     rep, n_b, extent, min_pts: int, min_cluster_size: float | None = None,
     use_ref: bool | None = None, return_w: bool = False,
     method: str = "eom", allow_single_cluster: bool = False,
+    spatial_index: bool = False,
 ):
     """The streaming engine's offline hot path, from a derived bubble table.
 
@@ -485,8 +575,12 @@ def offline_recluster_from_table(
         use,
         method,
         bool(allow_single_cluster),
+        spatial=bool(spatial_index),
+        # the spatial pass exists to NOT build the (Lp, Lp) matrix;
+        # only materialize it when the caller explicitly asked
+        with_w=(not spatial_index) or bool(return_w),
     )
-    W_dev = out.pop("W")
+    W_dev = out.pop("W", None)
     result = _unwrap_result(out, L, mcs, Ng)
     if return_w:
         return np.asarray(W_dev)[:L, :L], result
@@ -524,11 +618,12 @@ def _unwrap_result(out, L: int, mcs: float, weights: np.ndarray) -> OfflineClust
 
 
 @functools.partial(
-    jax.jit, static_argnames=("min_pts", "use_ref", "method", "allow_single")
+    jax.jit,
+    static_argnames=("min_pts", "use_ref", "method", "allow_single", "spatial"),
 )
 def _device_table_pipeline(
     LS, LSe, SS, SSe, N, alive, mcs, min_pts: int, use_ref: bool,
-    method: str = "eom", allow_single: bool = False,
+    method: str = "eom", allow_single: bool = False, spatial: bool = False,
 ):
     """Offline pass straight from a device-resident flat leaf-CF state
     (core.bubble_flat): compact the populated slots to rows 0..L-1
@@ -561,7 +656,8 @@ def _device_table_pipeline(
     extent = jnp.where(mask & (Ns > 1.0), extent, 0.0)
     nb = jnp.where(mask, Ns, 0.0)
     out = _offline_pipeline(
-        rep_c, nb, extent, n_valid, mcs, min_pts, use_ref, method, allow_single
+        rep_c, nb, extent, n_valid, mcs, min_pts, use_ref, method, allow_single,
+        spatial=spatial, with_w=not spatial,  # device path never returns W
     )
     out["rep"] = rep  # origin frame; host adds the f64 origin back
     out["nb"] = nb
@@ -574,6 +670,7 @@ def offline_recluster_from_device_table(
     LS, LSe, SS, SSe, N, alive, origin, min_pts: int,
     min_cluster_size: float | None = None, use_ref: bool | None = None,
     method: str = "eom", allow_single_cluster: bool = False,
+    spatial_index: bool = False,
 ):
     """Streaming-engine offline hot path over a `BubbleFlat` view.
 
@@ -597,9 +694,9 @@ def offline_recluster_from_device_table(
     out = _device_table_pipeline(
         LS, LSe, SS, SSe, N, alive,
         jnp.asarray(mcs, jnp.float32), int(min_pts), use,
-        method, bool(allow_single_cluster),
+        method, bool(allow_single_cluster), spatial=bool(spatial_index),
     )
-    out.pop("W")  # fused path never transfers the (Lp, Lp) matrix to host
+    out.pop("W", None)  # fused path never transfers the (Lp, Lp) matrix to host
     out = jax.device_get(out)
     L = int(out.pop("n_valid"))
     origin = np.asarray(origin, dtype=np.float64)
@@ -728,11 +825,17 @@ class ClusterBackend:
       * ``jnp``    — the pure-jnp reference path (CPU/GPU fallback; on TPU
         still XLA-compiled, just without the hand-tiled kernels),
       * ``auto``   — pallas on TPU, jnp elsewhere.
+
+    ``spatial_index=True`` additionally routes the three O(L²) hot
+    paths — Eq. 6 core distances, Borůvka candidate edges, and batched
+    assignment — through the grid-pruned exact engine (kernels.grid,
+    DESIGN.md §10).  The grid layer itself is backend-independent jnp;
+    the flag composes with either backend name.
     """
 
     _ALIASES = {"ref": "jnp", "cpu": "jnp", "tpu": "pallas"}
 
-    def __init__(self, name: str = "auto"):
+    def __init__(self, name: str = "auto", spatial_index: bool = False):
         name = self._ALIASES.get(name, name)
         if name == "auto":
             name = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -740,8 +843,11 @@ class ClusterBackend:
             raise ValueError(f"unknown backend {name!r} (want auto|pallas|jnp)")
         self.name = name
         self.use_ref = name == "jnp"
+        self.spatial_index = bool(spatial_index)
 
     def __repr__(self):
+        if self.spatial_index:
+            return f"ClusterBackend({self.name!r}, spatial_index=True)"
         return f"ClusterBackend({self.name!r})"
 
     def pairwise_sqdist(self, x, y):
@@ -750,17 +856,29 @@ class ClusterBackend:
     def knn(self, x, y, k: int):
         return knn(x, y, k, use_ref=self.use_ref)
 
-    def assign(self, x, reps):
-        return assign(x, reps, use_ref=self.use_ref)
+    def assign(self, x, reps, valid=None):
+        return assign(
+            x, reps, use_ref=self.use_ref,
+            spatial_index=self.spatial_index, valid=valid,
+        )
 
-    def assign_with_dist(self, x, reps):
-        return assign(x, reps, use_ref=self.use_ref, with_dist=True)
+    def assign_with_dist(self, x, reps, valid=None):
+        return assign(
+            x, reps, use_ref=self.use_ref, with_dist=True,
+            spatial_index=self.spatial_index, valid=valid,
+        )
 
     def bubble_core_distances(self, rep, n_b, extent, min_pts: int):
-        return bubble_core_distances(rep, n_b, extent, min_pts, use_ref=self.use_ref)
+        return bubble_core_distances(
+            rep, n_b, extent, min_pts, use_ref=self.use_ref,
+            spatial_index=self.spatial_index,
+        )
 
     def bubble_mutual_reachability(self, rep, n_b, extent, min_pts: int):
-        return bubble_mutual_reachability(rep, n_b, extent, min_pts, use_ref=self.use_ref)
+        return bubble_mutual_reachability(
+            rep, n_b, extent, min_pts, use_ref=self.use_ref,
+            spatial_index=self.spatial_index,
+        )
 
     def offline_recluster(
         self, LS, SS, N, ids, min_pts: int,
@@ -769,6 +887,7 @@ class ClusterBackend:
         return offline_recluster(
             LS, SS, N, ids, min_pts, min_cluster_size=min_cluster_size,
             use_ref=self.use_ref, return_w=return_w,
+            spatial_index=self.spatial_index,
         )
 
     def offline_recluster_from_table(
@@ -778,6 +897,7 @@ class ClusterBackend:
         return offline_recluster_from_table(
             rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
             use_ref=self.use_ref, return_w=return_w,
+            spatial_index=self.spatial_index,
         )
 
     def offline_recluster_from_device_table(
@@ -786,7 +906,8 @@ class ClusterBackend:
     ):
         return offline_recluster_from_device_table(
             LS, LSe, SS, SSe, N, alive, origin, min_pts,
-            min_cluster_size=min_cluster_size, use_ref=self.use_ref, **kw,
+            min_cluster_size=min_cluster_size, use_ref=self.use_ref,
+            spatial_index=self.spatial_index, **kw,
         )
 
     def make_flat(self, dim: int, capacity: int = 64):
@@ -795,7 +916,10 @@ class ClusterBackend:
         throughput path (DESIGN.md §8)."""
         from repro.core.bubble_flat import BubbleFlat
 
-        return BubbleFlat(dim, use_ref=self.use_ref, capacity=capacity)
+        return BubbleFlat(
+            dim, use_ref=self.use_ref, capacity=capacity,
+            spatial_index=self.spatial_index,
+        )
 
     def make_dynamic(self, min_pts: int, dim: int, capacity: int = 256, **kw):
         """Incremental-maintenance handle (core.dynamic_jax).  The
@@ -809,8 +933,8 @@ class ClusterBackend:
         return incremental_recluster(state, min_cluster_size, **kw)
 
 
-def get_backend(name: str = "auto") -> ClusterBackend:
-    return ClusterBackend(name)
+def get_backend(name: str = "auto", spatial_index: bool = False) -> ClusterBackend:
+    return ClusterBackend(name, spatial_index=spatial_index)
 
 
 def bubble_mutual_reachability_sharded(rep, n_b, extent, min_pts: int, mesh, axis: str = "data"):

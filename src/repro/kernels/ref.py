@@ -72,6 +72,23 @@ def assign_with_dist(x, reps):
     return idx, jnp.sqrt(jnp.maximum(xx + m, 0.0))
 
 
+def dim_root(x, dim):
+    """x**(1/dim) with context-stable rounding for power-of-two dims.
+
+    XLA's `pow` lowering is fusion-context sensitive on CPU: the same
+    `jnp.power(x, 0.5)` can compile to a correctly-rounded sqrt in one
+    program and a ~1e-5-rel exp/log approximation in another, so two
+    programs computing Eq. 6 disagree bitwise.  Repeated `sqrt` is
+    IEEE-correctly-rounded everywhere, making the dense and grid-pruned
+    core-distance paths bit-identical for dim ∈ {1, 2, 4, 8, 16, …}
+    (non-pow2 dims keep `pow` and only get allclose-level parity)."""
+    if dim >= 1 and (dim & (dim - 1)) == 0:
+        for _ in range(int(dim).bit_length() - 1):
+            x = jnp.sqrt(x)
+        return x
+    return jnp.power(x, 1.0 / float(dim))
+
+
 def bubble_core_distances(rep, n_b, extent, min_pts, dim):
     """Eq. 6 in pure jnp (vectorized over all bubbles)."""
     L = rep.shape[0]
@@ -89,7 +106,7 @@ def bubble_core_distances(rep, n_b, extent, min_pts, dim):
     C = order[rows, idx]
     nC = jnp.maximum(n_b.astype(jnp.float32)[C], 1.0)
     k_resid = jnp.clip(k_resid, 0.0, nC)
-    nnd = jnp.power(k_resid / nC, 1.0 / float(dim)) * extent.astype(jnp.float32)[C]
+    nnd = dim_root(k_resid / nC, dim) * extent.astype(jnp.float32)[C]
     return d_sorted[rows, idx] + nnd
 
 

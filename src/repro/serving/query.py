@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.kernels.grid import GridIndex, build_grid, grid_assign
 
 from .engine import HostBatcher
 
@@ -134,6 +135,27 @@ def _fused_query(xc, reps, labels, lam, lam_max, use_ref: bool):
     return idx, lbl, dist, strength
 
 
+@jax.jit
+def _fused_query_grid(xc, grid, labels, lam, lam_max):
+    """Spatial-index variant of `_fused_query`: the snapshot entry carries
+    a `GridIndex` built ONCE per version, so each batch only pays the
+    query-side Morton sort plus the tiles that can still beat the running
+    nearest.  Bit-exact vs the dense program (kernels.grid contract);
+    grid candidates exclude the L-bucket pad rows by construction, so the
+    caller's pad-hit guard is vestigial here."""
+    idx, m = grid_assign(grid, xc)
+    idx = jnp.minimum(idx, labels.shape[0] - 1)  # empty-grid belt-and-braces
+    xx = jnp.sum(xc * xc, axis=-1)
+    dist = jnp.sqrt(jnp.maximum(xx + m, 0.0))
+    lbl = labels[idx]
+    lam_b = lam[idx]
+    lam_c = jnp.maximum(lam_max[idx], _EPS)
+    lam_q = 1.0 / jnp.maximum(dist, _EPS)
+    strength = jnp.clip(jnp.minimum(lam_q, lam_b) / lam_c, 0.0, 1.0)
+    strength = jnp.where(lbl >= 0, strength, 0.0)
+    return idx, lbl, dist, strength
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceSnapshotEntry:
     """One snapshot version's device residency.  Immutable: swaps build
@@ -147,9 +169,10 @@ class DeviceSnapshotEntry:
     labels: jax.Array  # (Lp,) int32 flat labels, -1 noise/pad
     lam: jax.Array  # (Lp,) f32 per-bubble condensed-tree λ
     lam_max: jax.Array  # (Lp,) f32 λ_max of the bubble's cluster
+    grid: GridIndex | None = None  # spatial index over the L real rows
 
 
-def _build_entry(snap) -> DeviceSnapshotEntry:
+def _build_entry(snap, spatial: bool = False) -> DeviceSnapshotEntry:
     """Host-side O(L·d) derivation + ONE upload per published snapshot."""
     L = snap.n_bubbles
     d = int(snap.bubble_rep.shape[1])
@@ -181,15 +204,20 @@ def _build_entry(snap) -> DeviceSnapshotEntry:
         lmx = np.ones(L, dtype=np.float64)
         lmx[member] = np.maximum(acc[lbl[:L][member]], _EPS)
         lam_max[:L] = lmx
+    reps_dev = jnp.asarray(rep_c)
+    # grid amortization: ONE build per published version, shared by every
+    # query batch served against it (the whole point of entry residency)
+    grid = build_grid(reps_dev, jnp.arange(Lp) < L) if spatial else None
     return DeviceSnapshotEntry(
         version=int(snap.version),
         n_bubbles=L,
         bucket=Lp,
         center=np.asarray(snap.center, dtype=np.float64),
-        reps=jnp.asarray(rep_c),
+        reps=reps_dev,
         labels=jnp.asarray(lbl),
         lam=jnp.asarray(lam),
         lam_max=jnp.asarray(lam_max),
+        grid=grid,
     )
 
 
@@ -203,8 +231,9 @@ class SnapshotDeviceCache:
     of the previous snapshot don't rebuild it.
     """
 
-    def __init__(self, keep: int = 4):
+    def __init__(self, keep: int = 4, spatial: bool = False):
         self.keep = int(keep)
+        self.spatial = bool(spatial)
         self._entries: dict[int, DeviceSnapshotEntry] = {}
         self._order: list[int] = []
         self._lock = threading.Lock()
@@ -222,7 +251,7 @@ class SnapshotDeviceCache:
                 self._order.remove(v)
                 self._order.append(v)
                 return e
-        e = _build_entry(snap)  # outside the lock: O(L·d) + upload
+        e = _build_entry(snap, self.spatial)  # outside the lock: O(L·d) + upload
         with self._lock:
             cur = self._entries.get(v)
             if cur is not None:  # concurrent builder won the race
@@ -269,7 +298,9 @@ class QueryEngine:
     def __init__(self, backend, dim: int, cache_keep: int = 4):
         self.backend = backend
         self.dim = int(dim)
-        self.cache = SnapshotDeviceCache(keep=cache_keep)
+        self.cache = SnapshotDeviceCache(
+            keep=cache_keep, spatial=getattr(backend, "spatial_index", False)
+        )
 
     def query_detailed(self, snap, X) -> QueryResult:
         X = validate_query(X, self.dim)
@@ -284,10 +315,16 @@ class QueryEngine:
             Bp = _bucket(m)
             xc = np.zeros((Bp, self.dim), dtype=np.float32)
             xc[:m] = Xr - entry.center[None, :]
-            out = _fused_query(
-                jnp.asarray(xc), entry.reps, entry.labels, entry.lam,
-                entry.lam_max, self.backend.use_ref,
-            )
+            if entry.grid is not None:
+                out = _fused_query_grid(
+                    jnp.asarray(xc), entry.grid, entry.labels, entry.lam,
+                    entry.lam_max,
+                )
+            else:
+                out = _fused_query(
+                    jnp.asarray(xc), entry.reps, entry.labels, entry.lam,
+                    entry.lam_max, self.backend.use_ref,
+                )
             idx, lbl, dist, strength = (
                 a[:m].copy() for a in jax.device_get(out)  # ONE host sync
             )

@@ -225,6 +225,10 @@ class StreamingClusterEngine:
         the population changed since the last pass.
       max_block: scheduler block cap (requests coalesced per apply).
       backend: 'auto' | 'pallas' | 'jnp' — resolved once, see ops.get_backend.
+      spatial_index: route core distances, Borůvka candidate generation and
+        query/ingest assignment through the grid-pruned neighbor engine
+        (kernels.grid).  Bit-exact against the dense paths; opt-in because
+        the win only shows at serving-scale L.
       async_offline: run offline passes in a background thread; `query`
         keeps serving the previous snapshot meanwhile.
       device_assign: route the online point→leaf argmin through the kernel
@@ -261,6 +265,7 @@ class StreamingClusterEngine:
         epsilon: float = 0.1,
         max_block: int = 512,
         backend: str = "auto",
+        spatial_index: bool = False,
         async_offline: bool = False,
         min_offline_points: int = 32,
         device_assign: bool | None = None,
@@ -270,7 +275,7 @@ class StreamingClusterEngine:
         exact_capacity: int = 256,
         **tree_kw,
     ):
-        self.backend = ops.get_backend(backend)
+        self.backend = ops.get_backend(backend, spatial_index=spatial_index)
         if device_assign is None:
             device_assign = self.backend.name == "pallas"
         assign_fn = None

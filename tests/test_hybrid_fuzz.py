@@ -52,13 +52,24 @@ def _steps(use_ref: bool) -> int:
     return (110 if use_ref else 100) * FUZZ_SCALE
 
 
-@pytest.mark.parametrize("use_ref", [True, False], ids=["jnp", "pallas"])
+# the -grid leg opts the backend into the spatial index: exact mode
+# bypasses the offline summarizer, so what it exercises is the serve
+# plane — labels()/query() route point→rep assignment through
+# kernels.grid, which must stay index-exact under the full fuzz schedule
+CONFIGS = [
+    pytest.param(True, False, id="jnp"),
+    pytest.param(False, False, id="pallas"),
+    pytest.param(True, True, id="jnp-grid"),
+]
+
+
+@pytest.mark.parametrize("use_ref,spatial", CONFIGS)
 @pytest.mark.parametrize("seed", SEEDS)
-def test_interleaved_hybrid_stream_is_exact(seed, use_ref):
+def test_interleaved_hybrid_stream_is_exact(seed, use_ref, spatial):
     rng = np.random.default_rng(seed)
     eng = StreamingClusterEngine(
         dim=2, min_pts=MP, min_cluster_size=MCS,
-        backend="jnp" if use_ref else "pallas",
+        backend="jnp" if use_ref else "pallas", spatial_index=spatial,
         exact=True, exact_capacity=64, min_offline_points=10,
         update_policy=UpdatePolicy(max_update_frac=0.25, min_incremental_points=24),
     )
