@@ -15,7 +15,7 @@ test:
 	$(PYTHON) -m pytest $(PYTEST_FLAGS)
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig8,fig3_dynamic,fig5_query,fig7_pruned
+	$(PYTHON) -m benchmarks.run --only fig8,fig3_dynamic,fig5_query,fig7_pruned,fig9
 
 # CI perf gate: fresh smoke run (bench_out/ by default), compared against
 # the checked-in bench_results/ baselines (1.5x default; REPRO_BENCH_TOL=…).

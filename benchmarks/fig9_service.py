@@ -1,0 +1,212 @@
+"""Fig. 9 — multi-tenant service under a closed-loop open workload
+(ISSUE 7 tentpole).
+
+Drives the production serve plane the way a deployment would see it:
+``N`` tenants (independent streams, well-separated distributions) behind
+ONE `TenantRouter` — shared `QueryBatcher` dispatch loop, shared
+`SnapshotDeviceCache` — with one closed-loop query client per tenant
+issuing back-to-back batches while a background writer keeps ingesting
+blocks and publishing new snapshot versions (so cache builds, version
+swaps, and batch coalescing all happen *during* measurement, not in a
+warmed-up steady state).
+
+Reported per tenant and in aggregate: query p50/p99 latency and
+throughput, plus an isolation metric — worst-tenant p99 over
+best-tenant p99 (identical per-tenant load, so a fair scheduler keeps
+the ratio near 1; a tenant starved by the shared dispatch loop blows it
+up).  A second section times the recovery path itself: `save_all` and a
+cold-router `recover()` of the whole fleet, with a routed-query
+verification that the recovered fleet serves the same snapshot.
+
+`scripts/check_bench_regression.py` gates the aggregate p99 against an
+absolute SLO ceiling and the isolation ratio against a fairness
+ceiling; the CI bench-smoke job runs this via ``--only fig9``.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.serving import TenantRouter
+
+from .common import Timer, emit, save_json
+
+DIM = 8
+
+
+def _tenant_data(rng, i, n):
+    """Well-separated per-tenant blobs around a tenant-specific center."""
+    centers = rng.normal(size=(4, DIM)) * 2.0 + 12.0 * i
+    pick = rng.integers(0, 4, size=n)
+    return (centers[pick] + rng.normal(size=(n, DIM)) * 0.6).astype(np.float64)
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def run(
+    n_tenants: int = 8,
+    queries_per_client: int = 80,
+    batch: int = 16,
+    seed_points: int = 600,
+    ingest_block: int = 48,
+    seed: int = 0,
+):
+    rng = np.random.default_rng(seed)
+    root = tempfile.mkdtemp(prefix="fig9_ckpt_")
+    router = TenantRouter(
+        DIM,
+        backend="auto",
+        cache_keep=2 * n_tenants,
+        checkpoint_root=root,
+        min_pts=8,
+        compression=0.3,
+        min_offline_points=16,
+        epsilon=0.3,
+    )
+    names = [f"tenant{i:02d}" for i in range(n_tenants)]
+    data = {}
+    for i, name in enumerate(names):
+        router.create(name)
+        data[name] = _tenant_data(rng, i, seed_points + queries_per_client * batch)
+        router.ingest(name, data[name][:seed_points])
+    router.flush()  # every tenant has a published snapshot before t=0
+
+    # --- closed-loop open workload: one query client per tenant,
+    # one background writer mutating every tenant under the readers ---
+    lat = {name: [] for name in names}
+    errors: list[BaseException] = []
+    stop_writer = threading.Event()
+    start = threading.Barrier(n_tenants + 1, timeout=60)
+
+    def client(name: str, i: int):
+        qrng = np.random.default_rng(1000 + i)
+        X = data[name]
+        try:
+            start.wait()
+            for _ in range(queries_per_client):
+                q = X[qrng.integers(0, X.shape[0], size=batch)]
+                with Timer() as t:
+                    router.query(name, q)
+                lat[name].append(t.seconds)
+        except BaseException as e:  # noqa: BLE001 — re-raised in main
+            errors.append(e)
+
+    def writer():
+        cursor = seed_points
+        start.wait()
+        while not stop_writer.is_set():
+            for name in names:
+                X = data[name]
+                lo = cursor % (X.shape[0] - ingest_block)
+                router.ingest(name, X[lo : lo + ingest_block])
+                eng = router.engine(name)
+                eng.maybe_recluster()  # publish under load when ε trips
+                if stop_writer.is_set():
+                    return
+            cursor += ingest_block
+
+    threads = [
+        threading.Thread(target=client, args=(name, i))
+        for i, name in enumerate(names)
+    ]
+    wt = threading.Thread(target=writer)
+    for t in threads + [wt]:
+        t.start()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    stop_writer.set()
+    wt.join()
+    if errors:
+        raise errors[0]
+
+    per_tenant = {
+        name: {
+            "p50_ms": _pct(ls, 50) * 1e3,
+            "p99_ms": _pct(ls, 99) * 1e3,
+            "queries": len(ls),
+        }
+        for name, ls in lat.items()
+    }
+    all_lat = [x for ls in lat.values() for x in ls]
+    p99s = [v["p99_ms"] for v in per_tenant.values()]
+    service = {
+        "n_tenants": n_tenants,
+        "batch": batch,
+        "queries": len(all_lat),
+        "wall_s": wall,
+        "qps": len(all_lat) / wall,
+        "p50_ms": _pct(all_lat, 50) * 1e3,
+        "p99_ms": _pct(all_lat, 99) * 1e3,
+        "isolation_p99_ratio": max(p99s) / max(min(p99s), 1e-9),
+        "per_tenant": per_tenant,
+        "cache_builds": router.cache.builds,
+        "cache_hits": router.cache.hits,
+        "query_batches": router.batcher.batches,
+        "coalesced_per_batch": router.batcher.fanned_out
+        / max(router.batcher.batches, 1),
+    }
+    emit("fig9/service_p50", service["p50_ms"] / 1e3, f"{batch=} {n_tenants=}")
+    emit("fig9/service_p99", service["p99_ms"] / 1e3, f"qps={service['qps']:.0f}")
+    emit(
+        "fig9/isolation_p99_ratio",
+        0.0,
+        f"{service['isolation_p99_ratio']:.2f}x worst/best tenant",
+    )
+
+    # --- fleet recovery: save_all, then a cold router rebuilds it ---
+    with Timer() as t_save:
+        router.save_all()
+    probe = {name: data[name][:batch] for name in names}
+    want = {name: router.query(name, probe[name]) for name in names}
+    versions = {name: router.engine(name).snapshot.version for name in names}
+    router.close()
+    cold = TenantRouter(
+        DIM,
+        backend="auto",
+        cache_keep=2 * n_tenants,
+        checkpoint_root=root,
+        min_pts=8,
+        compression=0.3,
+        min_offline_points=16,
+        epsilon=0.3,
+    )
+    with Timer() as t_rec:
+        recovered = cold.recover()
+    verified = sorted(recovered) == sorted(names) and all(
+        cold.engine(n).snapshot.version == versions[n]
+        and np.array_equal(cold.query(n, probe[n]), want[n])
+        for n in names
+    )
+    recovery = {
+        "save_all_ms": t_save.seconds * 1e3,
+        "recover_ms": t_rec.seconds * 1e3,
+        "recover_ms_per_tenant": t_rec.seconds * 1e3 / n_tenants,
+        "verified_bitwise": bool(verified),
+    }
+    emit("fig9/save_all", t_save.seconds, f"{n_tenants} tenants")
+    emit(
+        "fig9/recover_fleet",
+        t_rec.seconds,
+        f"verified={'yes' if verified else 'NO'}",
+    )
+    cold.close()
+    shutil.rmtree(root, ignore_errors=True)
+    if not verified:
+        raise RuntimeError("recovered fleet did not serve the saved snapshots")
+
+    path = save_json("fig9_service", {"service": service, "recovery": recovery})
+    emit("fig9/saved", 0.0, path)
+    return service
+
+
+if __name__ == "__main__":
+    run()

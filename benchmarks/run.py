@@ -19,7 +19,7 @@ def main(argv=None):
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig7_pruned,fig8,kernels,roofline",
+        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig7_pruned,fig8,fig9,kernels,roofline",
     )
     ap.add_argument("--dryrun", default="dryrun_results.json")
     args = ap.parse_args(argv)
@@ -73,6 +73,10 @@ def main(argv=None):
         from . import fig8_streaming
 
         _guard(fig8_streaming.run, failures, "fig8")
+    if want("fig9"):
+        from . import fig9_service
+
+        _guard(fig9_service.run, failures, "fig9")
     if want("kernels"):
         from . import kernels_bench
 

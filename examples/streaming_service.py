@@ -8,13 +8,20 @@ queries cluster labels between offline passes:
   2. steady state: mixed insert/delete blocks arrive; the engine batches
      them, re-clustering only when ≥ ε of the mass changed;
   3. serving: every round, labels are read from the *cached* hierarchy —
-     queries never wait for ingestion or the offline pass.
+     queries never wait for ingestion or the offline pass;
+  4. kill-and-recover: the engine checkpoints its summary (checkpoint/
+     store.py — atomic publish, async writes), the process "dies", and a
+     fresh engine restores and keeps streaming bit-for-bit (DESIGN.md
+     §11) — replay cost is O(summary), never O(raw stream).
 
   PYTHONPATH=src python examples/streaming_service.py
 """
 
+import tempfile
+
 import numpy as np
 
+from repro.checkpoint import CheckpointStore
 from repro.core.metrics import nmi
 from repro.data.synthetic import gaussian_mixtures
 from repro.serving.stream import StreamingClusterEngine
@@ -76,6 +83,35 @@ def main():
               f"dirty={eng.tree.dirty_fraction():.2f} serving v{res.version} "
               f"({snap.n_clusters} clusters, {100 * served:.0f}% non-noise, "
               f"mean strength {strong:.2f})")
+
+    # -- 4. kill-and-recover round ------------------------------------------
+    # checkpoint the summary, "kill" the worker, restore into a fresh
+    # engine — it serves the last published snapshot immediately and the
+    # next blocks replay bitwise (pid allocation, ε accounting and the
+    # snapshot version all round-trip; tests/test_checkpoint_recovery.py
+    # pins this on both backends)
+    store = CheckpointStore(tempfile.mkdtemp(prefix="svc_ckpt_"), keep=2)
+    eng.join()  # example-ism: quiesce so old/new stay in version lockstep
+    step = eng.save(store)
+    pre_kill = eng.query(X[:200])
+    old_eng, eng = eng, StreamingClusterEngine(
+        dim=4, min_pts=15, compression=0.05, epsilon=0.15,
+        max_block=512, backend="jnp", async_offline=True,
+    )
+    eng.restore(store)
+    assert np.array_equal(eng.query(X[:200]), pre_kill)
+    print(f"[recover] restored step {step}: serving v{eng.snapshot.version} "
+          f"with {eng.tree.n_points} points, pre-kill labels reproduced")
+    blk_rows = rng.choice(2000, size=200, replace=False)  # stream continues
+    for e in (old_eng, eng):
+        pids = e.ingest(X[blk_rows])
+        e.flush()
+    row_of.update({pid: int(row) for pid, row in zip(pids, blk_rows)})
+    p_old, l_old = old_eng.labels()
+    p_new, l_new = eng.labels()
+    assert np.array_equal(p_old, p_new) and np.array_equal(l_old, l_new)
+    print(f"[recover] post-restore block replays bitwise "
+          f"(v{eng.snapshot.version}, {eng.tree.n_points} points)")
 
     # -- final: drain + force a last pass, score against ground truth -------
     snap = eng.flush()

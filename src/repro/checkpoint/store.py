@@ -71,14 +71,25 @@ def restore(path: str, step: int | None = None, like=None, shardings=None):
         store.close()
 
 
+def _published_steps(path: str) -> list[int]:
+    """Step numbers of PUBLISHED checkpoint dirs only: a bare ``step_N``
+    name, fully numeric.  In-flight ``step_N.tmp-<pid>`` and doomed
+    ``step_N.old-<pid>`` dirs (a writer killed mid-publish leaves either
+    behind) are never surfaced to readers."""
+    steps = []
+    for d in os.listdir(path):
+        if not d.startswith("step_"):
+            continue
+        suffix = d.split("_", 1)[1]
+        if suffix.isdigit():
+            steps.append(int(suffix))
+    return steps
+
+
 def latest_step(path: str) -> int | None:
     if not os.path.isdir(path):
         return None
-    steps = [
-        int(d.split("_", 1)[1])
-        for d in os.listdir(path)
-        if d.startswith("step_") and not d.endswith(".tmp") and "tmp-" not in d
-    ]
+    steps = _published_steps(path)
     return max(steps) if steps else None
 
 
@@ -87,33 +98,62 @@ class CheckpointStore:
         self.path = path
         self.keep = keep
         os.makedirs(path, exist_ok=True)
+        self._recover_aside()
         self._q: queue.Queue = queue.Queue()
         self._err: Exception | None = None
+        # one writer on disk at a time: blocking saves from the caller
+        # thread must not interleave with the async writer's publish
+        # sequence (the .old swap window in _write assumes exclusivity)
+        self._disk_lock = threading.Lock()
         self._thread = threading.Thread(target=self._writer, daemon=True)
         self._thread.start()
 
     # -- write ------------------------------------------------------------
 
     def save(self, step: int, tree, *, blocking: bool = True):
-        """Snapshot to host memory synchronously, write to disk (a)sync."""
+        """Snapshot to host memory synchronously, write to disk (a)sync.
+
+        A failed async write latches its exception; the NEXT `save()` (as
+        well as `wait()`/`close()`) re-raises it instead of silently
+        queueing more work on top of a broken store."""
+        self._raise_latched()
         flat, _ = _flatten(tree)
         host = {k: np.asarray(v) for k, v in flat.items()}  # device->host sync point
         if blocking:
-            self._write(step, host)
+            with self._disk_lock:
+                self._write(step, host)
         else:
             self._q.put((step, host))
 
+    def _raise_latched(self):
+        if self._err is not None:
+            raise RuntimeError(
+                f"checkpoint writer failed under {self.path}"
+            ) from self._err
+
     def wait(self):
         self._q.join()
-        if self._err:
-            raise self._err
+        self._raise_latched()
 
     def close(self):
         self._q.join()
         self._q.put(None)
         self._thread.join(timeout=30)
-        if self._err:
-            raise self._err
+        self._raise_latched()
+
+    def _recover_aside(self):
+        """A writer killed between "rename old aside" and "publish new"
+        leaves ``step_N.old-<pid>`` with NO published ``step_N``: that
+        aside is the only surviving copy of the step.  Rename it back
+        into place before anything (like `_gc`) can sweep it — the
+        crash rolls back to the previous good checkpoint instead of
+        losing the step entirely."""
+        for d in sorted(os.listdir(self.path)):
+            tag = d.split(".", 1)
+            if len(tag) == 2 and tag[1].startswith("old-"):
+                final = os.path.join(self.path, tag[0])
+                if not os.path.exists(final):
+                    os.rename(os.path.join(self.path, d), final)
 
     def _writer(self):
         while True:
@@ -123,9 +163,11 @@ class CheckpointStore:
                 return
             step, host = item
             try:
-                self._write(step, host)
-            except Exception as e:  # surfaced on wait()/close()
-                self._err = e
+                with self._disk_lock:
+                    self._write(step, host)
+            except Exception as e:  # surfaced on the next save()/wait()/close()
+                if self._err is None:  # keep the FIRST failure — a cascade
+                    self._err = e  # of follow-ups must not mask the cause
             finally:
                 self._q.task_done()
 
@@ -150,19 +192,39 @@ class CheckpointStore:
             }
         with open(os.path.join(tmp, "index.json"), "w") as f:
             json.dump(index, f)
+        # Overwrite protocol: the previous copy of this step must survive
+        # until the new one is published.  rmtree(final) → rename(tmp)
+        # had a crash window in the gap where NO copy of the step existed
+        # — rename the old dir ASIDE first, publish, then delete it.  A
+        # crash now leaves either (old published) or (new published +
+        # doomed .old-<pid> junk the next _gc sweeps).
+        doomed = None
         if os.path.exists(final):
-            shutil.rmtree(final)
+            doomed = final + f".old-{os.getpid()}"
+            if os.path.exists(doomed):  # leftover from a previous crash
+                shutil.rmtree(doomed)
+            os.rename(final, doomed)
         os.rename(tmp, final)  # atomic publish
+        if doomed is not None:
+            shutil.rmtree(doomed)
         self._gc()
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_", 1)[1])
-            for d in os.listdir(self.path)
-            if d.startswith("step_") and "tmp-" not in d
-        )
+        steps = sorted(_published_steps(self.path))
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.path, f"step_{s}"), ignore_errors=True)
+        # stale in-flight/doomed dirs from a KILLED writer (ours are
+        # cleaned inline under _disk_lock): step_N.tmp-<pid> never
+        # published, step_N.old-<pid> already replaced — both invisible
+        # to readers (see _published_steps), both junk
+        for d in os.listdir(self.path):
+            if not d.startswith("step_"):
+                continue
+            tag = d.split(".", 1)
+            if len(tag) == 2 and (
+                tag[1].startswith("tmp-") or tag[1].startswith("old-")
+            ):
+                shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)
 
     # -- read -------------------------------------------------------------
 
@@ -192,6 +254,9 @@ class CheckpointStore:
         if missing:
             raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}…")
         flat_sh, _ = _flatten(shardings) if shardings is not None else ({}, None)
+        # `leaves` is built by iterating flat_like in order, so it IS the
+        # unflatten order already (the old `list(flat_like).index(k)`
+        # re-ordering pass was an O(n²) no-op)
         leaves = []
         for key in flat_like:
             arr = by_key[key]
@@ -200,7 +265,6 @@ class CheckpointStore:
                 arr = np.asarray(jax.numpy.asarray(arr).astype(ref.dtype))
             sh = flat_sh.get(key)
             leaves.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
-        ordered = [leaves[list(flat_like).index(k)] for k in flat_like]
         return step, jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(like), ordered
+            jax.tree_util.tree_structure(like), leaves
         )

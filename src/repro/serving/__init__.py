@@ -1,6 +1,7 @@
 from .engine import HostBatcher, Request, ServeEngine
 from .query import QueryBatcher, QueryEngine, QueryResult, SnapshotDeviceCache
 from .stream import ClusterSnapshot, StalenessPolicy, StreamingClusterEngine, Ticket
+from .tenants import TenantRouter
 
 __all__ = [
     "HostBatcher",
@@ -13,5 +14,6 @@ __all__ = [
     "SnapshotDeviceCache",
     "StalenessPolicy",
     "StreamingClusterEngine",
+    "TenantRouter",
     "Ticket",
 ]

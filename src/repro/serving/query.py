@@ -227,41 +227,67 @@ class SnapshotDeviceCache:
     Readers racing a snapshot swap stay consistent: whichever snapshot
     object a reader captured, `entry()` hands back (or builds) the entry
     for exactly that version, and the arrays inside are immutable.  A
-    small LRU keeps the last few versions resident so in-flight readers
-    of the previous snapshot don't rebuild it.
+    small LRU (on ACCESS, not insertion — a version still being actively
+    served must outlive ``keep`` newer publishes) keeps recent versions
+    resident so in-flight readers of the previous snapshot don't rebuild.
+
+    Builds are **single-flight** per key: the first caller of a fresh
+    version builds the entry (O(L·d) derivation + device upload) while
+    every racer blocks on that build's event and reuses the result —
+    N readers racing a publish cost ONE build, not N.  A failed build
+    releases the key so the next caller retries rather than inheriting a
+    poisoned entry.
+
+    ``key`` scopes entries for shared use: the multi-tenant router passes
+    ``(tenant, version)`` so independent engines can pool ONE cache (and
+    one device-memory budget) without their version counters colliding.
     """
 
     def __init__(self, keep: int = 4, spatial: bool = False):
         self.keep = int(keep)
         self.spatial = bool(spatial)
-        self._entries: dict[int, DeviceSnapshotEntry] = {}
-        self._order: list[int] = []
+        self._entries: dict = {}
+        self._order: list = []
+        self._building: dict = {}  # key -> Event of the in-flight build
         self._lock = threading.Lock()
         self.hits = 0
         self.builds = 0
 
-    def entry(self, snap) -> DeviceSnapshotEntry:
-        v = int(snap.version)
+    def entry(self, snap, key=None) -> DeviceSnapshotEntry:
+        k = int(snap.version) if key is None else key
+        while True:
+            with self._lock:
+                e = self._entries.get(k)
+                if e is not None:
+                    self.hits += 1
+                    # refresh recency: a reader pinned to an old version
+                    # must not lose its entry to newer publishes it outlived
+                    self._order.remove(k)
+                    self._order.append(k)
+                    return e
+                ev = self._building.get(k)
+                if ev is None:  # we are the builder
+                    ev = threading.Event()
+                    self._building[k] = ev
+                    break
+            # single-flight follower: wait for the builder, then re-check
+            # (entry installed, or the build failed and the key is free)
+            ev.wait()
+        try:
+            e = _build_entry(snap, self.spatial)  # unlocked: O(L·d) + upload
+        except BaseException:
+            with self._lock:
+                del self._building[k]
+            ev.set()  # wake followers so they observe the failure/retry
+            raise
         with self._lock:
-            e = self._entries.get(v)
-            if e is not None:
-                self.hits += 1
-                # refresh recency: a reader pinned to an old version must
-                # not lose its entry to newer publishes it outlived
-                self._order.remove(v)
-                self._order.append(v)
-                return e
-        e = _build_entry(snap, self.spatial)  # outside the lock: O(L·d) + upload
-        with self._lock:
-            cur = self._entries.get(v)
-            if cur is not None:  # concurrent builder won the race
-                self.hits += 1
-                return cur
-            self._entries[v] = e
-            self._order.append(v)
+            self._entries[k] = e
+            self._order.append(k)
             self.builds += 1
+            del self._building[k]
             while len(self._order) > self.keep:
                 self._entries.pop(self._order.pop(0), None)
+        ev.set()
         return e
 
 
@@ -295,19 +321,29 @@ class QueryEngine:
     whichever snapshot object it captured, so labels, representatives,
     and λ arrays always come from that ONE snapshot."""
 
-    def __init__(self, backend, dim: int, cache_keep: int = 4):
+    def __init__(self, backend, dim: int, cache_keep: int = 4, *,
+                 cache: SnapshotDeviceCache | None = None, scope=None):
+        """``cache``/``scope`` support multi-tenant pooling: tenants share
+        ONE SnapshotDeviceCache (one LRU budget, one set of L-bucket
+        compile shapes) with entries keyed ``(scope, version)`` so their
+        independent version counters never collide."""
         self.backend = backend
         self.dim = int(dim)
-        self.cache = SnapshotDeviceCache(
+        self.scope = scope
+        self.cache = cache if cache is not None else SnapshotDeviceCache(
             keep=cache_keep, spatial=getattr(backend, "spatial_index", False)
         )
+
+    def _cache_key(self, version: int):
+        v = int(version)
+        return v if self.scope is None else (self.scope, v)
 
     def query_detailed(self, snap, X) -> QueryResult:
         X = validate_query(X, self.dim)
         n = X.shape[0]
         if snap is None or snap.n_bubbles == 0 or n == 0:
             return _empty_result(n, 0 if snap is None else snap.version)
-        entry = self.cache.entry(snap)
+        entry = self.cache.entry(snap, key=self._cache_key(snap.version))
         parts = []
         for c0 in range(0, n, _MAX_CHUNK):
             Xr = X[c0 : c0 + _MAX_CHUNK]
@@ -399,27 +435,53 @@ class QueryBatcher:
     the slices back out by ticket.  Followers wait on their ticket and
     periodically re-contend for the lock, so a request pushed in the
     gap after the leader's last drain never strands.
+
+    **Leader-death contract**: a caller whose acquire won the dispatch
+    lock is executing OTHER callers' requests.  ANY failure while it
+    holds a drained block — the fused call raising on a poisoned batch,
+    the concatenation, a malformed result — fans the exception out to
+    every ticket in that block and re-raises at each ticket's caller;
+    followers must never spin forever on a ticket their dead leader
+    popped from the queue.
+
+    **Multi-tenant dispatch** (serving.tenants): one batcher can front
+    many engines — requests are tagged with a ``kind`` (the tenant name)
+    and ``resolve(kind)`` maps each drained block to its engine.
+    HostBatcher only coalesces contiguous SAME-kind runs, so a block
+    never mixes tenants and each still rides one fused device call.
     """
 
-    def __init__(self, engine, max_batch: int = 1024, poll_s: float = 0.002):
+    def __init__(self, engine=None, max_batch: int = 1024,
+                 poll_s: float = 0.002, resolve=None):
+        if engine is None and resolve is None:
+            raise ValueError("QueryBatcher needs an engine or a resolve(kind)")
         self.engine = engine  # StreamingClusterEngine (or anything with
         self.poll_s = float(poll_s)  # .query_detailed and ._query_engine)
+        self._resolve = resolve if resolve is not None else (lambda kind: self.engine)
         self._q = HostBatcher(max_block=int(max_batch))
         self._dispatch = threading.Lock()
         self.batches = 0
         self.fanned_out = 0
 
-    def query_detailed(self, X) -> QueryResult:
+    def query_detailed(self, X, *, kind: str = "query") -> QueryResult:
+        eng = self._resolve(kind)
         # validate in the CALLER so bad input raises here, not in a peer
-        X = validate_query(X, self.engine._query_engine.dim)
+        X = validate_query(X, eng._query_engine.dim)
         if X.shape[0] == 0:
-            return self.engine.query_detailed(X)
+            return eng.query_detailed(X)
         t = _QueryTicket()
-        self._q.push((X, t), kind="query")
+        self._q.push((X, t), kind=kind)
         while True:
             if self._dispatch.acquire(blocking=False):
                 try:
                     self._drain(own=t)
+                except BaseException as e:  # noqa: BLE001 — leader died
+                    # outside any block's fan-out (e.g. next_block itself):
+                    # surface on our own ticket rather than escaping with
+                    # the ticket still pending
+                    if not t.event.is_set():
+                        t.error = e
+                        t.event.set()
                 finally:
                     self._dispatch.release()
             if t.event.wait(self.poll_s):
@@ -428,8 +490,8 @@ class QueryBatcher:
             raise t.error
         return t.result
 
-    def query(self, X) -> np.ndarray:
-        return self.query_detailed(X).labels
+    def query(self, X, *, kind: str = "query") -> np.ndarray:
+        return self.query_detailed(X, kind=kind).labels
 
     def _drain(self, own: _QueryTicket | None = None):
         """Service pending blocks; a leader caller stops once its OWN
@@ -437,27 +499,44 @@ class QueryBatcher:
         pushers' acquire loops), so one unlucky caller never turns into
         a dedicated server thread with unbounded latency."""
         while self._q and not (own is not None and own.event.is_set()):
-            _, items = self._q.next_block(size=lambda it: it[0].shape[0])
-            X = np.concatenate([x for x, _ in items], axis=0)
+            kind, items = self._q.next_block(size=lambda it: it[0].shape[0])
             try:
-                res = self.engine.query_detailed(X)
+                # EVERYTHING between popping the block and completing its
+                # tickets runs under the fan-out guard: once items left
+                # the queue, this leader is the only thread that can ever
+                # complete them
+                eng = self._resolve(kind)
+                X = np.concatenate([x for x, _ in items], axis=0)
+                res = eng.query_detailed(X)
+                if len(res) != X.shape[0]:
+                    raise RuntimeError(
+                        f"batched query returned {len(res)} rows "
+                        f"for {X.shape[0]} requests"
+                    )
+                out = []
+                off = 0
+                for x, _ in items:
+                    sl = slice(off, off + x.shape[0])
+                    out.append(
+                        QueryResult(
+                            labels=res.labels[sl],
+                            bubble_index=res.bubble_index[sl],
+                            distance=res.distance[sl],
+                            strength=res.strength[sl],
+                            version=res.version,
+                        )
+                    )
+                    off += x.shape[0]
             except BaseException as e:  # noqa: BLE001 — fanned out, not handled
                 for _, t in items:
-                    t.error = e
-                    t.event.set()
+                    if not t.event.is_set():
+                        t.error = e
+                        t.event.set()
                 continue
-            off = 0
-            for x, t in items:
-                k = x.shape[0]
-                sl = slice(off, off + k)
-                t.result = QueryResult(
-                    labels=res.labels[sl],
-                    bubble_index=res.bubble_index[sl],
-                    distance=res.distance[sl],
-                    strength=res.strength[sl],
-                    version=res.version,
-                )
-                off += k
+            # fan out only after EVERY slice exists — a mid-loop failure
+            # above must poison the whole block, not complete half of it
+            for (_, t), r in zip(items, out):
+                t.result = r
                 t.event.set()
             self.batches += 1
             self.fanned_out += len(items)

@@ -252,6 +252,10 @@ class StreamingClusterEngine:
         store).  Sync-only.
       update_policy: incremental-vs-full routing (exact mode only).
       exact_capacity: initial slot-capacity bucket of the dynamic state.
+      query_cache: a shared `SnapshotDeviceCache` (multi-tenant pooling,
+        serving.tenants); None = a private per-engine cache.
+      query_scope: cache-key scope tag used with ``query_cache`` so
+        independent engines' version counters never collide.
       **tree_kw: forwarded to BubbleTree.
     """
 
@@ -273,6 +277,8 @@ class StreamingClusterEngine:
         exact: bool = False,
         update_policy: UpdatePolicy | None = None,
         exact_capacity: int = 256,
+        query_cache=None,
+        query_scope=None,
         **tree_kw,
     ):
         self.backend = ops.get_backend(backend, spatial_index=spatial_index)
@@ -326,8 +332,12 @@ class StreamingClusterEngine:
             )
         # serve plane: versioned device cache + fused query program
         # (serving.query); labels() memoizes per-pid labels keyed on
-        # (snapshot version, tree mutation counter)
-        self._query_engine = QueryEngine(self.backend, dim)
+        # (snapshot version, tree mutation counter).  query_cache/scope
+        # let a TenantRouter pool ONE device cache across engines with
+        # (tenant, version) keys (serving.tenants).
+        self._query_engine = QueryEngine(
+            self.backend, dim, cache=query_cache, scope=query_scope
+        )
         self._labels_cache: tuple | None = None
         self.stats = {
             "inserts": 0,
@@ -769,6 +779,260 @@ class StreamingClusterEngine:
             self._offline_thread = None
         self._settle()
         self._raise_pending_offline_error()
+
+    # -- checkpointing (DESIGN.md §11: snapshot shipping & recovery) -------
+
+    _CKPT_FORMAT = 1
+
+    def _ragged_pack(self, lists):
+        """list-of-int-lists → (flat, offsets) int64 arrays (CSR)."""
+        off = np.zeros(len(lists) + 1, dtype=np.int64)
+        for i, xs in enumerate(lists):
+            off[i + 1] = off[i] + len(xs)
+        flat = np.fromiter(
+            (p for xs in lists for p in xs), dtype=np.int64, count=int(off[-1])
+        )
+        return flat, off
+
+    @staticmethod
+    def _ragged_unpack(flat, off):
+        return [flat[off[i] : off[i + 1]].tolist() for i in range(len(off) - 1)]
+
+    def checkpoint_state(self) -> dict:
+        """The engine's durable state as one flat dict of host arrays —
+        the Bubble-tree summary IS the durable state (paper's online–
+        offline split), so this is O(summary), never O(raw stream).
+
+        Captured: the full tree (CF SoA, topology, point store, free
+        lists — free-list ORDER included, so pid allocation replays
+        bit-for-bit), the ε/dirty-mass accounting, the flat device table
+        (device_online — origin, slot order and Kahan compensations, so
+        post-restore ε-passes reproduce the same bits), and the last
+        PUBLISHED `ClusterSnapshot`.  Not captured: an in-flight async
+        pass (recovery replays to the last published version; the lost
+        pass re-triggers off the preserved dirty mass), the exact-mode
+        dynamic MST state (rebuilt from the tree at the next refresh),
+        queued-but-unapplied requests, and observability counters.
+
+        Call from the ingest thread (the tree's single writer), same as
+        `poll()`."""
+        t = self.tree
+        cap = t.LS.shape[0]
+        ch_flat, ch_off = self._ragged_pack(t.children[:cap])
+        lp_flat, lp_off = self._ragged_pack(t.leaf_points[:cap])
+        state = {
+            "cfg/format": np.int64(self._CKPT_FORMAT),
+            "cfg/dim": np.int64(t.dim),
+            "cfg/min_pts": np.int64(self.min_pts),
+            "cfg/min_cluster_size": np.float64(self.min_cluster_size),
+            "cfg/compression": np.float64(t.compression),
+            "cfg/epsilon": np.float64(self.policy.epsilon),
+            "cfg/exact": np.bool_(self.exact),
+            "cfg/device_online": np.bool_(self._flat is not None),
+            "tree/LS": t.LS.copy(),
+            "tree/SS": t.SS.copy(),
+            "tree/N": t.N.copy(),
+            "tree/parent": t.parent.copy(),
+            "tree/height": t.height.copy(),
+            "tree/node_alive": t.node_alive.copy(),
+            "tree/is_leaf": t.is_leaf.copy(),
+            "tree/children_flat": ch_flat,
+            "tree/children_off": ch_off,
+            "tree/leaf_points_flat": lp_flat,
+            "tree/leaf_points_off": lp_off,
+            "tree/node_free": np.asarray(t._node_free, dtype=np.int64),
+            "tree/PX": t.PX.copy(),
+            "tree/point_alive": t.point_alive.copy(),
+            "tree/point_leaf": t.point_leaf.copy(),
+            "tree/point_free": np.asarray(t._point_free, dtype=np.int64),
+            "tree/struct_dirty": np.asarray(sorted(t._struct_dirty), dtype=np.int64),
+            "tree/root": np.int64(t.root),
+            "tree/n_points": np.int64(t.n_points),
+            "tree/dirty_mass": np.float64(t.dirty_mass),
+            "tree/mutations": np.int64(t.mutations),
+            "tree/op_count": np.int64(t._op_count),
+            "eng/version": np.int64(self._version),
+            "eng/settled_version": np.int64(self._settled_version),
+        }
+        snap = self.snapshot
+        state["snap/has"] = np.bool_(snap is not None)
+        if snap is not None:
+            state.update(
+                {
+                    "snap/version": np.int64(snap.version),
+                    "snap/n_points": np.int64(snap.n_points),
+                    "snap/bubble_rep": np.asarray(snap.bubble_rep),
+                    "snap/bubble_n": np.asarray(snap.bubble_n),
+                    "snap/center": np.asarray(snap.center),
+                    "snap/wall_seconds": np.float64(snap.wall_seconds),
+                    "snap/dirty_consumed": np.float64(snap.dirty_consumed),
+                    "snap/mst_u": np.asarray(snap.mst[0]),
+                    "snap/mst_v": np.asarray(snap.mst[1]),
+                    "snap/mst_w": np.asarray(snap.mst[2]),
+                }
+            )
+            res = snap.result
+            for f in (
+                "labels", "stabilities", "weights", "point_parent",
+                "point_lambda", "cluster_parent", "cluster_birth",
+                "cluster_weight", "selected", "all_stabilities",
+            ):
+                state[f"snap/res_{f}"] = np.asarray(getattr(res, f))
+            state["snap/res_min_cluster_size"] = np.float64(res.min_cluster_size)
+        flat_live = self._flat is not None and not self._flat.stale
+        state["flat/has"] = np.bool_(flat_live)
+        if flat_live:
+            f = self._flat
+            state.update(
+                {
+                    "flat/LS": np.asarray(f.LS),
+                    "flat/LSe": np.asarray(f.LSe),
+                    "flat/SS": np.asarray(f.SS),
+                    "flat/SSe": np.asarray(f.SSe),
+                    "flat/N": np.asarray(f.N),
+                    "flat/alive": np.asarray(f.alive),
+                    "flat/origin": f.origin.copy(),
+                    "flat/leaf_of_slot": f.leaf_of_slot.copy(),
+                    "flat/free": np.asarray(f._free, dtype=np.int64),
+                    "flat/hi": np.int64(f._hi),
+                    "flat/loads": np.int64(f.loads),
+                }
+            )
+        return state
+
+    def save(self, store, step: int | None = None, *, blocking: bool = True):
+        """Checkpoint through a `repro.checkpoint.CheckpointStore` (atomic
+        publish + async writes + retention).  ``step`` defaults to the
+        tree's monotonic mutation counter, so successive saves of a live
+        stream land under distinct, ordered step ids.  Returns the step."""
+        if step is None:
+            step = int(self.tree.mutations)
+        store.save(step, self.checkpoint_state(), blocking=blocking)
+        return step
+
+    def restore(self, store, step: int | None = None) -> int:
+        """Load a checkpoint written by `save()` into THIS engine (built
+        with a compatible constructor config) — the killed-worker
+        recovery path: the summary, accounting, and last published
+        snapshot replay, so serving resumes at that version and the
+        stream continues bit-for-bit where the checkpoint left it.
+        Returns the restored step."""
+        step, d = store.restore(step=step)
+        if int(d["cfg/format"]) != self._CKPT_FORMAT:
+            raise ValueError(f"unknown checkpoint format {int(d['cfg/format'])}")
+        if int(d["cfg/dim"]) != self.tree.dim:
+            raise ValueError(
+                f"checkpoint dim {int(d['cfg/dim'])} != engine dim {self.tree.dim}"
+            )
+        for key, mine in (
+            ("cfg/exact", self.exact),
+            ("cfg/device_online", self._flat is not None),
+        ):
+            if bool(d[key]) != bool(mine):
+                raise ValueError(
+                    f"checkpoint {key}={bool(d[key])} does not match this "
+                    f"engine ({bool(mine)}) — construct the replacement "
+                    f"worker with the same mode"
+                )
+        if self.batcher:
+            raise RuntimeError("restore() into an engine with queued requests")
+        t = self.tree
+        cap = int(d["tree/LS"].shape[0])
+        t.LS = np.array(d["tree/LS"], dtype=np.float64)
+        t.SS = np.array(d["tree/SS"], dtype=np.float64)
+        t.N = np.array(d["tree/N"], dtype=np.float64)
+        t.parent = np.array(d["tree/parent"], dtype=np.int64)
+        t.height = np.array(d["tree/height"], dtype=np.int64)
+        t.node_alive = np.array(d["tree/node_alive"], dtype=bool)
+        t.is_leaf = np.array(d["tree/is_leaf"], dtype=bool)
+        t.children = self._ragged_unpack(d["tree/children_flat"], d["tree/children_off"])
+        t.leaf_points = self._ragged_unpack(
+            d["tree/leaf_points_flat"], d["tree/leaf_points_off"]
+        )
+        assert len(t.children) == cap and len(t.leaf_points) == cap
+        t._node_free = d["tree/node_free"].astype(int).tolist()
+        t.PX = np.array(d["tree/PX"], dtype=np.float64)
+        t.point_alive = np.array(d["tree/point_alive"], dtype=bool)
+        t.point_leaf = np.array(d["tree/point_leaf"], dtype=np.int64)
+        t._point_free = d["tree/point_free"].astype(int).tolist()
+        t._struct_dirty = set(d["tree/struct_dirty"].astype(int).tolist())
+        t.root = int(d["tree/root"])
+        t.n_points = int(d["tree/n_points"])
+        t.dirty_mass = float(d["tree/dirty_mass"])
+        t.mutations = int(d["tree/mutations"])
+        t._op_count = int(d["tree/op_count"])
+        self._version = int(d["eng/version"])
+        self._settled_version = int(d["eng/settled_version"])
+        self._inflight_consumed = 0.0
+        self._offline_thread = None
+        self._offline_error = None
+        self._labels_cache = None
+        snap = None
+        if bool(d["snap/has"]):
+            res = ops.OfflineClusterResult(
+                labels=d["snap/res_labels"],
+                stabilities=d["snap/res_stabilities"],
+                mst=(d["snap/mst_u"], d["snap/mst_v"], d["snap/mst_w"]),
+                weights=d["snap/res_weights"],
+                min_cluster_size=float(d["snap/res_min_cluster_size"]),
+                point_parent=d["snap/res_point_parent"],
+                point_lambda=d["snap/res_point_lambda"],
+                cluster_parent=d["snap/res_cluster_parent"],
+                cluster_birth=d["snap/res_cluster_birth"],
+                cluster_weight=d["snap/res_cluster_weight"],
+                selected=d["snap/res_selected"],
+                all_stabilities=d["snap/res_all_stabilities"],
+            )
+            snap = ClusterSnapshot(
+                version=int(d["snap/version"]),
+                n_points=int(d["snap/n_points"]),
+                bubble_rep=np.asarray(d["snap/bubble_rep"]),
+                bubble_n=np.asarray(d["snap/bubble_n"]),
+                center=np.asarray(d["snap/center"]),
+                result=res,
+                wall_seconds=float(d["snap/wall_seconds"]),
+                dirty_consumed=float(d["snap/dirty_consumed"]),
+            )
+        with self._snapshot_lock:
+            self._snapshot = snap
+        if self._flat is not None:
+            if bool(d["flat/has"]):
+                self._restore_flat(d)
+            else:
+                self._flat.stale = True
+        if self.exact:
+            # the dynamic MST state is NOT serialized: one rebuild from
+            # the restored tree (the authoritative point store) at the
+            # next refresh reproduces it
+            self._dyn_stale = True
+            self._pid2slot = {}
+        return step
+
+    def _restore_flat(self, d: dict):
+        """Rebuild the device-resident flat table bit-for-bit: origin,
+        slot order, and Kahan compensations all round-trip, so the next
+        ε-pass compacts the same rows in the same order as the
+        uninterrupted worker would have."""
+        import jax.numpy as jnp
+
+        f = self._flat
+        f._alloc(int(d["flat/LS"].shape[0]))
+        f.LS = jnp.asarray(d["flat/LS"])
+        f.LSe = jnp.asarray(d["flat/LSe"])
+        f.SS = jnp.asarray(d["flat/SS"])
+        f.SSe = jnp.asarray(d["flat/SSe"])
+        f.N = jnp.asarray(d["flat/N"])
+        f.alive = jnp.asarray(d["flat/alive"])
+        f.origin = np.array(d["flat/origin"], dtype=np.float64)
+        f.leaf_of_slot = np.array(d["flat/leaf_of_slot"], dtype=np.int64)
+        f.slot_of_leaf = {
+            int(leaf): s for s, leaf in enumerate(f.leaf_of_slot) if leaf >= 0
+        }
+        f._free = d["flat/free"].astype(int).tolist()
+        f._alive_host = np.array(d["flat/alive"], dtype=bool)
+        f._hi = int(d["flat/hi"])
+        f.loads = int(d["flat/loads"])
+        f.stale = False
 
     # -- serve plane -------------------------------------------------------
 

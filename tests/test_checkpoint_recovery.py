@@ -1,0 +1,257 @@
+"""Kill-and-recover drill for the streaming engine (ISSUE 7 tentpole).
+
+The paper's online–offline split makes the Bubble-tree summary the
+durable state: a crashed worker replays O(summary) from its last
+checkpoint instead of re-ingesting the raw stream.  The contract under
+test is *bitwise replay*: an engine restored from its checkpoint and fed
+the same subsequent blocks must reach labels and MST weights identical
+to an uninterrupted oracle run — which requires the checkpoint to carry
+not just CF content but everything that steers future decisions
+bit-for-bit: free-list ORDER (pid allocation), `_op_count` (reorg
+cadence), dirty-mass ε accounting (pass triggers), and in
+device_online mode the Kahan compensation terms + origin + slot layout
+of the flat table (so post-restore ε-passes see the identical f32
+sums).
+
+What is NOT replayed (by design, DESIGN.md §11): an offline pass in
+flight at the kill — content-wise passes are pure readers, so the
+recovered engine republishes from the same tree and converges on the
+same labels/weights even though version counters may differ; those
+cases assert on labels/MST only.
+
+The nightly CI job scales block counts via ``REPRO_FUZZ_SCALE`` and
+rotates seeds with ``REPRO_FUZZ_SEED_OFFSET``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.serving import StreamingClusterEngine
+
+BACKENDS = pytest.mark.parametrize(
+    "backend", ["jnp", "pallas"], ids=["jnp", "pallas"]
+)
+
+FUZZ_SCALE = max(1, int(os.environ.get("REPRO_FUZZ_SCALE", "1")))
+SEED_OFFSET = int(os.environ.get("REPRO_FUZZ_SEED_OFFSET", "0"))
+
+
+def _mk(backend, **kw):
+    kw.setdefault("min_pts", 8)
+    kw.setdefault("compression", 0.15)
+    kw.setdefault("min_offline_points", 8)
+    kw.setdefault("epsilon", 0.2)
+    return StreamingClusterEngine(dim=2, backend=backend, **kw)
+
+
+def _blocks(seed, n_blocks, n_per=40):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_blocks):
+        c = rng.normal(size=(1, 2)) * 6.0
+        out.append((rng.normal(size=(n_per, 2)) * 0.7 + c).astype(np.float64))
+    return out
+
+
+def _drive(eng, blocks, retire_every=3):
+    """Deterministic mixed insert/retire schedule with ε-policy passes.
+    Retires use the pids `ingest` returned — bitwise pid-allocation
+    replay is what makes this identical across oracle and recovered."""
+    for i, b in enumerate(blocks):
+        pids = eng.ingest(b)
+        if retire_every and i % retire_every == retire_every - 1:
+            eng.retire(pids[::4])
+        eng.maybe_recluster()
+    eng.flush()
+
+
+def _assert_lockstep(a, b, versions=True):
+    pa, la = a.labels()
+    pb, lb = b.labels()
+    np.testing.assert_array_equal(pa, pb)
+    np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(a.snapshot.mst[2], b.snapshot.mst[2])
+    np.testing.assert_array_equal(
+        a.snapshot.bubble_labels, b.snapshot.bubble_labels
+    )
+    if versions:
+        assert a.snapshot.version == b.snapshot.version
+        assert a.tree.dirty_mass == b.tree.dirty_mass
+        assert a.tree.mutations == b.tree.mutations
+
+
+class TestRoundTrip:
+    @BACKENDS
+    def test_host_tree_roundtrip_is_bitwise(self, backend, tmp_path):
+        blocks = _blocks(SEED_OFFSET + 1, 5)
+        eng = _mk(backend)
+        _drive(eng, blocks)
+        store = CheckpointStore(str(tmp_path), keep=2)
+        step = eng.save(store)
+        assert step == int(eng.tree.mutations)
+        fresh = _mk(backend)
+        assert fresh.restore(store) == step
+        _assert_lockstep(eng, fresh)
+        # the restored serve plane answers queries from the SAME version
+        probe = np.asarray(blocks[0][:16])
+        res_a = eng.query_detailed(probe)
+        res_b = fresh.query_detailed(probe)
+        assert res_a.version == res_b.version
+        np.testing.assert_array_equal(res_a.labels, res_b.labels)
+        store.close()
+
+    @BACKENDS
+    def test_device_online_roundtrip_is_bitwise(self, backend, tmp_path):
+        """device_online carries extra replay state: the f32 flat table
+        with its Kahan compensation terms, origin, and slot layout —
+        a post-restore ε-pass must see bit-identical device sums."""
+        blocks = _blocks(SEED_OFFSET + 2, 5)
+        eng = _mk(backend, device_online=True)
+        _drive(eng, blocks)
+        store = CheckpointStore(str(tmp_path), keep=2)
+        eng.save(store)
+        fresh = _mk(backend, device_online=True)
+        fresh.restore(store)
+        for name in ("LS", "LSe", "SS", "SSe", "N"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(eng._flat, name)),
+                np.asarray(getattr(fresh._flat, name)),
+            )
+        np.testing.assert_array_equal(
+            np.asarray(eng._flat.leaf_of_slot), np.asarray(fresh._flat.leaf_of_slot)
+        )
+        assert list(eng._flat._free) == list(fresh._flat._free)
+        _assert_lockstep(eng, fresh)
+        store.close()
+
+    def test_exact_mode_roundtrip(self, tmp_path):
+        """Exact mode rebuilds `_dyn` from the tree's alive points
+        (deterministic) instead of serializing it — labels must still
+        replay bitwise through further churn."""
+        blocks = _blocks(SEED_OFFSET + 3, 4, n_per=24)
+        eng = _mk("jnp", exact=True, exact_capacity=512)
+        _drive(eng, blocks[:2], retire_every=0)
+        store = CheckpointStore(str(tmp_path), keep=2)
+        eng.save(store)
+        fresh = _mk("jnp", exact=True, exact_capacity=512)
+        fresh.restore(store)
+        for e in (eng, fresh):
+            _drive(e, blocks[2:], retire_every=0)
+        pa, la = eng.labels()
+        pb, lb = fresh.labels()
+        np.testing.assert_array_equal(pa, pb)
+        np.testing.assert_array_equal(la, lb)
+        store.close()
+
+    def test_restore_rejects_mismatched_configuration(self, tmp_path):
+        eng = _mk("jnp")
+        _drive(eng, _blocks(SEED_OFFSET + 4, 2))
+        store = CheckpointStore(str(tmp_path), keep=2)
+        eng.save(store)
+        wrong_dim = StreamingClusterEngine(
+            dim=3, backend="jnp", min_pts=8, compression=0.15
+        )
+        with pytest.raises(ValueError, match="dim"):
+            wrong_dim.restore(store)
+        with pytest.raises(ValueError, match="device_online"):
+            _mk("jnp", device_online=True).restore(store)
+        with pytest.raises(ValueError, match="exact"):
+            _mk("jnp", exact=True).restore(store)
+        # queued-but-unpolled requests would be silently dropped
+        busy = _mk("jnp")
+        busy.submit_insert(np.zeros((3, 2)))
+        with pytest.raises(RuntimeError, match="queued"):
+            busy.restore(store)
+        store.close()
+
+
+class TestKillAndRecover:
+    """The acceptance drill: kill after a checkpoint, restore, feed the
+    SAME subsequent blocks — labels and MST weight must be bitwise
+    identical to an oracle that never died."""
+
+    @BACKENDS
+    def test_drill_bitwise_replay(self, backend, tmp_path):
+        blocks = _blocks(SEED_OFFSET + 11, 6 * FUZZ_SCALE)
+        cut = len(blocks) // 2
+        oracle = _mk(backend)
+        victim = _mk(backend)
+        for eng in (oracle, victim):
+            _drive(eng, blocks[:cut])
+        store = CheckpointStore(str(tmp_path), keep=2)
+        victim.save(store)
+        del victim  # the kill: only the checkpoint survives
+        recovered = _mk(backend)
+        recovered.restore(store)
+        for eng in (oracle, recovered):
+            _drive(eng, blocks[cut:])
+        _assert_lockstep(oracle, recovered)
+        store.close()
+
+    @BACKENDS
+    def test_drill_device_online(self, backend, tmp_path):
+        blocks = _blocks(SEED_OFFSET + 12, 4 * FUZZ_SCALE)
+        cut = len(blocks) // 2
+        oracle = _mk(backend, device_online=True)
+        victim = _mk(backend, device_online=True)
+        for eng in (oracle, victim):
+            _drive(eng, blocks[:cut])
+        store = CheckpointStore(str(tmp_path), keep=2)
+        victim.save(store)
+        del victim
+        recovered = _mk(backend, device_online=True)
+        recovered.restore(store)
+        for eng in (oracle, recovered):
+            _drive(eng, blocks[cut:])
+        _assert_lockstep(oracle, recovered)
+        store.close()
+
+    def test_kill_mid_async_pass(self, tmp_path):
+        """Checkpoint taken while an async ε-pass is in flight: the pass
+        is NOT captured (passes are pure readers of tree content), so
+        the recovered engine replays to the last *published* version.
+        After the same subsequent blocks + a final flush, labels and MST
+        weights converge bitwise; version counters may not, and that is
+        the documented contract — so no `versions` assert here."""
+        blocks = _blocks(SEED_OFFSET + 13, 6)
+        cut = 4
+        oracle = _mk("jnp", async_offline=True)
+        victim = _mk("jnp", async_offline=True)
+        store = CheckpointStore(str(tmp_path), keep=2)
+        for eng in (oracle, victim):
+            for b in blocks[:cut]:
+                eng.ingest(b)
+                eng.maybe_recluster()  # may leave a pass in flight
+        victim.save(store)  # snapshots whatever is published RIGHT NOW
+        del victim
+        recovered = _mk("jnp", async_offline=True)
+        recovered.restore(store)
+        for eng in (oracle, recovered):
+            for b in blocks[cut:]:
+                eng.ingest(b)
+            eng.flush()  # joins any in-flight pass, publishes final
+        _assert_lockstep(oracle, recovered, versions=False)
+        store.close()
+
+    def test_recover_from_latest_of_many_checkpoints(self, tmp_path):
+        """Periodic checkpointing + retention: restore() with no step
+        picks the newest published one; replay still bitwise."""
+        blocks = _blocks(SEED_OFFSET + 14, 6)
+        oracle = _mk("jnp")
+        victim = _mk("jnp")
+        store = CheckpointStore(str(tmp_path), keep=2)
+        steps = []
+        for i, b in enumerate(blocks[:4]):
+            for eng in (oracle, victim):
+                eng.ingest(b)
+                eng.maybe_recluster()
+            steps.append(victim.save(store, step=i))
+        recovered = _mk("jnp")
+        assert recovered.restore(store) == steps[-1]
+        for eng in (oracle, recovered):
+            _drive(eng, blocks[4:])
+        _assert_lockstep(oracle, recovered)
+        store.close()

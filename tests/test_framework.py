@@ -64,6 +64,93 @@ class TestCheckpoint:
         store.close()
         assert out["w"].dtype == jnp.bfloat16
 
+    def test_crash_window_never_loses_published_step(self, tmp_path, monkeypatch):
+        """Regression: overwriting a step used to rmtree the old copy
+        BEFORE publishing the new one — a crash in the gap lost the only
+        copy.  Now the old dir is renamed aside first; a crash between
+        the two renames rolls back to the old copy at next store open."""
+        tree_old = {"w": jnp.arange(4.0)}
+        store = CheckpointStore(str(tmp_path), keep=2)
+        store.save(7, tree_old)
+
+        real_rename = os.rename
+
+        def crash_on_publish(src, dst):
+            if ".tmp-" in os.path.basename(src):  # the publish rename
+                raise OSError("simulated crash between rename-aside and publish")
+            return real_rename(src, dst)
+
+        monkeypatch.setattr(os, "rename", crash_on_publish)
+        with pytest.raises(OSError, match="simulated crash"):
+            store.save(7, {"w": jnp.arange(4.0) + 100})
+        monkeypatch.undo()
+        # at no point did the step's data leave disk: the old copy
+        # survives as step_7.old-<pid> and a fresh store restores it
+        store2 = CheckpointStore(str(tmp_path), keep=2)
+        assert latest_step(str(tmp_path)) == 7
+        step, out = store2.restore(like=tree_old)
+        assert step == 7
+        np.testing.assert_array_equal(out["w"], tree_old["w"])
+        # the next successful write GCs the stale tmp dir
+        store2.save(8, tree_old)
+        leftovers = [d for d in os.listdir(tmp_path) if ".tmp-" in d or ".old-" in d]
+        assert leftovers == []
+        store2.close()
+        store._err = None  # crash already surfaced above; close cleanly
+        store.close()
+
+    def test_async_error_latched_first_wins(self, tmp_path):
+        """A failed async write must surface on the NEXT save()/wait(),
+        and a second failure must not mask the first exception."""
+        tree = {"w": jnp.ones((2,))}
+        store = CheckpointStore(str(tmp_path), keep=2)
+
+        def failing_write(step, host):
+            raise ValueError(f"disk full at step {step}")
+
+        store._write = failing_write
+        store.save(1, tree, blocking=False)
+        store._q.join()  # writer has latched boom-1
+        host = {"w": np.ones((2,))}
+        store._q.put((2, host))  # bypass save(): force a SECOND failure
+        store._q.join()
+        with pytest.raises(RuntimeError, match="checkpoint writer failed") as ei:
+            store.save(3, tree, blocking=False)
+        assert "step 1" in str(ei.value.__cause__)  # first failure preserved
+        with pytest.raises(RuntimeError):
+            store.wait()
+        with pytest.raises(RuntimeError):
+            store.close()
+
+    def test_stale_writer_dirs_ignored_and_gcd(self, tmp_path):
+        """step_N.tmp-<pid> / step_N.old-<pid> left by a killed writer
+        are invisible to latest_step and swept by the next GC."""
+        tree = {"w": jnp.ones((2,))}
+        store = CheckpointStore(str(tmp_path), keep=3)
+        store.save(3, tree)
+        store.save(4, tree)
+        for stale in ("step_9.tmp-12345", "step_3.old-12345"):
+            d = tmp_path / stale
+            d.mkdir()
+            (d / "leaf_00000.npy").write_bytes(b"junk")
+        assert latest_step(str(tmp_path)) == 4  # stale dirs never surfaced
+        store.save(5, tree)  # triggers _gc
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["step_3", "step_4", "step_5"]
+        store.close()
+
+    def test_truncated_leaf_raises_checksum_error(self, tmp_path):
+        tree = {"w": jnp.arange(16.0)}
+        store = CheckpointStore(str(tmp_path), keep=2)
+        store.save(1, tree)
+        d = tmp_path / "step_1"
+        leaf = next(f for f in os.listdir(d) if f.endswith(".npy"))
+        arr = np.load(d / leaf)
+        np.save(d / leaf, arr[:-3])  # truncated payload, valid npy header
+        with pytest.raises(IOError, match="checksum mismatch"):
+            store.restore(like=tree)
+        store.close()
+
 
 class TestPipeline:
     def test_deterministic_replay(self):

@@ -246,6 +246,89 @@ class TestSnapshotCache:
         np.testing.assert_array_equal(r1_again.labels, r1.labels)
         np.testing.assert_allclose(r1_again.distance, r1.distance)
 
+    def test_single_flight_one_build_per_version(self, rng, monkeypatch):
+        """Satellite regression: readers racing on the same cold version
+        used to EACH pay the O(L·d) build + device upload.  With
+        single-flight, one thread builds while the rest wait on its
+        event and hit the installed entry."""
+        from repro.serving import query as qmod
+
+        eng, X = _engine("jnp", rng)
+        snap = eng.snapshot
+        cache = qmod.SnapshotDeviceCache(keep=4)
+        real_build = qmod._build_entry
+        started = threading.Barrier(8 + 1, timeout=30)
+
+        def slow_build(s, spatial=False):
+            import time
+
+            time.sleep(0.05)  # hold the build open so the race is real
+            return real_build(s, spatial)
+
+        monkeypatch.setattr(qmod, "_build_entry", slow_build)
+        got = [None] * 8
+
+        def worker(i):
+            started.wait()
+            got[i] = cache.entry(snap)
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        started.wait()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads)
+        assert cache.builds == 1
+        assert cache.hits == 7
+        assert all(g is got[0] for g in got)  # same installed entry
+
+    def test_failed_build_wakes_followers_and_frees_key(self, rng, monkeypatch):
+        from repro.serving import query as qmod
+
+        eng, X = _engine("jnp", rng)
+        snap = eng.snapshot
+        cache = qmod.SnapshotDeviceCache(keep=4)
+        real_build = qmod._build_entry
+        fail_once = [True]
+
+        def flaky_build(s, spatial=False):
+            if fail_once[0]:
+                fail_once[0] = False
+                raise RuntimeError("device OOM")
+            return real_build(s, spatial)
+
+        monkeypatch.setattr(qmod, "_build_entry", flaky_build)
+        with pytest.raises(RuntimeError, match="device OOM"):
+            cache.entry(snap)
+        assert cache._building == {}  # key freed: next caller retries
+        e = cache.entry(snap)
+        assert e is cache.entry(snap) and cache.builds == 1
+
+    def test_eviction_is_lru_on_access(self, rng):
+        """Satellite regression: eviction was insertion-ordered, so a
+        version still actively served was evicted and rebuilt on every
+        call once `keep` newer versions existed."""
+        from repro.serving.query import SnapshotDeviceCache
+
+        eng, X = _engine("jnp", rng)
+        snaps = [eng.snapshot]
+        for i in range(2):  # publish two more genuine versions
+            eng.ingest(rng.normal(size=(80, 2)) + 9.0 * (i + 1))
+            eng.maybe_recluster(force=True)
+            snaps.append(eng.snapshot)
+        assert len({s.version for s in snaps}) == 3
+        cache = SnapshotDeviceCache(keep=2)
+        cache.entry(snaps[0])
+        cache.entry(snaps[1])
+        cache.entry(snaps[0])  # touch v0: now v1 is the LRU victim
+        cache.entry(snaps[2])  # evicts v1, NOT the just-touched v0
+        assert cache.builds == 3
+        cache.entry(snaps[0])  # still resident
+        assert cache.builds == 3
+        cache.entry(snaps[1])  # was evicted: rebuilt
+        assert cache.builds == 4
+
     def test_swap_under_load_serves_single_version(self, rng):
         """Satellite regression: labels are gathered from the SAME
         snapshot the assignment ran against, even while the main thread
@@ -355,3 +438,46 @@ class TestQueryBatcher:
         # the queue stays serviceable afterwards
         np.testing.assert_array_equal(qb.query(X[:3]), eng.query(X[:3]))
         assert qb.query([]).shape == (0,)
+
+    def test_leader_death_fans_exception_to_whole_block(self, rng):
+        """Satellite regression: a poisoned batch raising inside the
+        leader's fused call left follower tickets in the same drained
+        block uncompleted — their callers spun forever.  The leader's
+        exception must reach EVERY caller of the failed block, and the
+        batcher must keep serving afterwards."""
+        eng, X = _engine("jnp", rng)
+        qb = QueryBatcher(eng, max_batch=256)
+        real_qd = eng.query_detailed
+        poisoned = threading.Event()
+        poisoned.set()
+
+        def poison_qd(Xq, **kw):
+            if poisoned.is_set():
+                raise RuntimeError("poisoned batch")
+            return real_qd(Xq, **kw)
+
+        eng.query_detailed = poison_qd
+        try:
+            outcomes = [None] * 8
+
+            def worker(i):
+                try:
+                    qb.query(rng.normal(size=(3, 2)))
+                    outcomes[i] = "ok"
+                except RuntimeError as e:
+                    outcomes[i] = str(e)
+
+            threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=60)
+            # nobody hangs — leader AND followers all complete…
+            assert not any(t.is_alive() for t in threads)
+            # …and every caller saw the leader's exception
+            assert outcomes == ["poisoned batch"] * 8
+        finally:
+            eng.query_detailed = real_qd
+            poisoned.clear()
+        # the dispatch loop survived the dead leader
+        np.testing.assert_array_equal(qb.query(X[:5]), eng.query(X[:5]))

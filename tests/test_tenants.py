@@ -1,0 +1,169 @@
+"""TenantRouter: many streams, one serve plane (ISSUE 7 tentpole).
+
+The things worth pinning are the SHARED-ness and the ISOLATION at once:
+one `SnapshotDeviceCache` holds every tenant's entries under
+``(tenant, version)`` keys (version counters never collide), one
+`QueryBatcher` coalesces concurrent same-tenant callers while keeping
+blocks single-tenant (HostBatcher kind = tenant name), and
+`save_all`/`recover` round-trips the whole fleet bitwise through
+per-tenant checkpoint stores.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving import TenantRouter
+
+
+def _router(tmp_path=None, **kw):
+    kw.setdefault("backend", "jnp")
+    kw.setdefault("min_pts", 8)
+    kw.setdefault("compression", 0.15)
+    kw.setdefault("min_offline_points", 8)
+    return TenantRouter(
+        2, checkpoint_root=None if tmp_path is None else str(tmp_path), **kw
+    )
+
+
+def _tenant_data(rng, n_tenants, n=120):
+    """Well-separated per-tenant datasets: cross-tenant label leakage
+    would show up as wrong labels immediately."""
+    return {
+        f"t{i}": (rng.normal(size=(n, 2)) + 10.0 * i).astype(np.float64)
+        for i in range(n_tenants)
+    }
+
+
+class TestRouting:
+    def test_isolation_and_shared_cache_keys(self, rng):
+        r = _router()
+        data = _tenant_data(rng, 3)
+        for name, X in data.items():
+            r.create(name)
+            r.ingest(name, X)
+        r.flush()
+        for name, X in data.items():
+            # routed answers == that tenant's own engine, bitwise
+            np.testing.assert_array_equal(
+                r.query(name, X[:40]), r.engine(name).query(X[:40])
+            )
+        # ONE cache, scoped keys: every tenant's v1 coexists
+        assert sorted(r.cache._entries) == [(n, 1) for n in sorted(data)]
+        st = r.stats()
+        assert st["tenants"] == 3 and st["cache_builds"] == 3
+
+    def test_concurrent_mixed_tenants_through_one_batcher(self, rng):
+        r = _router()
+        data = _tenant_data(rng, 4)
+        for name, X in data.items():
+            r.create(name)
+            r.submit_insert(name, X)
+        assert r.poll() == 4 * 120
+        r.flush()
+        want = {n: r.engine(n).query(X[:25]) for n, X in data.items()}
+        got = {}
+        errors = []
+
+        def worker(name, X):
+            try:
+                got[name] = r.query(name, X[:25])
+            except BaseException as e:  # noqa: BLE001 — surfaced in main
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(n, X))
+            for n, X in data.items()
+            for _ in range(2)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, errors[0]
+        for name in data:
+            np.testing.assert_array_equal(got[name], want[name])
+        # blocks never mixed tenants: every fused call served ONE tenant
+        assert r.batcher.fanned_out == len(threads)
+        assert r.batcher.batches >= len(data)
+
+    def test_lifecycle_errors(self, rng):
+        r = _router()
+        r.create("acme")
+        with pytest.raises(ValueError, match="already exists"):
+            r.create("acme")
+        with pytest.raises(ValueError, match="must match"):
+            r.create("../escape")
+        with pytest.raises(KeyError, match="unknown tenant"):
+            r.query("ghost", np.zeros((1, 2)))
+        assert "acme" in r and len(r) == 1
+        with pytest.raises(RuntimeError, match="checkpoint_root"):
+            r.save("acme")
+        r.drop("acme")
+        assert "acme" not in r
+
+    def test_per_tenant_overrides(self, rng):
+        r = _router(epsilon=0.5)
+        a = r.create("small")
+        b = r.create("online", device_online=True)
+        assert a._flat is None and b._flat is not None
+        # both still share the router's cache object
+        assert a._query_engine.cache is r.cache is b._query_engine.cache
+        assert a._query_engine.scope == "small"
+
+
+class TestFleetRecovery:
+    def test_save_all_recover_bitwise(self, rng, tmp_path):
+        data = _tenant_data(rng, 3)
+        r = _router(tmp_path)
+        for name, X in data.items():
+            r.create(name)
+            r.ingest(name, X[:80])
+        r.flush()
+        want = {n: r.query(n, X[:30]) for n, X in data.items()}
+        steps = r.save_all()
+        assert sorted(steps) == sorted(data)
+        r.close()
+
+        # worker restart: a fresh router rebuilds the fleet from disk
+        r2 = _router(tmp_path)
+        assert r2.recover() == sorted(data)
+        for name, X in data.items():
+            np.testing.assert_array_equal(r2.query(name, X[:30]), want[name])
+        # recovered tenants keep streaming: same subsequent block lands
+        # on the same snapshot version a never-killed run would reach
+        for name, X in data.items():
+            r2.ingest(name, X[80:])
+        r2.flush()
+        oracle = _router()
+        for name, X in data.items():
+            oracle.create(name)
+            oracle.ingest(name, X[:80])
+        oracle.flush()
+        for name, X in data.items():
+            oracle.ingest(name, X[80:])
+        oracle.flush()
+        for name, X in data.items():
+            e1, e2 = oracle.engine(name), r2.engine(name)
+            assert e1.snapshot.version == e2.snapshot.version
+            np.testing.assert_array_equal(
+                e1.snapshot.bubble_labels, e2.snapshot.bubble_labels
+            )
+            np.testing.assert_array_equal(
+                e1.snapshot.mst[2], e2.snapshot.mst[2]
+            )
+        r2.close()
+
+    def test_recover_skips_unpublished_tenants(self, rng, tmp_path):
+        r = _router(tmp_path)
+        r.create("ready")
+        r.ingest("ready", rng.normal(size=(60, 2)))
+        r.flush()
+        r.save("ready")
+        (tmp_path / "empty-tenant").mkdir()  # dir exists, no checkpoint
+        r.close()
+        r2 = _router(tmp_path)
+        assert r2.recover() == ["ready"]
+        assert "empty-tenant" not in r2
+        r2.close()
