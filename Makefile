@@ -9,13 +9,23 @@ export PYTHONPATH := src:$(PYTHONPATH)
 # pre-existing tree is linted (ruff check) but not reflowed wholesale.
 FORMAT_PATHS ?= scripts/check_bench_regression.py
 
-.PHONY: test bench-smoke bench-gate docs-links lint check
+.PHONY: test test-multidevice bench-smoke bench-gate docs-links lint check
 
 test:
 	$(PYTHON) -m pytest $(PYTEST_FLAGS)
 
+# Simulated multi-device leg (DESIGN.md §12): the sharding / streaming /
+# parity suites with 8 host devices forced, so shard_map really runs
+# 8-way.  Plain `make test` keeps the single real CPU device on purpose
+# (tests/conftest.py) — this target is the only one that overrides it.
+test-multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  $(PYTHON) -m pytest $(PYTEST_FLAGS) tests/test_mesh_sharding.py \
+	  tests/test_sharding.py tests/test_streaming.py tests/test_bubble_flat.py \
+	  tests/test_grid_pruning.py
+
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig8,fig3_dynamic,fig5_query,fig7_pruned,fig9
+	$(PYTHON) -m benchmarks.run --only fig8,fig3_dynamic,fig5_query,fig7_pruned,fig7_mesh,fig9
 
 # CI perf gate: fresh smoke run (bench_out/ by default), compared against
 # the checked-in bench_results/ baselines (1.5x default; REPRO_BENCH_TOL=…).

@@ -19,7 +19,7 @@ def main(argv=None):
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig7_pruned,fig8,fig9,kernels,roofline",
+        help="comma list: fig3,fig3_dynamic,fig4,fig5,fig5_query,fig6,fig7,fig7_pruned,fig7_mesh,fig8,fig9,kernels,roofline",
     )
     ap.add_argument("--dryrun", default="dryrun_results.json")
     args = ap.parse_args(argv)
@@ -63,12 +63,20 @@ def main(argv=None):
 
         _guard(fig7_scalability.run, failures, "fig7")
         _guard(fig7_scalability.run_pruned, failures, "fig7_pruned")
-    elif want("fig7_pruned"):
-        # grid-pruned vs dense neighbor-engine L-sweep alone; merges the
-        # `pruned` section into an existing fig7_scalability.json
-        from . import fig7_scalability
+        _guard(fig7_scalability.run_mesh, failures, "fig7_mesh")
+    else:
+        if want("fig7_pruned"):
+            # grid-pruned vs dense neighbor-engine L-sweep alone; merges
+            # the `pruned` section into an existing fig7_scalability.json
+            from . import fig7_scalability
 
-        _guard(fig7_scalability.run_pruned, failures, "fig7_pruned")
+            _guard(fig7_scalability.run_pruned, failures, "fig7_pruned")
+        if want("fig7_mesh"):
+            # mesh strip sweep alone (DESIGN.md §12); merges the `mesh`
+            # section into an existing fig7_scalability.json
+            from . import fig7_scalability
+
+            _guard(fig7_scalability.run_mesh, failures, "fig7_mesh")
     if want("fig8"):
         from . import fig8_streaming
 

@@ -55,6 +55,12 @@ METRICS = [
     # interleaved A/B quotient, so it rides shared-core noise the same
     # way the fig5 floors do.
     ("fig7_scalability.json", ("pruned", "speedup_at_max_L"), ("floor", 2.0)),
+    # mesh-sharded offline pass (ISSUE 8): the per-device strip of the
+    # dominant Eq. 6 d_m stage at 8-way row blocking must stay ≥ 2× the
+    # 1-way pass (measured ~7.9× — near-linear; the floor guards against
+    # the strip silently re-materializing full-table work).  Same
+    # same-kernel-family quotient argument as the pruned floor above.
+    ("fig7_scalability.json", ("mesh", "strip_speedup_at_8"), ("floor", 2.0)),
     # multi-tenant service (ISSUE 7): aggregate query p99 across 8
     # concurrent tenants under mixed ingest+query load must meet the SLO
     # ceiling (measured ~230 ms on a contended single core; 1200 ms

@@ -5,6 +5,7 @@ from .baselines import ClusTreeLite, IncrementalBubbles
 from .bubble_flat import BubbleFlat
 from .bubble_tree import BubbleTree
 from .bubbles import DataBubbles, bubble_mutual_reachability, bubbles_from_cf
+from .device_table import DeviceTableProtocol, SnapshotDeviceTable
 from .cf import CFTable, cf_extent, cf_nn_dist, cf_of_points, cf_rep
 from .dynamic import DynamicHDBSCAN
 from .hdbscan import HDBSCANResult, core_distances, hdbscan, mutual_reachability
@@ -19,9 +20,11 @@ __all__ = [
     "CFTable",
     "ClusTreeLite",
     "DataBubbles",
+    "DeviceTableProtocol",
     "DynamicHDBSCAN",
     "HDBSCANResult",
     "IncrementalBubbles",
+    "SnapshotDeviceTable",
     "UnionFind",
     "ari",
     "assign_points",

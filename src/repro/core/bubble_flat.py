@@ -146,10 +146,14 @@ class BubbleFlat:
     """
 
     def __init__(self, dim: int, use_ref: bool = True, capacity: int = 64,
-                 spatial_index: bool = False):
+                 spatial_index: bool = False, mesh=None, mesh_axis: str = "data"):
         self.dim = int(dim)
         self.use_ref = bool(use_ref)
         self.spatial_index = bool(spatial_index)
+        # baked into every capture(): offline passes over this table run
+        # the O(L²) stage row-block-sharded over the mesh (DESIGN.md §12)
+        self.mesh = mesh
+        self.mesh_axis = str(mesh_axis)
         self.stale = True  # needs a full load before first use
         self.loads = 0  # full host->device uploads (bootstrap + re-buckets)
         self.origin = np.zeros(self.dim, dtype=np.float64)
@@ -355,7 +359,31 @@ class BubbleFlat:
         )
         self._alive_host[np.asarray(rows)] = np.asarray(al)
 
-    # -- consumers --------------------------------------------------------
+    # -- consumers (core.device_table.DeviceTableProtocol) ----------------
+
+    @property
+    def ready(self) -> bool:
+        """Protocol view of staleness: a stale table must reload from the
+        host tree before an offline capture can trust its rows."""
+        return not self.stale
+
+    def sync(self, tree) -> None:
+        """Protocol alias for `sync_struct` (which already covers the
+        stale → full-reload case)."""
+        self.sync_struct(tree)
+
+    def capture(self, n_points: int):
+        """Immutable offline capture (core.device_table.FlatTableCapture):
+        the six device arrays are jax-immutable, so this is a free
+        snapshot — async passes need no isolation copy.  Carries the
+        table's mesh so captures route through the sharded offline pass
+        without the caller re-plumbing it."""
+        from repro.core.device_table import FlatTableCapture
+
+        return FlatTableCapture(
+            view=self.device_view(), origin=self.origin.copy(),
+            n_points=int(n_points), mesh=self.mesh, mesh_axis=self.mesh_axis,
+        )
 
     def device_view(self):
         """(LS, LSe, SS, SSe, N, alive) — immutable device arrays; safe to

@@ -1,0 +1,166 @@
+"""One protocol for every device-state path the offline pass can consume
+(DESIGN.md §12).
+
+Three bespoke handoffs grew up in separate PRs: host `BubbleTree`
+snapshots (gather leaf CFs, derive the f64 bubble table, upload),
+`core.bubble_flat`'s device-resident leaf-CF table (zero per-pass
+transfer), and `core.dynamic_jax`'s exact point-level state (hierarchy
+stages only).  The streaming engine special-cased all three.  This
+module names the contract they share so the engine — and the mesh=
+sharded offline pass — can treat them uniformly:
+
+  ``ready``        the device state can serve an offline capture right
+                   now, without a host reload.
+  ``sync(tree)``   reconcile with the host-authoritative source (patch
+                   dirty rows, reload on staleness; no-op when the host
+                   itself is the source).
+  ``capture(n)``   an immutable, async-safe view of the summary for ONE
+                   offline pass over a population of ``n`` points.  jax
+                   arrays are immutable and numpy rows are copied, so a
+                   capture taken on the ingest thread stays consistent
+                   while a background pass consumes it.
+
+A capture then runs the pass itself:
+
+  ``capture.recluster(backend, min_pts=…, min_cluster_size=…,
+                      mesh=…, mesh_axis=…)``
+      → ``(OfflineClusterResult, rep, n_b, center)``
+
+with ``rep``/``n_b``/``center`` the f64 serve-plane table (uncentered
+representatives, masses, and the centroid queries must subtract).  The
+``mesh`` opt-in routes the O(L²) stage of the fused pipeline through the
+row-block-sharded shard_map path (kernels/ops.py) — same contract, same
+bits, on any mesh shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "DeviceTableProtocol",
+    "HostTableCapture",
+    "FlatTableCapture",
+    "DynamicStateCapture",
+    "SnapshotDeviceTable",
+]
+
+
+@runtime_checkable
+class DeviceTableProtocol(Protocol):
+    """Structural interface: anything with ready/sync/capture can feed
+    the streaming engine's offline plane.  Adopted by
+    `core.bubble_flat.BubbleFlat` (device-resident flat table) and
+    `SnapshotDeviceTable` (host-tree snapshots) below."""
+
+    @property
+    def ready(self) -> bool: ...
+
+    def sync(self, tree) -> None: ...
+
+    def capture(self, n_points: int): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTableCapture:
+    """Offline capture of host-side leaf CF rows (the `BubbleTree`
+    snapshot path): rows are isolation copies, the f64 bubble-table
+    derivation (Eqs. 3–4) happens at recluster time on whatever thread
+    runs the pass."""
+
+    ids: np.ndarray
+    LS: np.ndarray
+    SS: np.ndarray
+    N: np.ndarray
+
+    def recluster(self, backend, *, min_pts: int, min_cluster_size: float,
+                  mesh=None, mesh_axis: str = "data"):
+        from repro.kernels import ops
+
+        rep, extent, n_b, center = ops.bubble_table(
+            self.LS, self.SS, self.N, self.ids)
+        kw = {} if mesh is None else {"mesh": mesh, "mesh_axis": mesh_axis}
+        res = backend.offline_recluster_from_table(
+            rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
+            **kw,
+        )
+        return res, rep, n_b, center
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatTableCapture:
+    """Offline capture of a `BubbleFlat` device view: the six immutable
+    device arrays plus the f64 origin — zero per-pass host→device
+    transfer of the summary.  ``n_points`` clamps the static min_pts
+    (the flat table's mass equals the population by construction).  A
+    mesh baked in at construction (``BubbleFlat(mesh=…)``) applies when
+    the recluster call doesn't override it."""
+
+    view: tuple
+    origin: np.ndarray
+    n_points: int
+    mesh: Any = None
+    mesh_axis: str = "data"
+
+    def recluster(self, backend, *, min_pts: int, min_cluster_size: float,
+                  mesh=None, mesh_axis: str = "data"):
+        if mesh is None:
+            mesh, mesh_axis = self.mesh, self.mesh_axis
+        mp = max(1, min(int(min_pts), int(self.n_points)))
+        kw = {} if mesh is None else {"mesh": mesh, "mesh_axis": mesh_axis}
+        return backend.offline_recluster_from_device_table(
+            *self.view, self.origin, mp,
+            min_cluster_size=min_cluster_size, **kw,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicStateCapture:
+    """Offline capture of the exact-dynamic device state (PR 3's
+    `core.dynamic_jax`): labels come from the maintained point-level MST
+    through the hierarchy-only stages — there is no O(L²) stage, so the
+    mesh opt-in has nothing to shard here and is rejected."""
+
+    state: Any
+    dim: int
+
+    def recluster(self, backend, *, min_pts: int, min_cluster_size: float,
+                  mesh=None, mesh_axis: str = "data"):
+        if mesh is not None:
+            raise ValueError(
+                "the exact-dynamic path maintains the point-level MST "
+                "incrementally — there is no O(L²) stage for mesh= to shard"
+            )
+        res, _, rep32 = backend.incremental_recluster(
+            self.state, float(min_cluster_size))
+        rep = np.asarray(rep32, dtype=np.float64)
+        n_b = np.ones(rep.shape[0], dtype=np.float64)
+        center = rep.mean(axis=0) if rep.size else np.zeros(self.dim)
+        return res, rep, n_b, center
+
+
+class SnapshotDeviceTable:
+    """`DeviceTableProtocol` over the host `BubbleTree` itself — the
+    fallback every engine has: always ready (the tree IS the source of
+    truth), sync is a no-op, and capture gathers the alive-leaf CF rows
+    as isolation copies (O(L·d) — the summary, never the raw points)."""
+
+    def __init__(self, tree):
+        self.tree = tree
+
+    @property
+    def ready(self) -> bool:
+        return True
+
+    def sync(self, tree=None) -> None:
+        return None
+
+    def capture(self, n_points: int) -> HostTableCapture:
+        ids, LS, SS, N = self.tree.leaf_cf_buffers()
+        # advanced indexing allocates fresh arrays — that IS the
+        # isolation copy an async pass needs
+        return HostTableCapture(
+            ids=np.arange(len(ids)), LS=LS[ids], SS=SS[ids], N=N[ids])

@@ -40,6 +40,8 @@ __all__ = [
     "boruvka_dense",
     "mst_total_weight",
     "boruvka_jax",
+    "boruvka_shard_jax",
+    "boruvka_grid_shard_jax",
     "boruvka_edges_jax",
     "boruvka_strip_jax",
 ]
@@ -201,6 +203,64 @@ def mst_total_weight(w) -> float:
 # JAX engine — offline bubble clustering pass.
 # --------------------------------------------------------------------------
 
+def _boruvka_round_tail(labels, row_w, row_eid, row_j, row_has,
+                        eu, ev, ew, valid, n_edges, n, jumps):
+    """Back half of one Borůvka round: component aggregation, hooking,
+    pointer jumping, edge append.
+
+    Shared verbatim by the dense, grid-pruned, and shard_map front
+    halves — they differ only in HOW the per-row (w, canonical-edge-id)
+    minima are reduced, so feeding identical (row_w, row_eid, row_j)
+    arrays through this one tail is what makes all three engines
+    bitwise-interchangeable.  Takes the full (n,) reduction results and
+    the round-carried state; returns the updated state tuple.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    INF = jnp.asarray(np.inf, dtype=row_w.dtype)
+    BIGID = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    TRASH = n
+    iota = jnp.arange(n, dtype=jnp.int32)
+    comp_w = jnp.full((n,), INF, dtype=row_w.dtype).at[labels].min(row_w)
+    w_hit = row_has & (row_w == comp_w[labels])
+    comp_eid = jnp.full((n,), BIGID).at[labels].min(
+        jnp.where(w_hit, row_eid, BIGID)
+    )
+    full_hit = w_hit & (row_eid == comp_eid[labels])
+    comp_row = jnp.full((n,), n, dtype=jnp.int32).at[labels].min(
+        jnp.where(full_hit, iota, n)
+    )  # label -> row index holding the component's chosen edge
+    has_edge = comp_row < n
+    safe_row = jnp.minimum(comp_row, n - 1)
+    comp_u = safe_row
+    comp_v = row_j[safe_row].astype(jnp.int32)
+    comp_wt = row_w[safe_row]
+    comp_tgt = labels[comp_v]
+    # mirrored 2-cycle iff both components chose the same canonical edge
+    is_mirror = has_edge & (comp_eid[comp_tgt] == comp_eid)
+    keep = has_edge & ~(is_mirror & (iota > comp_tgt))
+    # hook: parent = target label; mirror pairs root at the lower label
+    parent = jnp.where(has_edge, comp_tgt, iota)
+    parent = jnp.where(is_mirror & (iota < comp_tgt), iota, parent)
+
+    def jump(m, _):
+        return m[m], None
+
+    # unroll: the body is one gather — while-loop dispatch dominates
+    parent, _ = jax.lax.scan(jump, parent, None, length=jumps, unroll=4)
+    new_labels = parent[labels]
+    # append kept edges: slot via cumsum, rejects land in TRASH
+    slot = n_edges + jnp.cumsum(keep.astype(jnp.int32)) - 1
+    slot = jnp.where(keep, jnp.minimum(slot, n - 1), TRASH)
+    eu = eu.at[slot].set(comp_u.astype(jnp.int32))
+    ev = ev.at[slot].set(comp_v)
+    ew = ew.at[slot].set(comp_wt)
+    valid = valid.at[slot].set(keep)
+    n_new = jnp.sum(keep.astype(jnp.int32))
+    return new_labels, eu, ev, ew, valid, n_edges + n_new
+
+
 def boruvka_jax(W, max_rounds: int | None = None):
     """Borůvka MST in pure jnp under jit (dense (n, n) weights).
 
@@ -229,7 +289,6 @@ def boruvka_jax(W, max_rounds: int | None = None):
     jumps = int(np.ceil(np.log2(max(n, 2)))) + 1
 
     INF = jnp.asarray(np.inf, dtype=W.dtype)
-    TRASH = n  # extra buffer slot absorbing masked writes
     iota = jnp.arange(n, dtype=jnp.int32)
     BIGID = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
     # canonical undirected edge id gives a strict total order on edges,
@@ -250,42 +309,8 @@ def boruvka_jax(W, max_rounds: int | None = None):
         row_eid = jnp.min(jnp.where(at_min, eid, BIGID), axis=1)
         row_j = jnp.argmin(jnp.where(at_min & (eid == row_eid[:, None]), eid, BIGID), axis=1)
         row_has = jnp.isfinite(row_w)
-        # --- per-component min by composite key ---
-        comp_w = jnp.full((n,), INF, dtype=W.dtype).at[labels].min(row_w)
-        w_hit = row_has & (row_w == comp_w[labels])
-        comp_eid = jnp.full((n,), BIGID).at[labels].min(jnp.where(w_hit, row_eid, BIGID))
-        full_hit = w_hit & (row_eid == comp_eid[labels])
-        comp_row = jnp.full((n,), n, dtype=jnp.int32).at[labels].min(
-            jnp.where(full_hit, iota, n)
-        )  # label -> row index holding the component's chosen edge
-        has_edge = comp_row < n
-        safe_row = jnp.minimum(comp_row, n - 1)
-        comp_u = safe_row
-        comp_v = row_j[safe_row].astype(jnp.int32)
-        comp_wt = row_w[safe_row]
-        comp_tgt = labels[comp_v]
-        # mirrored 2-cycle iff both components chose the same canonical edge
-        is_mirror = has_edge & (comp_eid[comp_tgt] == comp_eid)
-        keep = has_edge & ~(is_mirror & (iota > comp_tgt))
-        # hook: parent = target label; mirror pairs root at the lower label
-        parent = jnp.where(has_edge, comp_tgt, iota)
-        parent = jnp.where(is_mirror & (iota < comp_tgt), iota, parent)
-
-        def jump(m, _):
-            return m[m], None
-
-        # unroll: the body is one gather — while-loop dispatch dominates
-        parent, _ = jax.lax.scan(jump, parent, None, length=jumps, unroll=4)
-        new_labels = parent[labels]
-        # append kept edges: slot via cumsum, rejects land in TRASH
-        slot = n_edges + jnp.cumsum(keep.astype(jnp.int32)) - 1
-        slot = jnp.where(keep, jnp.minimum(slot, n - 1), TRASH)
-        eu = eu.at[slot].set(comp_u.astype(jnp.int32))
-        ev = ev.at[slot].set(comp_v)
-        ew = ew.at[slot].set(comp_wt)
-        valid = valid.at[slot].set(keep)
-        n_new = jnp.sum(keep.astype(jnp.int32))
-        return (new_labels, eu, ev, ew, valid, n_edges + n_new), None
+        return _boruvka_round_tail(labels, row_w, row_eid, row_j, row_has,
+                                   eu, ev, ew, valid, n_edges, n, jumps), None
 
     labels0 = jnp.arange(n, dtype=jnp.int32)
     eu0 = jnp.zeros((n + 1,), dtype=jnp.int32)
@@ -296,6 +321,136 @@ def boruvka_jax(W, max_rounds: int | None = None):
     state, _ = jax.lax.scan(round_fn, state, None, length=max_rounds, unroll=2)
     _, eu, ev, ew, valid, _ = state
     return eu[:-1], ev[:-1], ew[:-1], valid[:-1]
+
+
+def boruvka_shard_jax(W_strip, n: int, axis: str, max_rounds: int | None = None):
+    """Borůvka MST over a row-block-sharded dense weight matrix.
+
+    Call INSIDE ``shard_map``: ``W_strip`` is this shard's contiguous
+    (n/k, n) row strip of the full mutual-reachability matrix (full
+    columns), ``axis`` the mesh axis name the rows are blocked over.
+
+    Per round each shard reduces its own rows' composite
+    (w, canonical-edge-id) minima — bitwise the values the dense kernel
+    computes for those rows, because a row's min only ever reads that
+    row — then one tiled ``all_gather`` per array reassembles the (n,)
+    reduction results in global row order and the component aggregation
+    / hooking / pointer-jumping tail runs replicated on every shard
+    (``_boruvka_round_tail``, the dense code verbatim on identical
+    inputs).  Outputs are therefore replicated and bitwise-identical to
+    ``boruvka_jax(W)`` on ANY mesh shape, k = 1 included.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    m = W_strip.shape[0]
+    if n * n >= np.iinfo(np.int32).max:
+        raise ValueError("boruvka_shard_jax supports n <= 46340 (int32 edge ids)")
+    if max_rounds is None:
+        max_rounds = max(1, int(np.ceil(np.log2(max(n, 2)))) + 1)
+    jumps = int(np.ceil(np.log2(max(n, 2)))) + 1
+
+    INF = jnp.asarray(np.inf, dtype=W_strip.dtype)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    BIGID = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    rows = (jax.lax.axis_index(axis).astype(jnp.int32) * m
+            + jnp.arange(m, dtype=jnp.int32))
+    eid = jnp.minimum(rows[:, None], iota[None, :]) * n + jnp.maximum(
+        rows[:, None], iota[None, :]
+    )
+
+    def round_fn(state, _):
+        labels, eu, ev, ew, valid, n_edges = state
+        same = labels[rows][:, None] == labels[None, :]
+        masked = jnp.where(same, INF, W_strip)
+        masked = jnp.where(rows[:, None] == iota[None, :], INF, masked)
+        # --- per-row min by composite key (w, edge_id), local rows ---
+        rw = jnp.min(masked, axis=1)
+        at_min = masked == rw[:, None]
+        re = jnp.min(jnp.where(at_min, eid, BIGID), axis=1)
+        rj = jnp.argmin(
+            jnp.where(at_min & (eid == re[:, None]), eid, BIGID), axis=1
+        ).astype(jnp.int32)
+        row_w = jax.lax.all_gather(rw, axis, tiled=True)
+        row_eid = jax.lax.all_gather(re, axis, tiled=True)
+        row_j = jax.lax.all_gather(rj, axis, tiled=True)
+        row_has = jnp.isfinite(row_w)
+        return _boruvka_round_tail(labels, row_w, row_eid, row_j, row_has,
+                                   eu, ev, ew, valid, n_edges, n, jumps), None
+
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    eu0 = jnp.zeros((n + 1,), dtype=jnp.int32)
+    ev0 = jnp.zeros((n + 1,), dtype=jnp.int32)
+    ew0 = jnp.zeros((n + 1,), dtype=W_strip.dtype)
+    valid0 = jnp.zeros((n + 1,), dtype=bool)
+    state = (labels0, eu0, ev0, ew0, valid0, jnp.asarray(0, jnp.int32))
+    state, _ = jax.lax.scan(round_fn, state, None, length=max_rounds, unroll=2)
+    _, eu, ev, ew, valid, _ = state
+    return eu[:-1], ev[:-1], ew[:-1], valid[:-1]
+
+
+def _grid_round_minima(grid, cd, labels, hopeless, views, NT, T, n, bn):
+    """Front half of one grid-pruned Borůvka round: scan the given block
+    views (all blocks, or one shard's contiguous slice) and return the
+    stacked per-block composite minima ``(bws, bes)``.
+
+    Per-block results depend only on that block's rows and the (static)
+    grid, never on which other blocks ride the same scan — that is what
+    lets ``boruvka_grid_shard_jax`` split the views across shards and
+    reassemble bitwise-identical (row_w, row_eid) arrays.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.grid import _tile_slices
+
+    INF = jnp.float32(jnp.inf)
+    BIGID = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+
+    def block_fn(carry, blk):
+        xb, xx, xv, xo, ordr, lbs = blk
+        lab_r = labels[xo]
+        cd_r = cd[xo]
+        alive = xv & ~hopeless[xo]
+
+        def cond(st):
+            t, bw, _ = st
+            thr = jnp.maximum(lbs[jnp.minimum(t, NT - 1)], cd_r)
+            return (t < NT) & jnp.any(alive & (thr <= bw))
+
+        def body(st):
+            t, bw, be = st
+            ys, yy, yv, yo = _tile_slices(grid, ordr[t], T)
+            xy = jax.lax.dot_general(xb, ys, (((1,), (1,)), ((), ())))
+            dm = jnp.sqrt(
+                jnp.maximum((xx[:, None] + yy[None, :]) - 2.0 * xy, 0.0)
+            )
+            w = jnp.maximum(dm, jnp.maximum(cd_r[:, None], cd[yo][None, :]))
+            ok = xv[:, None] & yv[None, :] & (
+                labels[yo][None, :] != lab_r[:, None]
+            )
+            w = jnp.where(ok, w, INF)
+            eid = jnp.minimum(xo[:, None], yo[None, :]) * n + jnp.maximum(
+                xo[:, None], yo[None, :]
+            )
+            eid = jnp.where(ok, eid, BIGID)
+            rw = jnp.min(w, axis=1)
+            re = jnp.min(jnp.where(w == rw[:, None], eid, BIGID), axis=1)
+            better = (rw < bw) | ((rw == bw) & (re < be))
+            return (
+                t + 1,
+                jnp.where(better, rw, bw),
+                jnp.where(better, re, be),
+            )
+
+        _, bw, be = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), jnp.full((bn,), INF), jnp.full((bn,), BIGID)),
+        )
+        return carry, (bw, be)
+
+    _, (bws, bes) = jax.lax.scan(block_fn, 0, views)
+    return bws, bes
 
 
 def boruvka_grid_jax(grid, cd, max_rounds: int | None = None,
@@ -345,7 +500,7 @@ def boruvka_grid_jax(grid, cd, max_rounds: int | None = None,
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.grid import _block_views, _tile_slices
+    from repro.kernels.grid import _block_views
 
     n = grid.pts.shape[0]
     if n * n >= np.iinfo(np.int32).max:
@@ -357,15 +512,12 @@ def boruvka_grid_jax(grid, cd, max_rounds: int | None = None,
     NT = grid.tile_lo.shape[0]
     T = n // NT
     bn = min(block, n)
-    INF = jnp.float32(jnp.inf)
-    TRASH = n
     iota = jnp.arange(n, dtype=jnp.int32)
-    BIGID = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
     cd = jnp.asarray(cd, jnp.float32)
 
     # block views + per-block tile visit orders never change across
     # rounds (the grid is static); compute once outside the scan
-    xbs, xxs, xvs, xos, orders, lbss = _block_views(grid, bn)
+    views = _block_views(grid, bn)
     valid_orig = jnp.zeros((n,), bool).at[grid.orig].set(grid.valid)
     total_valid = jnp.sum(grid.valid.astype(jnp.int32))
 
@@ -377,51 +529,8 @@ def boruvka_grid_jax(grid, cd, max_rounds: int | None = None,
             valid_orig.astype(jnp.int32)
         )
         hopeless = cnt[labels] >= total_valid
-
-        def block_fn(carry, blk):
-            xb, xx, xv, xo, ordr, lbs = blk
-            lab_r = labels[xo]
-            cd_r = cd[xo]
-            alive = xv & ~hopeless[xo]
-
-            def cond(st):
-                t, bw, _ = st
-                thr = jnp.maximum(lbs[jnp.minimum(t, NT - 1)], cd_r)
-                return (t < NT) & jnp.any(alive & (thr <= bw))
-
-            def body(st):
-                t, bw, be = st
-                ys, yy, yv, yo = _tile_slices(grid, ordr[t], T)
-                xy = jax.lax.dot_general(xb, ys, (((1,), (1,)), ((), ())))
-                dm = jnp.sqrt(
-                    jnp.maximum((xx[:, None] + yy[None, :]) - 2.0 * xy, 0.0)
-                )
-                w = jnp.maximum(dm, jnp.maximum(cd_r[:, None], cd[yo][None, :]))
-                ok = xv[:, None] & yv[None, :] & (
-                    labels[yo][None, :] != lab_r[:, None]
-                )
-                w = jnp.where(ok, w, INF)
-                eid = jnp.minimum(xo[:, None], yo[None, :]) * n + jnp.maximum(
-                    xo[:, None], yo[None, :]
-                )
-                eid = jnp.where(ok, eid, BIGID)
-                rw = jnp.min(w, axis=1)
-                re = jnp.min(jnp.where(w == rw[:, None], eid, BIGID), axis=1)
-                better = (rw < bw) | ((rw == bw) & (re < be))
-                return (
-                    t + 1,
-                    jnp.where(better, rw, bw),
-                    jnp.where(better, re, be),
-                )
-
-            _, bw, be = jax.lax.while_loop(
-                cond, body,
-                (jnp.int32(0), jnp.full((bn,), INF), jnp.full((bn,), BIGID)),
-            )
-            return carry, (bw, be)
-
-        _, (bws, bes) = jax.lax.scan(
-            block_fn, 0, (xbs, xxs, xvs, xos, orders, lbss)
+        bws, bes = _grid_round_minima(
+            grid, cd, labels, hopeless, views, NT, T, n, bn
         )
         row_w = jnp.zeros((n,), jnp.float32).at[grid.orig].set(bws.reshape(n))
         row_eid = jnp.zeros((n,), jnp.int32).at[grid.orig].set(bes.reshape(n))
@@ -433,39 +542,87 @@ def boruvka_grid_jax(grid, cd, max_rounds: int | None = None,
         row_j = jnp.clip(jnp.where(lo_e == iota, hi_e, lo_e), 0, n - 1)
         row_has = jnp.isfinite(row_w)
         # --- component aggregation: boruvka_jax verbatim ---
-        comp_w = jnp.full((n,), INF, dtype=row_w.dtype).at[labels].min(row_w)
-        w_hit = row_has & (row_w == comp_w[labels])
-        comp_eid = jnp.full((n,), BIGID).at[labels].min(
-            jnp.where(w_hit, row_eid, BIGID)
-        )
-        full_hit = w_hit & (row_eid == comp_eid[labels])
-        comp_row = jnp.full((n,), n, dtype=jnp.int32).at[labels].min(
-            jnp.where(full_hit, iota, n)
-        )
-        has_edge = comp_row < n
-        safe_row = jnp.minimum(comp_row, n - 1)
-        comp_u = safe_row
-        comp_v = row_j[safe_row].astype(jnp.int32)
-        comp_wt = row_w[safe_row]
-        comp_tgt = labels[comp_v]
-        is_mirror = has_edge & (comp_eid[comp_tgt] == comp_eid)
-        keep = has_edge & ~(is_mirror & (iota > comp_tgt))
-        parent = jnp.where(has_edge, comp_tgt, iota)
-        parent = jnp.where(is_mirror & (iota < comp_tgt), iota, parent)
+        return _boruvka_round_tail(labels, row_w, row_eid, row_j, row_has,
+                                   eu, ev, ew, valid, n_edges, n, jumps), None
 
-        def jump(m, _):
-            return m[m], None
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    eu0 = jnp.zeros((n + 1,), dtype=jnp.int32)
+    ev0 = jnp.zeros((n + 1,), dtype=jnp.int32)
+    ew0 = jnp.zeros((n + 1,), dtype=jnp.float32)
+    valid0 = jnp.zeros((n + 1,), dtype=bool)
+    state = (labels0, eu0, ev0, ew0, valid0, jnp.asarray(0, jnp.int32))
+    state, _ = jax.lax.scan(round_fn, state, None, length=max_rounds, unroll=2)
+    _, eu, ev, ew, valid, _ = state
+    return eu[:-1], ev[:-1], ew[:-1], valid[:-1]
 
-        parent, _ = jax.lax.scan(jump, parent, None, length=jumps, unroll=4)
-        new_labels = parent[labels]
-        slot = n_edges + jnp.cumsum(keep.astype(jnp.int32)) - 1
-        slot = jnp.where(keep, jnp.minimum(slot, n - 1), TRASH)
-        eu = eu.at[slot].set(comp_u.astype(jnp.int32))
-        ev = ev.at[slot].set(comp_v)
-        ew = ew.at[slot].set(comp_wt)
-        valid = valid.at[slot].set(keep)
-        n_new = jnp.sum(keep.astype(jnp.int32))
-        return (new_labels, eu, ev, ew, valid, n_edges + n_new), None
+
+def boruvka_grid_shard_jax(grid, cd, axis: str, k: int,
+                           max_rounds: int | None = None, block: int = 64):
+    """Grid-pruned Borůvka with the per-block candidate scans sharded.
+
+    Call INSIDE ``shard_map`` with every input replicated (the grid
+    itself is small); ``k`` is the static size of mesh axis ``axis``.
+    The query-block axis of the (static) block views is what gets
+    sharded: shard i scans its contiguous ``ceil(NB/k)`` slice of the
+    blocks, one tiled ``all_gather`` per round reassembles the block
+    minima in global block order, and the scatter + component tail run
+    replicated — ``boruvka_grid_jax`` verbatim on identical inputs.
+
+    When the axis does not divide the block count (e.g. 3 devices over
+    a pow-2 table) the trailing shards re-scan the last block and the
+    gathered tail is dropped — a duplicate-tail lift, same as
+    ``grid_core_distances_shard``.  Per-block minima don't depend on
+    the blocking (kernels/grid.py's exactness contract), so outputs
+    are bitwise ``boruvka_grid_jax`` — and therefore bitwise
+    ``boruvka_jax`` on the corresponding dense matrix — on any mesh.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.grid import _block_views
+
+    n = grid.pts.shape[0]
+    if n * n >= np.iinfo(np.int32).max:
+        raise ValueError("boruvka_grid_shard_jax supports n <= 46340 (int32 edge ids)")
+    if max_rounds is None:
+        max_rounds = max(1, int(np.ceil(np.log2(max(n, 2)))) + 1)
+    jumps = int(np.ceil(np.log2(max(n, 2)))) + 1
+
+    NT = grid.tile_lo.shape[0]
+    T = n // NT
+    bn = min(block, n)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    cd = jnp.asarray(cd, jnp.float32)
+
+    views = _block_views(grid, bn)
+    NB = views[0].shape[0]
+    NBk = -(-NB // k)  # ceil: trailing shards duplicate the last block
+    shard = jax.lax.axis_index(axis)
+    blk_ids = jnp.minimum(
+        shard * NBk + jnp.arange(NBk, dtype=jnp.int32), NB - 1)
+    views_l = jax.tree_util.tree_map(lambda a: a[blk_ids], views)
+    valid_orig = jnp.zeros((n,), bool).at[grid.orig].set(grid.valid)
+    total_valid = jnp.sum(grid.valid.astype(jnp.int32))
+
+    def round_fn(state, _):
+        labels, eu, ev, ew, valid, n_edges = state
+        cnt = jnp.zeros((n,), jnp.int32).at[labels].add(
+            valid_orig.astype(jnp.int32)
+        )
+        hopeless = cnt[labels] >= total_valid
+        bws_l, bes_l = _grid_round_minima(
+            grid, cd, labels, hopeless, views_l, NT, T, n, bn
+        )
+        bws = jax.lax.all_gather(bws_l, axis, tiled=True)[:NB]
+        bes = jax.lax.all_gather(bes_l, axis, tiled=True)[:NB]
+        row_w = jnp.zeros((n,), jnp.float32).at[grid.orig].set(bws.reshape(n))
+        row_eid = jnp.zeros((n,), jnp.int32).at[grid.orig].set(bes.reshape(n))
+        lo_e = row_eid // n
+        hi_e = row_eid - lo_e * n
+        row_j = jnp.clip(jnp.where(lo_e == iota, hi_e, lo_e), 0, n - 1)
+        row_has = jnp.isfinite(row_w)
+        return _boruvka_round_tail(labels, row_w, row_eid, row_j, row_has,
+                                   eu, ev, ew, valid, n_edges, n, jumps), None
 
     labels0 = jnp.arange(n, dtype=jnp.int32)
     eu0 = jnp.zeros((n + 1,), dtype=jnp.int32)

@@ -59,6 +59,7 @@ __all__ = [
     "GridIndex",
     "build_grid",
     "grid_core_distances",
+    "grid_core_distances_shard",
     "grid_assign",
     "morton_codes",
     "tile_gap_sq",
@@ -237,64 +238,117 @@ def grid_core_distances(grid: GridIndex, n_b, extent, min_pts: int, dim: int,
     NT = grid.tile_lo.shape[0]
     T = Lp // NT
     bn = min(block, Lp)
-    NB = Lp // bn
     K = min(int(min_pts), Lp)
-    INF = jnp.float32(jnp.inf)
     mp_f = float(min_pts)
 
-    xbs, xxs, xvs, xos, orders, lbss = _block_views(grid, bn)
+    views = _block_views(grid, bn)
 
     def block_fn(cd_out, xs):
-        xb, xx, xv, xo, order, lbs = xs
+        xo = xs[3]
+        vals = _cd_block_values(grid, n_b, extent, mp_f, dim, K, NT, T, bn, xs)
+        return cd_out.at[xo].set(vals), None
 
-        def cond(st):
-            t, bd, _ = st
-            kth = jnp.max(jnp.where(xv, bd[:, K - 1], -INF))
-            return (t < NT) & (lbs[jnp.minimum(t, NT - 1)] <= kth)
-
-        def body(st):
-            t, bd, bi = st
-            ys, yy, yv, yo = _tile_slices(grid, order[t], T)
-            xy = jax.lax.dot_general(xb, ys, (((1,), (1,)), ((), ())))
-            # exact ref arithmetic: (xx + yy) - 2*xy, clamp, sqrt
-            dm = jnp.sqrt(jnp.maximum((xx[:, None] + yy[None, :]) - 2.0 * xy, 0.0))
-            dm = jnp.where(yo[None, :] == xo[:, None], 0.0, dm)  # ref's zero diag
-            dm = jnp.where(yv[None, :], dm, INF)
-            ci = jnp.where(yv, yo, jnp.int32(Lp))
-            ci = jnp.broadcast_to(ci[None, :], (bn, T))
-            # exact lexicographic (d, original index) top-K merge
-            sd, si = jax.lax.sort(
-                (jnp.concatenate([bd, dm], axis=1),
-                 jnp.concatenate([bi, ci], axis=1)),
-                dimension=1, num_keys=2,
-            )
-            return t + 1, sd[:, :K], si[:, :K]
-
-        _, buf_d, buf_i = jax.lax.while_loop(
-            cond, body,
-            (jnp.int32(0), jnp.full((bn, K), INF), jnp.full((bn, K), jnp.int32(Lp))),
-        )
-        # --- ref.bubble_core_distances epilogue, verbatim over the K-prefix
-        rows = jnp.arange(bn)
-        safe_i = jnp.minimum(buf_i, Lp - 1)
-        n_sorted = jnp.where(buf_i < Lp, n_b[safe_i], 0.0)
-        csum = jnp.cumsum(n_sorted, axis=1)
-        reach = csum >= mp_f
-        idx = jnp.where(reach.any(axis=1), jnp.argmax(reach, axis=1), K - 1)
-        before = jnp.where(idx > 0, csum[rows, jnp.maximum(idx - 1, 0)], 0.0)
-        k_resid = jnp.maximum(mp_f - before, 1.0)
-        C = safe_i[rows, idx]
-        nC = jnp.maximum(n_b[C], 1.0)
-        k_resid = jnp.clip(k_resid, 0.0, nC)
-        nnd = _ref.dim_root(k_resid / nC, dim) * extent[C]
-        cdb = buf_d[rows, idx] + nnd
-        cd_out = cd_out.at[xo].set(jnp.where(xv, cdb, 0.0))
-        return cd_out, None
-
-    cd, _ = jax.lax.scan(
-        block_fn, jnp.zeros(Lp, jnp.float32), (xbs, xxs, xvs, xos, orders, lbss)
-    )
+    cd, _ = jax.lax.scan(block_fn, jnp.zeros(Lp, jnp.float32), views)
     return cd
+
+
+def _cd_block_values(grid, n_b, extent, mp_f, dim, K, NT, T, bn, xs):
+    """One query block's pruned exact top-K sweep + Eq. 6 epilogue.
+
+    Returns the (bn,) core-distance values for the block (0.0 on invalid
+    rows).  A block's result depends only on its own rows and the static
+    grid — never on which other blocks share the scan — which is what
+    lets ``grid_core_distances_shard`` split the block axis across a
+    mesh and reassemble bitwise-identical output.
+    """
+    Lp = grid.pts.shape[0]
+    INF = jnp.float32(jnp.inf)
+    xb, xx, xv, xo, order, lbs = xs
+
+    def cond(st):
+        t, bd, _ = st
+        kth = jnp.max(jnp.where(xv, bd[:, K - 1], -INF))
+        return (t < NT) & (lbs[jnp.minimum(t, NT - 1)] <= kth)
+
+    def body(st):
+        t, bd, bi = st
+        ys, yy, yv, yo = _tile_slices(grid, order[t], T)
+        xy = jax.lax.dot_general(xb, ys, (((1,), (1,)), ((), ())))
+        # exact ref arithmetic: (xx + yy) - 2*xy, clamp, sqrt
+        dm = jnp.sqrt(jnp.maximum((xx[:, None] + yy[None, :]) - 2.0 * xy, 0.0))
+        dm = jnp.where(yo[None, :] == xo[:, None], 0.0, dm)  # ref's zero diag
+        dm = jnp.where(yv[None, :], dm, INF)
+        ci = jnp.where(yv, yo, jnp.int32(Lp))
+        ci = jnp.broadcast_to(ci[None, :], (bn, T))
+        # exact lexicographic (d, original index) top-K merge
+        sd, si = jax.lax.sort(
+            (jnp.concatenate([bd, dm], axis=1),
+             jnp.concatenate([bi, ci], axis=1)),
+            dimension=1, num_keys=2,
+        )
+        return t + 1, sd[:, :K], si[:, :K]
+
+    _, buf_d, buf_i = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), jnp.full((bn, K), INF), jnp.full((bn, K), jnp.int32(Lp))),
+    )
+    # --- ref.bubble_core_distances epilogue, verbatim over the K-prefix
+    rows = jnp.arange(bn)
+    safe_i = jnp.minimum(buf_i, Lp - 1)
+    n_sorted = jnp.where(buf_i < Lp, n_b[safe_i], 0.0)
+    csum = jnp.cumsum(n_sorted, axis=1)
+    reach = csum >= mp_f
+    idx = jnp.where(reach.any(axis=1), jnp.argmax(reach, axis=1), K - 1)
+    before = jnp.where(idx > 0, csum[rows, jnp.maximum(idx - 1, 0)], 0.0)
+    k_resid = jnp.maximum(mp_f - before, 1.0)
+    C = safe_i[rows, idx]
+    nC = jnp.maximum(n_b[C], 1.0)
+    k_resid = jnp.clip(k_resid, 0.0, nC)
+    nnd = _ref.dim_root(k_resid / nC, dim) * extent[C]
+    cdb = buf_d[rows, idx] + nnd
+    return jnp.where(xv, cdb, 0.0)
+
+
+def grid_core_distances_shard(grid: GridIndex, n_b, extent, min_pts: int,
+                              dim: int, axis: str, k: int,
+                              block: int = DEFAULT_BLOCK):
+    """`grid_core_distances` with the query-block scan sharded over a
+    mesh axis.  Call INSIDE ``shard_map`` with every input replicated:
+    shard i sweeps its contiguous ``ceil(NB/k)`` slice of the block
+    views, one tiled ``all_gather`` reassembles the block values in
+    global block order, and the scatter back to original row order runs
+    replicated.  When the axis does not divide the block count (e.g. 3
+    devices over a pow-2 table) the trailing shards re-scan the last
+    block and the gathered tail is dropped — a duplicate-tail lift, so
+    no shard shape depends on divisibility.  Per-block values don't
+    depend on the blocking (the module's exactness contract), so output
+    is bitwise ``grid_core_distances`` — itself bitwise
+    `ref.bubble_core_distances` — on any mesh shape."""
+    n_b = jnp.asarray(n_b, jnp.float32)
+    extent = jnp.asarray(extent, jnp.float32)
+    Lp, d = grid.pts.shape
+    NT = grid.tile_lo.shape[0]
+    T = Lp // NT
+    bn = min(block, Lp)
+    NB = Lp // bn
+    NBk = -(-NB // k)  # ceil: trailing shards duplicate the last block
+    K = min(int(min_pts), Lp)
+    mp_f = float(min_pts)
+
+    views = _block_views(grid, bn)
+    shard = jax.lax.axis_index(axis)
+    blk_ids = jnp.minimum(
+        shard * NBk + jnp.arange(NBk, dtype=jnp.int32), NB - 1)
+    views_l = jax.tree_util.tree_map(lambda a: a[blk_ids], views)
+
+    def block_fn(carry, xs):
+        return carry, _cd_block_values(grid, n_b, extent, mp_f, dim, K, NT, T, bn, xs)
+
+    _, vals_l = jax.lax.scan(block_fn, 0, views_l)
+    vals = jax.lax.all_gather(vals_l, axis, tiled=True)[:NB]  # (NB, bn)
+    # views[3] (grid.orig blocked) is a permutation of rows: one scatter
+    # reassembles original order exactly like the dense per-block scatter
+    return jnp.zeros(Lp, jnp.float32).at[views[3].reshape(Lp)].set(vals.reshape(Lp))
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

@@ -379,16 +379,121 @@ def bubble_table(LS, SS, N, ids):
     return rep, extent, Ng, center
 
 
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions (>= 0.6 top-level API, older
+    releases ship it in experimental).  Replication checking is disabled:
+    the sharded offline stages deliberately RETURN replicated values —
+    every shard holds identical bits by construction (tiled all_gathers
+    feeding replicated tails) — which the checker cannot see through."""
+    try:
+        smap, check_kw = jax.shard_map, {"check_vma": False}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as smap
+
+        check_kw = {"check_rep": False}
+    return smap(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **check_kw)
+
+
+def _sharded_mst_stage(rep, n_b, extent, n_valid, min_pts: int, mesh,
+                       axis: str, spatial: bool):
+    """The O(L²) heart of the offline pass — Eq. 6 core distances, d_m
+    candidate weights, Borůvka rounds — under ONE ``shard_map`` over the
+    ``axis`` row blocks of the mesh (DESIGN.md §12).
+
+    The bit-parity contract with the single-device path rests on a
+    division of labor: the (Lp, Lp) euclidean distance matrix — the ONE
+    computation whose bits are shape-sensitive (XLA lowers the
+    ``xx + yy - 2·x@yᵀ`` dot differently for different output shapes,
+    ulp-level) — is computed REPLICATED at exactly the dense path's
+    shape, and each shard then takes a row-strip SLICE of it.  Everything
+    downstream of the slice is bit-determined per row given those
+    distance bits: stable sort has a unique answer, cumsum over
+    integer-valued f32 masses is exact, min/max reductions are
+    order-insensitive, and the Borůvka component/hook tail runs
+    replicated on tiled all_gathers.  So the returned (Lp,) edge buffers
+    are replicated and bitwise the single-device kernels on any mesh
+    shape, while the expensive per-row work (the sort-heavy Eq. 6 scan
+    and each Borůvka round's (m, n) min-reductions) runs at 1/k cost.
+
+    Inputs are pinned to replicated sharding: the table is small (the
+    whole point of the summary) and replicating it keeps every
+    full-column reduction in single-device order.  When the device count
+    does not divide Lp (never the case for power-of-two meshes over the
+    pow2-bucketed table), the MATERIALIZED distance matrix is padded with
+    +inf rows/cols after the fact — an exact, bit-inert lift.
+
+    Like the grid layer, this stage carries jnp-reference bits on BOTH
+    backends (the strip kernels are the ref path).
+    """
+    from repro.core.mst import boruvka_grid_shard_jax, boruvka_shard_jax
+    from repro.kernels.grid import build_grid, grid_core_distances_shard
+
+    P = jax.sharding.PartitionSpec
+    Lp, d = rep.shape
+    k = int(mesh.shape[axis])
+    n = Lp + ((-Lp) % k)  # lifted system size; == Lp for pow2 meshes
+    repl = jax.sharding.NamedSharding(mesh, P())
+    rep = jax.lax.with_sharding_constraint(rep, repl)
+    n_b = jax.lax.with_sharding_constraint(n_b, repl)
+    extent = jax.lax.with_sharding_constraint(extent, repl)
+
+    if spatial:
+        grid = build_grid(rep, jnp.arange(Lp) < n_valid)
+
+        def stage(grid, n_b, extent):
+            cd = grid_core_distances_shard(grid, n_b, extent, min_pts, d, axis, k)
+            return boruvka_grid_shard_jax(grid, cd, axis, k)
+
+        f = _shard_map(stage, mesh, in_specs=(P(), P(), P()),
+                       out_specs=(P(), P(), P(), P()))
+        eu, ev, ew, valid = f(grid, n_b, extent)
+        return eu[:Lp], ev[:Lp], ew[:Lp], valid[:Lp]
+
+    def stage(rep_f, n_b_f, extent_f, n_valid_):
+        # replicated (Lp, Lp) distance matrix, every intermediate pinned
+        # (ref.pairwise_dist_pinned) so the bits cannot depend on the
+        # mesh-shaped consumers this program inlines it next to
+        dm = _ref.pairwise_dist_pinned(rep_f)
+        nb_l, ext_l = n_b_f, extent_f
+        if n != Lp:  # exact lift of the materialized matrix
+            dm = jnp.pad(dm, ((0, n - Lp), (0, n - Lp)),
+                         constant_values=jnp.inf)
+            nb_l = jnp.pad(n_b_f, (0, n - Lp))
+            ext_l = jnp.pad(extent_f, (0, n - Lp))
+        m = n // k
+        i0 = jax.lax.axis_index(axis).astype(jnp.int32) * m
+        rows = i0 + jnp.arange(m, dtype=jnp.int32)
+        dm_s = jax.lax.dynamic_slice_in_dim(dm, i0, m, 0)
+        cd_s = _ref.bubble_core_distances_from_dm(
+            dm_s, rows, nb_l, ext_l, min_pts, d)
+        cd = jax.lax.all_gather(cd_s, axis, tiled=True)
+        W_s = jnp.maximum(dm_s, jnp.maximum(cd_s[:, None], cd[None, :]))
+        cols = jnp.arange(n, dtype=jnp.int32)
+        W_s = jnp.where(rows[:, None] == cols[None, :], 0.0, W_s)
+        pad_r = rows >= n_valid_
+        pad_c = cols >= n_valid_
+        W_s = jnp.where(pad_r[:, None] | pad_c[None, :], jnp.inf, W_s)
+        return boruvka_shard_jax(W_s, n, axis)
+
+    f = _shard_map(stage, mesh, in_specs=(P(), P(), P(), P()),
+                   out_specs=(P(), P(), P(), P()))
+    eu, ev, ew, valid = f(rep, n_b, extent, n_valid)
+    # real edges fit in Lp-1 slots; lifted rows never produce any
+    return eu[:Lp], ev[:Lp], ew[:Lp], valid[:Lp]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "min_pts", "use_ref", "method", "allow_single", "spatial", "with_w",
+        "mesh", "mesh_axis",
     ),
 )
 def _offline_pipeline(
     rep, n_b, extent, n_valid, mcs, min_pts: int, use_ref: bool,
     method: str = "eom", allow_single: bool = False,
     spatial: bool = False, with_w: bool = True,
+    mesh=None, mesh_axis: str = "data",
 ):
     """Device-side offline pass over a size-bucketed bubble table, fused
     end to end under ONE jit: (Lp, Lp) mutual-reachability matrix (Eqs.
@@ -398,14 +503,23 @@ def _offline_pipeline(
     are padding (weight 0, reps at _PAD_COORD): their W rows/cols are
     forced to +inf so they stay isolated in the MST, and the hierarchy
     stage re-attaches them at PAD_DIST where they are invisible to
-    stabilities and labels (core.hierarchy_jax docstring)."""
+    stabilities and labels (core.hierarchy_jax docstring).
+
+    With ``mesh`` (a `jax.sharding.Mesh`, static) the O(L²) stage runs
+    row-block sharded over ``mesh_axis`` under shard_map
+    (`_sharded_mst_stage`) and the small hierarchy stage runs replicated
+    on its gathered edge buffers; results are bitwise the single-device
+    path (never W — mesh callers must not ask for it)."""
     from repro.core.hierarchy_jax import hierarchy_fixed
     from repro.core.mst import boruvka_grid_jax, boruvka_jax
 
     iota = jnp.arange(rep.shape[0])
     is_pad = iota >= n_valid
     out = {}
-    if spatial:
+    if mesh is not None:
+        eu, ev, ew, valid = _sharded_mst_stage(
+            rep, n_b, extent, n_valid, min_pts, mesh, mesh_axis, spatial)
+    elif spatial:
         # grid-pruned sub-quadratic pass (kernels.grid): cd and the MST
         # come from tile-pruned exact searches and carry jnp-reference
         # bits on BOTH backends; the (Lp, Lp) matrix is only assembled
@@ -518,7 +632,7 @@ def offline_recluster_from_table(
     rep, n_b, extent, min_pts: int, min_cluster_size: float | None = None,
     use_ref: bool | None = None, return_w: bool = False,
     method: str = "eom", allow_single_cluster: bool = False,
-    spatial_index: bool = False,
+    spatial_index: bool = False, mesh=None, mesh_axis: str = "data",
 ):
     """The streaming engine's offline hot path, from a derived bubble table.
 
@@ -542,10 +656,16 @@ def offline_recluster_from_table(
         Off by default — at large L the matrix transfer dwarfs everything.
       method, allow_single_cluster: flat-extraction policy (oracle-
         compatible "eom"/"leaf").
+      mesh, mesh_axis: optional `jax.sharding.Mesh` — run the O(L²)
+        stage row-block-sharded over ``mesh_axis`` (bitwise the
+        single-device result; incompatible with ``return_w``, which is
+        the matrix the sharded pass exists to never materialize).
 
     Returns:
       OfflineClusterResult; with ``return_w=True``, ``(W, result)``.
     """
+    if mesh is not None and return_w:
+        raise ValueError("return_w is unsupported on the sharded (mesh=) path")
     use = _resolve_ref(use_ref)
     rep = np.asarray(rep, dtype=np.float64)
     Ng = np.asarray(n_b, dtype=np.float64)
@@ -578,7 +698,9 @@ def offline_recluster_from_table(
         spatial=bool(spatial_index),
         # the spatial pass exists to NOT build the (Lp, Lp) matrix;
         # only materialize it when the caller explicitly asked
-        with_w=(not spatial_index) or bool(return_w),
+        with_w=((not spatial_index) or bool(return_w)) and mesh is None,
+        mesh=mesh,
+        mesh_axis=mesh_axis,
     )
     W_dev = out.pop("W", None)
     result = _unwrap_result(out, L, mcs, Ng)
@@ -619,11 +741,15 @@ def _unwrap_result(out, L: int, mcs: float, weights: np.ndarray) -> OfflineClust
 
 @functools.partial(
     jax.jit,
-    static_argnames=("min_pts", "use_ref", "method", "allow_single", "spatial"),
+    static_argnames=(
+        "min_pts", "use_ref", "method", "allow_single", "spatial",
+        "mesh", "mesh_axis",
+    ),
 )
 def _device_table_pipeline(
     LS, LSe, SS, SSe, N, alive, mcs, min_pts: int, use_ref: bool,
     method: str = "eom", allow_single: bool = False, spatial: bool = False,
+    mesh=None, mesh_axis: str = "data",
 ):
     """Offline pass straight from a device-resident flat leaf-CF state
     (core.bubble_flat): compact the populated slots to rows 0..L-1
@@ -634,7 +760,18 @@ def _device_table_pipeline(
     crosses the host boundary on the way in — this is the zero-copy
     handoff the streaming engine's device-online mode uses.  The
     compacted representative rows and masses ride along in the output
-    dict so the serve plane gets everything from ONE host sync."""
+    dict so the serve plane gets everything from ONE host sync.
+
+    With ``mesh``, the compaction/derivation reductions are pinned to
+    replicated sharding — the table is small and a GSPMD-split f32 sum
+    would change accumulation order, i.e. bits — and only the quadratic
+    stage inside `_offline_pipeline` row-blocks over the mesh."""
+    if mesh is not None:
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        LS, LSe, SS, SSe, N, alive = (
+            jax.lax.with_sharding_constraint(a, repl)
+            for a in (LS, LSe, SS, SSe, N, alive)
+        )
     Lp = LS.shape[0]
     ok = alive & (N > 0)
     n_valid = jnp.sum(ok.astype(jnp.int32))
@@ -658,6 +795,7 @@ def _device_table_pipeline(
     out = _offline_pipeline(
         rep_c, nb, extent, n_valid, mcs, min_pts, use_ref, method, allow_single,
         spatial=spatial, with_w=not spatial,  # device path never returns W
+        mesh=mesh, mesh_axis=mesh_axis,
     )
     out["rep"] = rep  # origin frame; host adds the f64 origin back
     out["nb"] = nb
@@ -670,7 +808,7 @@ def offline_recluster_from_device_table(
     LS, LSe, SS, SSe, N, alive, origin, min_pts: int,
     min_cluster_size: float | None = None, use_ref: bool | None = None,
     method: str = "eom", allow_single_cluster: bool = False,
-    spatial_index: bool = False,
+    spatial_index: bool = False, mesh=None, mesh_axis: str = "data",
 ):
     """Streaming-engine offline hot path over a `BubbleFlat` view.
 
@@ -691,10 +829,18 @@ def offline_recluster_from_device_table(
     """
     use = _resolve_ref(use_ref)
     mcs = float(min_pts if min_cluster_size is None else min_cluster_size)
+    if mesh is not None:
+        # the flat table's arrays are committed to a single device; re-place
+        # them replicated over the mesh so the sharded jit accepts them
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        LS, LSe, SS, SSe, N, alive = (
+            jax.device_put(a, repl) for a in (LS, LSe, SS, SSe, N, alive)
+        )
     out = _device_table_pipeline(
         LS, LSe, SS, SSe, N, alive,
         jnp.asarray(mcs, jnp.float32), int(min_pts), use,
         method, bool(allow_single_cluster), spatial=bool(spatial_index),
+        mesh=mesh, mesh_axis=mesh_axis,
     )
     out.pop("W", None)  # fused path never transfers the (Lp, Lp) matrix to host
     out = jax.device_get(out)
@@ -892,12 +1038,12 @@ class ClusterBackend:
 
     def offline_recluster_from_table(
         self, rep, n_b, extent, min_pts: int,
-        min_cluster_size: float | None = None, return_w: bool = False,
+        min_cluster_size: float | None = None, return_w: bool = False, **kw,
     ):
         return offline_recluster_from_table(
             rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
             use_ref=self.use_ref, return_w=return_w,
-            spatial_index=self.spatial_index,
+            spatial_index=self.spatial_index, **kw,
         )
 
     def offline_recluster_from_device_table(
@@ -910,15 +1056,17 @@ class ClusterBackend:
             spatial_index=self.spatial_index, **kw,
         )
 
-    def make_flat(self, dim: int, capacity: int = 64):
+    def make_flat(self, dim: int, capacity: int = 64, mesh=None,
+                  mesh_axis: str = "data"):
         """Device-resident flat leaf-CF state (core.bubble_flat) bound to
         this backend's assign kernels — the online summarizer's
-        throughput path (DESIGN.md §8)."""
+        throughput path (DESIGN.md §8).  ``mesh`` bakes the sharded
+        offline pass into every capture the table hands out (§12)."""
         from repro.core.bubble_flat import BubbleFlat
 
         return BubbleFlat(
             dim, use_ref=self.use_ref, capacity=capacity,
-            spatial_index=self.spatial_index,
+            spatial_index=self.spatial_index, mesh=mesh, mesh_axis=mesh_axis,
         )
 
     def make_dynamic(self, min_pts: int, dim: int, capacity: int = 256, **kw):
@@ -938,47 +1086,48 @@ def get_backend(name: str = "auto", spatial_index: bool = False) -> ClusterBacke
 
 
 def bubble_mutual_reachability_sharded(rep, n_b, extent, min_pts: int, mesh, axis: str = "data"):
-    """Mesh-distributed offline pass (DESIGN.md §2): the (L,L) d_m tile
-    computation is row-block sharded over `axis` with shard_map — each
-    device computes its (L/k, L) strip against the replicated (small, by
-    construction ≤ L) bubble table; the only communication is the initial
-    broadcast of the table.  This is how the curation offline pass rides
-    the training mesh at negligible step-time cost.
-
-    Rows are padded to the axis size; callers slice [:L].
+    """Mesh-distributed d_m matrix (DESIGN.md §12): Eq. 6 core distances
+    AND the (L, L) mutual-reachability rows are row-block sharded over
+    `axis` with shard_map — each device runs the sort-heavy Eq. 6 scan
+    and the Eq. 7 max for its (L/k, L) strip, with ONE all_gather to
+    exchange the per-strip core distances.  The euclidean distance
+    matrix itself is computed replicated at the dense path's shape and
+    row-sliced per shard (the dot's bits are output-shape-sensitive;
+    everything downstream of the slice is bit-determined per row), so
+    the result is bitwise identical on every mesh shape, and agrees
+    with `bubble_mutual_reachability` to float32 ulp level (the dense
+    path's fused jit uses FMA contractions the pinned chain forbids).
+    The fused offline pass (`_sharded_mst_stage`) extends this same
+    decomposition through Borůvka.
     """
     from jax.sharding import PartitionSpec as P
 
     rep = jnp.asarray(rep, jnp.float32)
     n_b = jnp.asarray(n_b, jnp.float32)
     extent = jnp.asarray(extent, jnp.float32)
-    L = rep.shape[0]
+    L, d = rep.shape
     k = mesh.shape[axis]
     pad = (-L) % k
-    cd = _bubble_cd(rep, n_b, extent, min_pts)
-    rep_p = jnp.pad(rep, ((0, pad), (0, 0)))
-    cd_p = jnp.pad(cd, (0, pad))
+    Lk = L + pad
 
-    def strip(rep_blk, cd_blk):
-        # local (L/k, L) strip; global row offset for the zero diagonal
-        i = jax.lax.axis_index(axis)
-        m = _ref.mutual_reachability(rep_blk, rep, cd_blk, cd, zero_diag=False)
-        rows = i * rep_blk.shape[0] + jnp.arange(rep_blk.shape[0])
-        cols = jnp.arange(L)
-        return jnp.where(rows[:, None] == cols[None, :], 0.0, m)
+    def strip(rep_f, n_b_f, extent_f):
+        # replicated (L, L) distance matrix with every intermediate
+        # pinned (ref.pairwise_dist_pinned): strips must be SLICES of one
+        # program-independent computation so any mesh shape sees the same
+        # bits (see _sharded_mst_stage)
+        dm = _ref.pairwise_dist_pinned(rep_f)
+        dm_p = jnp.pad(dm, ((0, pad), (0, 0)))  # exact row lift
+        m = Lk // k
+        i0 = jax.lax.axis_index(axis).astype(jnp.int32) * m
+        rows = i0 + jnp.arange(m, dtype=jnp.int32)
+        dm_s = jax.lax.dynamic_slice_in_dim(dm_p, i0, m, 0)
+        cd_s = _ref.bubble_core_distances_from_dm(
+            dm_s, rows, n_b_f, extent_f, min_pts, d)
+        cd = jax.lax.all_gather(cd_s, axis, tiled=True)[:L]
+        mm = jnp.maximum(dm_s, jnp.maximum(cd_s[:, None], cd[None, :]))
+        cols = jnp.arange(L, dtype=jnp.int32)
+        return jnp.where(rows[:, None] == cols[None, :], 0.0, mm)
 
-    try:  # jax >= 0.6 top-level API; older releases ship it in experimental
-        smap, check_kw = jax.shard_map, {"check_vma": False}
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map as smap
-
-        check_kw = {"check_rep": False}
-    f = smap(
-        strip,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=P(axis),
-        **check_kw,
-    )
-    out = f(rep_p, cd_p)
-    return out[:L]
+    f = jax.jit(_shard_map(
+        strip, mesh, in_specs=(P(), P(), P()), out_specs=P(axis)))
+    return f(rep, n_b, extent)[:L]

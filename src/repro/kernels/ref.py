@@ -14,6 +14,34 @@ def pairwise_sqdist(x, y):
     return jnp.maximum(xx + yy - 2.0 * x @ y.T, 0.0)
 
 
+def pairwise_dist_pinned(x):
+    """Self euclidean distance matrix with every intermediate pinned so
+    the bits cannot depend on the surrounding program.
+
+    XLA takes two fusion liberties with the naive
+    ``sqrt(xx + yy - 2·x@xᵀ)`` chain, both ulp-level and both sensitive
+    to which consumers the chain is inlined next to: it may contract the
+    last product of the row-norm reduction into an FMA (seen at d=2: one
+    multiply + one add become a single fused op), and it may reassociate
+    the ``xx_i + xx_j - 2·xy`` adds.  ``optimization_barrier`` pins the
+    dot, the norm outer-sum, and the shifted square as materialized
+    values; the ``maximum(x², 0)`` blocks the FMA contraction (XLA fuses
+    through both barrier and ``abs`` there) and is a bit identity on
+    squares.  What remains — ``nn - 2·xy`` (2·xy is exact, so the
+    subtract is single-rounded with or without FMA), ``maximum``,
+    ``sqrt`` — is correctly rounded everywhere, so every program that
+    calls this helper on the same table gets the same bits.  The sharded
+    offline stages (kernels/ops.py) rely on this for bit-identity across
+    mesh shapes."""
+    x = x.astype(jnp.float32)
+    xx = jax.lax.optimization_barrier(
+        jnp.sum(jnp.maximum(x * x, 0.0), axis=-1))
+    xy = jax.lax.optimization_barrier(x @ x.T)
+    nn = jax.lax.optimization_barrier(xx[:, None] + xx[None, :])
+    sq = jnp.maximum(nn - 2.0 * xy, 0.0)
+    return jnp.sqrt(jax.lax.optimization_barrier(sq))
+
+
 def mutual_reachability(x, y, cd_x, cd_y, zero_diag=True):
     d = jnp.sqrt(pairwise_sqdist(x, y))
     m = jnp.maximum(d, jnp.maximum(cd_x.astype(jnp.float32)[:, None], cd_y.astype(jnp.float32)[None, :]))
@@ -89,18 +117,28 @@ def dim_root(x, dim):
     return jnp.power(x, 1.0 / float(dim))
 
 
-def bubble_core_distances(rep, n_b, extent, min_pts, dim):
-    """Eq. 6 in pure jnp (vectorized over all bubbles)."""
-    L = rep.shape[0]
-    d = jnp.sqrt(pairwise_sqdist(rep, rep))
-    d = d.at[jnp.arange(L), jnp.arange(L)].set(0.0)
+def bubble_core_distances_from_dm(d, row_ids, n_b, extent, min_pts, dim):
+    """Eq. 6 for a (m, L) euclidean-distance strip — rows ``row_ids`` of
+    the full (L, L) distance matrix.
+
+    Every reduction (sort, cumsum, candidate gather) runs along the full
+    column axis, so each row's result depends only on that row's distance
+    slice and the whole table.  Crucially every op here is bit-determined
+    given ``d`` (stable sort has a unique answer, cumsum over
+    integer-valued f32 masses is exact, the rest is correctly-rounded
+    elementwise) — so a strip of a materialized distance matrix yields
+    bitwise the dense program's rows on any shard shape.  The shard_map
+    offline pass (kernels/ops.py) relies on exactly that."""
+    m, L = d.shape
+    cols = jnp.arange(L, dtype=jnp.int32)
+    d = jnp.where(row_ids.astype(jnp.int32)[:, None] == cols[None, :], 0.0, d)
     order = jnp.argsort(d, axis=1, stable=True)
     d_sorted = jnp.take_along_axis(d, order, axis=1)
     n_sorted = n_b.astype(jnp.float32)[order]
     csum = jnp.cumsum(n_sorted, axis=1)
     reach = csum >= float(min_pts)
     idx = jnp.where(reach.any(axis=1), jnp.argmax(reach, axis=1), L - 1)
-    rows = jnp.arange(L)
+    rows = jnp.arange(m)
     before = jnp.where(idx > 0, csum[rows, jnp.maximum(idx - 1, 0)], 0.0)
     k_resid = jnp.maximum(float(min_pts) - before, 1.0)
     C = order[rows, idx]
@@ -108,6 +146,21 @@ def bubble_core_distances(rep, n_b, extent, min_pts, dim):
     k_resid = jnp.clip(k_resid, 0.0, nC)
     nnd = dim_root(k_resid / nC, dim) * extent.astype(jnp.float32)[C]
     return d_sorted[rows, idx] + nnd
+
+
+def bubble_core_distances_rows(rep_rows, row_ids, rep, n_b, extent, min_pts, dim):
+    """Eq. 6 for a strip of rows against the full bubble table (computes
+    the strip's own distance rows; see `bubble_core_distances_from_dm`
+    for the bit-stability contract given a shared distance matrix)."""
+    d = jnp.sqrt(pairwise_sqdist(rep_rows, rep))
+    return bubble_core_distances_from_dm(d, row_ids, n_b, extent, min_pts, dim)
+
+
+def bubble_core_distances(rep, n_b, extent, min_pts, dim):
+    """Eq. 6 in pure jnp (vectorized over all bubbles)."""
+    L = rep.shape[0]
+    return bubble_core_distances_rows(
+        rep, jnp.arange(L, dtype=jnp.int32), rep, n_b, extent, min_pts, dim)
 
 
 def bubble_mutual_reachability(rep, n_b, extent, min_pts):

@@ -30,3 +30,18 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     mp = min(model_parallel, n)
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def resolve_mesh(mesh):
+    """Normalize an engine-style ``mesh=`` opt-in (DESIGN.md §12).
+
+    ``None``/``False`` → no mesh (the unsharded offline pass),
+    ``True`` → `make_host_mesh()` over whatever devices exist, and a
+    `jax.sharding.Mesh` passes through untouched.  A 1-device mesh is
+    deliberately NOT collapsed to None: the sharded pass on one device
+    is the parity baseline the multi-device CI leg digests against."""
+    if mesh is None or mesh is False:
+        return None
+    if mesh is True:
+        return make_host_mesh()
+    return mesh

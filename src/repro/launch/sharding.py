@@ -40,6 +40,7 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "media": (),
     "frames": (),
     "layers": (),
+    "leaf_rows": ("data",),  # leaf-CF table row blocks (DESIGN.md §12)
 }
 
 _local = threading.local()
@@ -130,6 +131,33 @@ def named_sharding(logical: tuple[str | None, ...], shape: tuple[int, ...] | Non
     ctx = current()
     assert ctx is not None, "named_sharding requires an active use_mesh()"
     return NamedSharding(ctx.mesh, spec_for(logical, shape))
+
+
+def leaf_table_sharding(mesh: Mesh, shape: tuple[int, ...],
+                        axis: str = "data") -> NamedSharding:
+    """Row-block NamedSharding for a (Lp, …) leaf-CF table: rows split
+    over ``axis`` when the padded bucket divides (always true for
+    power-of-two buckets on power-of-two meshes), replicated otherwise —
+    the same divisibility fallback `spec_for` applies."""
+    k = mesh.shape.get(axis, 1)
+    if k > 1 and shape[0] % k == 0:
+        return NamedSharding(mesh, P(axis))
+    return NamedSharding(mesh, P())
+
+
+def leaf_row_owner(slots, Lp: int, mesh: Mesh, axis: str = "data"):
+    """Owning mesh-axis index per leaf slot under the row-block layout
+    shard_map induces (shard i holds rows [i·Lp/k, (i+1)·Lp/k)).  This is
+    how ingest blocks route: the assignment kernel maps each point to a
+    slot, and slot → shard is this integer divide — no second lookup
+    structure.  Returns zeros when the table is replicated (fallback)."""
+    import numpy as np
+
+    slots = np.asarray(slots)
+    k = mesh.shape.get(axis, 1)
+    if k <= 1 or Lp % k != 0:
+        return np.zeros(slots.shape, dtype=np.int64)
+    return slots.astype(np.int64) // (Lp // k)
 
 
 def tree_shardings(logical_tree, shape_tree):

@@ -74,7 +74,9 @@ import time
 import numpy as np
 
 from repro.core.bubble_tree import BubbleTree
+from repro.core.device_table import DynamicStateCapture, SnapshotDeviceTable
 from repro.kernels import ops
+from repro.launch.mesh import resolve_mesh
 
 from .engine import HostBatcher
 from .query import QueryEngine, QueryResult
@@ -252,6 +254,17 @@ class StreamingClusterEngine:
         store).  Sync-only.
       update_policy: incremental-vs-full routing (exact mode only).
       exact_capacity: initial slot-capacity bucket of the dynamic state.
+      mesh: opt-in device mesh for the offline plane (DESIGN.md §12):
+        ``True`` = a host mesh over every visible device, or a
+        `jax.sharding.Mesh`.  ε-triggered passes then run the O(L²)
+        stage — Eq. 6 core distances, d_m candidate strips, Borůvka
+        rounds — row-block-sharded over the mesh's ``mesh_axis`` under
+        shard_map, producing bitwise the unsharded results (the CI
+        multidevice leg digests 1/2/8-device runs against each other).
+        Changes no contracts: snapshots, queries, checkpoints, and the
+        ingest planes are untouched.  Incompatible with ``exact=True``
+        (the incremental path has no O(L²) stage to shard).
+      mesh_axis: mesh axis name carrying the row blocks.
       query_cache: a shared `SnapshotDeviceCache` (multi-tenant pooling,
         serving.tenants); None = a private per-engine cache.
       query_scope: cache-key scope tag used with ``query_cache`` so
@@ -277,6 +290,8 @@ class StreamingClusterEngine:
         exact: bool = False,
         update_policy: UpdatePolicy | None = None,
         exact_capacity: int = 256,
+        mesh=None,
+        mesh_axis: str = "data",
         query_cache=None,
         query_scope=None,
         **tree_kw,
@@ -316,7 +331,21 @@ class StreamingClusterEngine:
             )
         if device_online is None:
             device_online = False  # explicit opt-in (row-order contract above)
-        self._flat = self.backend.make_flat(dim) if device_online else None
+        self.mesh = resolve_mesh(mesh)
+        self.mesh_axis = str(mesh_axis)
+        if self.mesh is not None and exact:
+            raise ValueError(
+                "mesh= shards the offline pass's O(L²) stage; exact=True "
+                "maintains the point-level MST incrementally and has none"
+            )
+        self._flat = (
+            self.backend.make_flat(dim, mesh=self.mesh, mesh_axis=self.mesh_axis)
+            if device_online else None
+        )
+        # offline plane sources (core.device_table): the host tree is the
+        # always-ready fallback; device_online prefers the flat table
+        self._host_table = SnapshotDeviceTable(self.tree)
+        self._table = self._flat if device_online else self._host_table
         self.update_policy = update_policy if update_policy is not None else UpdatePolicy()
         self._dyn = None
         self._dyn_stale = True  # no incremental state until the first rebuild
@@ -575,26 +604,12 @@ class StreamingClusterEngine:
         # serve-plane representatives on device, so the per-poll refresh
         # is ONE host sync — no tree gather, no pid-map inversion, no
         # padded-buffer re-transfer
-        res, _, rep32 = ops.incremental_recluster(
-            self._dyn.state, self.min_cluster_size
+        cap = DynamicStateCapture(state=self._dyn.state, dim=self.tree.dim)
+        res, rep, n_b, center = cap.recluster(
+            self.backend, min_pts=self.min_pts,
+            min_cluster_size=self.min_cluster_size,
         )
-        rep = rep32.astype(np.float64)
-        wall = time.perf_counter() - t0
-        self._version += 1
-        snap = ClusterSnapshot(
-            version=self._version,
-            n_points=int(n),
-            bubble_rep=rep,
-            bubble_n=np.ones(rep.shape[0], dtype=np.float64),
-            center=rep.mean(axis=0) if rep.size else np.zeros(self.tree.dim),
-            result=res,
-            wall_seconds=wall,
-            dirty_consumed=float(dirty_captured),
-        )
-        with self._snapshot_lock:
-            self._snapshot = snap
-        self.stats["recluster_count"] += 1
-        self.stats["offline_seconds_total"] += wall
+        self._publish_snapshot(res, rep, n_b, center, n, dirty_captured, t0)
         self._settle()
         return True
 
@@ -639,47 +654,28 @@ class StreamingClusterEngine:
             # absorbed (the next pass sees the accumulated dirty mass)
             self.stats["recluster_skipped_busy"] += 1
             return False
-        # capture: dirty mass consumed by this pass + the summary rows
+        # capture: dirty mass consumed by this pass + the summary rows,
+        # through whichever DeviceTableProtocol source is ready — the
+        # flat table when device_online and fresh (its jax arrays are
+        # immutable, so the capture is a free snapshot with zero per-pass
+        # host→device transfer), the host tree otherwise (the capture
+        # copies the L gathered CF rows, so the async worker is immune to
+        # concurrent tree edits)
         dirty_captured = self.tree.dirty_mass
         n_points = self.tree.n_points
-        if self._flat is not None and not self._flat.stale:
-            # device-online: the flat table IS the summary and already
-            # lives on device — zero per-pass host→device transfer.  jax
-            # arrays are immutable, so the captured view is a free
-            # snapshot (async workers need no isolation copy).
-            view = self._flat.device_view()
-            origin = self._flat.origin.copy()
-            if self.async_offline:
-                self._inflight_consumed = dirty_captured
-                th = threading.Thread(
-                    target=self._offline_pass_guarded,
-                    args=(self._offline_pass_flat, view, origin, n_points, dirty_captured),
-                    daemon=True,
-                )
-                self._offline_thread = th
-                th.start()
-            else:
-                self._offline_pass_flat(view, origin, n_points, dirty_captured)
-                self._settle()
-            return True
-        ids, LS, SS, N = self.tree.leaf_cf_buffers()
+        src = self._table if self._table.ready else self._host_table
+        cap = src.capture(n_points)
         if self.async_offline:
-            # snapshot the L gathered rows (O(L·d) — the summary, never the
-            # raw data) so the worker is immune to concurrent tree edits
             self._inflight_consumed = dirty_captured
-            # advanced indexing already allocates fresh arrays — that IS
-            # the isolation copy
-            LSc, SSc, Nc = LS[ids], SS[ids], N[ids]
-            ids_c = np.arange(len(ids))
             th = threading.Thread(
                 target=self._offline_pass_guarded,
-                args=(self._offline_pass, ids_c, LSc, SSc, Nc, n_points, dirty_captured),
+                args=(self._offline_pass, cap, n_points, dirty_captured),
                 daemon=True,
             )
             self._offline_thread = th
             th.start()
         else:
-            self._offline_pass(ids, LS, SS, N, n_points, dirty_captured)
+            self._offline_pass(cap, n_points, dirty_captured)
             self._settle()
         return True
 
@@ -699,49 +695,29 @@ class StreamingClusterEngine:
             self._inflight_consumed = 0.0
             raise RuntimeError("async offline re-cluster pass failed") from err
 
-    def _offline_pass(self, ids, LS, SS, N, n_points, dirty_captured):
+    def _offline_pass(self, capture, n_points, dirty_captured):
+        """One offline pass over a `DeviceTableProtocol` capture
+        (core.device_table): the capture runs the fused pipeline — the
+        host-table capture derives + uploads the f64 summary; the
+        flat-table capture reads the device state with zero per-pass
+        transfer; either routes the O(L²) stage through the mesh-sharded
+        shard_map path when the engine opted in — and the result
+        publishes as ONE snapshot."""
         t0 = time.perf_counter()
-        # one table derivation feeds both the device pipeline and the
-        # serve plane (rep/center live on in the snapshot)
-        rep, extent, n_b, center = ops.bubble_table(LS, SS, N, ids)
-        # the whole hierarchy — d_m → MST → single-linkage → condense →
-        # extract — is ONE jit'd device call returning labels+stabilities
-        res = self.backend.offline_recluster_from_table(
-            rep, n_b, extent, self.min_pts, min_cluster_size=self.min_cluster_size
+        res, rep, n_b, center = capture.recluster(
+            self.backend, min_pts=self.min_pts,
+            min_cluster_size=self.min_cluster_size,
+            mesh=self.mesh, mesh_axis=self.mesh_axis,
         )
-        wall = time.perf_counter() - t0
-        self._version += 1
-        snap = ClusterSnapshot(
-            version=self._version,
-            n_points=int(n_points),
-            bubble_rep=rep,
-            bubble_n=n_b,
-            center=center,
-            result=res,
-            wall_seconds=wall,
-            dirty_consumed=float(dirty_captured),
-        )
-        # publish only; dirty-mass settlement happens on the main thread
-        # (updates that raced this pass stay dirty for the next one)
-        with self._snapshot_lock:
-            self._snapshot = snap
-        self.stats["recluster_count"] += 1
-        self.stats["offline_seconds_total"] += wall
-        return snap
+        return self._publish_snapshot(
+            res, rep, n_b, center, n_points, dirty_captured, t0)
 
-    def _offline_pass_flat(self, view, origin, n_points, dirty_captured):
-        """Offline pass over a captured BubbleFlat device view: ONE jit'd
-        call derives the bubble table on device and runs the fused
-        hierarchy stages; only fixed-size result buffers (plus the
-        serve-plane rep rows) come back (ops.offline_recluster_from_
-        device_table)."""
-        t0 = time.perf_counter()
-        # min_pts is a static arg: clamp host-side against the captured
-        # population (the flat table's mass equals it by construction)
-        mp = max(1, min(self.min_pts, int(n_points)))
-        res, rep, n_b, center = self.backend.offline_recluster_from_device_table(
-            *view, origin, mp, min_cluster_size=self.min_cluster_size
-        )
+    def _publish_snapshot(self, res, rep, n_b, center, n_points,
+                          dirty_captured, t0):
+        """Version-bump + atomic swap in ONE place — the ε-triggered
+        offline plane and the exact fast path both publish through here.
+        Publish only; dirty-mass settlement happens on the main thread
+        (updates that raced this pass stay dirty for the next one)."""
         wall = time.perf_counter() - t0
         self._version += 1
         snap = ClusterSnapshot(
