@@ -7,9 +7,11 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 # ruff-format adoption list: files here are kept black-clean; the
 # pre-existing tree is linted (ruff check) but not reflowed wholesale.
-FORMAT_PATHS ?= scripts/check_bench_regression.py
+FORMAT_PATHS ?= scripts/check_bench_regression.py tools/lint \
+  src/repro/serving/tenants.py
 
-.PHONY: test test-multidevice bench-smoke bench-gate docs-links lint check
+.PHONY: test test-multidevice bench-smoke bench-gate docs-links lint \
+  lint-deep check
 
 test:
 	$(PYTHON) -m pytest $(PYTEST_FLAGS)
@@ -40,4 +42,10 @@ lint:
 	ruff check .
 	ruff format --check $(FORMAT_PATHS)
 
-check: docs-links lint test
+# repro-lint (tools/lint): AST-level contract checks — jit purity (RPL1xx),
+# dtype discipline (RPL2xx), serve-plane lock discipline (RPL3xx), kernel
+# hygiene (RPL4xx).  Exit 1 = new findings, exit 2 = baseline drift.
+lint-deep:
+	$(PYTHON) -m tools.lint src tests benchmarks scripts
+
+check: docs-links lint lint-deep test

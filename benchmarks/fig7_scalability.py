@@ -151,9 +151,10 @@ def run_pruned(
     for L in Ls:
         rng = np.random.default_rng(seed)
         centers = rng.normal(0.0, 20.0, (32, d))
-        rep = (
-            centers[rng.integers(0, 32, L)] + rng.normal(0.0, 0.5, (L, d))
-        ).astype(np.float32)
+        rep = centers[rng.integers(0, 32, L)] + rng.normal(0.0, 0.5, (L, d))
+        # mean-center in f64 before the f32 handoff (DESIGN §2: off-origin
+        # coordinates cancel catastrophically in the f32 kernels)
+        rep = (rep - rep.mean(axis=0)).astype(np.float32)
         n_b = rng.integers(1, 8, L).astype(np.float32)
         extent = np.abs(rng.normal(0.2, 0.05, L)).astype(np.float32)
         valid = np.ones(L, bool)
@@ -222,9 +223,9 @@ def run_mesh(
 
     rng = np.random.default_rng(seed)
     centers = rng.normal(0.0, 20.0, (32, d))
-    rep = (
-        centers[rng.integers(0, 32, L)] + rng.normal(0.0, 0.5, (L, d))
-    ).astype(np.float32)
+    rep = centers[rng.integers(0, 32, L)] + rng.normal(0.0, 0.5, (L, d))
+    # mean-center in f64 before the f32 handoff (DESIGN §2)
+    rep = (rep - rep.mean(axis=0)).astype(np.float32)
     n_b = rng.integers(1, 8, L).astype(np.float32)
     extent = np.abs(rng.normal(0.2, 0.05, L)).astype(np.float32)
 

@@ -78,10 +78,7 @@ MIN_BASELINE_MS = 2.0
 
 def dig(obj, path):
     for key in path:
-        if isinstance(obj, list):
-            obj = obj[int(key)]
-        else:
-            obj = obj[str(key)]
+        obj = obj[int(key)] if isinstance(obj, list) else obj[str(key)]
     return float(obj)
 
 

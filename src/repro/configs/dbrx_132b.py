@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """dbrx-132b [moe] — 16 experts top-4, fine-grained.
 [hf:databricks/dbrx-base; unverified]"""
 from .base import ArchConfig

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """h2o-danube-3-4b [dense] — llama+mistral mix, sliding-window attention.
 [arXiv:2401.16818; unverified]"""
 from .base import ArchConfig

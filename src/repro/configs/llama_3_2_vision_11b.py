@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """llama-3.2-vision-11b [vlm] — cross-attn image layers.
 [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
 from .base import ArchConfig

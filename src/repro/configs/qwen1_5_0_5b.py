@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """qwen1.5-0.5b [dense] — QKV bias, tied embeddings.
 [hf:Qwen/Qwen1.5-0.5B; hf]"""
 from .base import ArchConfig

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """qwen2-1.5b [dense] — GQA kv=2, QKV bias, tied embeddings.
 [arXiv:2407.10671; hf]"""
 from .base import ArchConfig

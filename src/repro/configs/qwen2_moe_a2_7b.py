@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4.
 [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]"""
 from .base import ArchConfig

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """qwen3-14b [dense] — qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
 from .base import ArchConfig
 

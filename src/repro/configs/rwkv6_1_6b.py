@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """rwkv6-1.6b [ssm] — Finch, data-dependent decay (attention-free).
 [arXiv:2404.05892; unverified]"""
 from .base import ArchConfig

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """zamba2-7b [hybrid] — Mamba2 backbone + shared attention block.
 81 layers = 13 x (5 mamba + 1 shared-attn application) + 3 mamba tail.
 [arXiv:2411.15242; unverified]"""

@@ -336,7 +336,7 @@ def extract_fixed(
 
     # pointer-doubling setup: the label tree is ≤ C deep but log₂(C)
     # doubling steps traverse any ancestor chain
-    n_jumps = int(np.ceil(np.log2(max(C, 2)))) + 1
+    n_jumps = max(C - 1, 1).bit_length() + 1  # ceil(log2(max(C, 2))) + 1
     parent_or_trash = jnp.where(in_use & (ids >= 1), ct.cluster_parent, trash)
 
     if method == "leaf":

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Pallas TPU kernel: FlashAttention (forward) with causal/window masking.
 
 The LM zoo's prefill hot spot.  Grid (heads, q_blocks, kv_blocks) with the

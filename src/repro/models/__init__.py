@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """repro.models — architecture zoo (dense/moe/vlm/ssm/hybrid/audio)."""
 
 from .model import (

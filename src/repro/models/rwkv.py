@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent
 per-channel decay linear recurrence.
 

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Mamba-2 (SSD, arXiv:2405.21060) block — used by the zamba2 hybrid.
 
 State-space recurrence with scalar-per-head decay:

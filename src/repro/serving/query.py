@@ -246,12 +246,13 @@ class SnapshotDeviceCache:
     def __init__(self, keep: int = 4, spatial: bool = False):
         self.keep = int(keep)
         self.spatial = bool(spatial)
-        self._entries: dict = {}
-        self._order: list = []
-        self._building: dict = {}  # key -> Event of the in-flight build
+        self._entries: dict = {}  # guarded-by: _lock
+        self._order: list = []  # guarded-by: _lock
+        # key -> Event of the in-flight build
+        self._building: dict = {}  # guarded-by: _lock
         self._lock = threading.Lock()
-        self.hits = 0
-        self.builds = 0
+        self.hits = 0  # guarded-by: _lock
+        self.builds = 0  # guarded-by: _lock
 
     def entry(self, snap, key=None) -> DeviceSnapshotEntry:
         k = int(snap.version) if key is None else key
@@ -460,8 +461,8 @@ class QueryBatcher:
         self._resolve = resolve if resolve is not None else (lambda kind: self.engine)
         self._q = HostBatcher(max_block=int(max_batch))
         self._dispatch = threading.Lock()
-        self.batches = 0
-        self.fanned_out = 0
+        self.batches = 0  # guarded-by: _dispatch
+        self.fanned_out = 0  # guarded-by: _dispatch
 
     def query_detailed(self, X, *, kind: str = "query") -> QueryResult:
         eng = self._resolve(kind)
@@ -493,11 +494,14 @@ class QueryBatcher:
     def query(self, X, *, kind: str = "query") -> np.ndarray:
         return self.query_detailed(X, kind=kind).labels
 
-    def _drain(self, own: _QueryTicket | None = None):
+    def _drain(self, own: _QueryTicket | None = None):  # holds: _dispatch
         """Service pending blocks; a leader caller stops once its OWN
         ticket is fulfilled (remaining requests are drained by their own
         pushers' acquire loops), so one unlucky caller never turns into
-        a dedicated server thread with unbounded latency."""
+        a dedicated server thread with unbounded latency.
+
+        Only ever called with `_dispatch` held (query_detailed's
+        try/acquire loop), hence the `# holds:` annotation above."""
         while self._q and not (own is not None and own.event.is_set()):
             kind, items = self._q.next_block(size=lambda it: it[0].shape[0])
             try:
@@ -505,8 +509,9 @@ class QueryBatcher:
                 # tickets runs under the fan-out guard: once items left
                 # the queue, this leader is the only thread that can ever
                 # complete them
-                eng = self._resolve(kind)
+                eng = self._resolve(kind)  # may-acquire: TenantRouter._lock
                 X = np.concatenate([x for x, _ in items], axis=0)
+                # may-acquire: StreamingClusterEngine._snapshot_lock, SnapshotDeviceCache._lock
                 res = eng.query_detailed(X)
                 if len(res) != X.shape[0]:
                     raise RuntimeError(

@@ -306,7 +306,7 @@ class StreamingClusterEngine:
             def assign_fn(X, reps):
                 mu = reps.mean(axis=0)
                 return np.asarray(self.backend.assign(X - mu, reps - mu))
-        self.tree = BubbleTree(
+        self.tree = BubbleTree(  # owner: ingest thread (workers read captures)
             dim=dim, compression=compression, assign_fn=assign_fn, **tree_kw
         )
         self.min_pts = int(min_pts)
@@ -316,12 +316,15 @@ class StreamingClusterEngine:
         self.policy = StalenessPolicy(epsilon=float(epsilon), min_points=int(min_offline_points))
         self.batcher = HostBatcher(max_block=max_block)
         self.async_offline = bool(async_offline)
-        self._snapshot: ClusterSnapshot | None = None
+        self._snapshot: ClusterSnapshot | None = None  # guarded-by: _snapshot_lock
         self._snapshot_lock = threading.Lock()
-        self._offline_thread: threading.Thread | None = None
-        self._version = 0
-        self._settled_version = 0
-        self._inflight_consumed = 0.0  # dirty mass captured by the running pass
+        self._offline_thread: threading.Thread | None = None  # owner: ingest thread
+        self._version = 0  # guarded-by: _snapshot_lock
+        self._settled_version = 0  # owner: ingest thread (_settle)
+        # dirty mass captured by the running pass
+        self._inflight_consumed = 0.0  # owner: ingest thread
+        # unsynchronized: single reference swap (GIL-atomic); the worker
+        # writes once on failure, the ingest thread reads-and-clears
         self._offline_error: BaseException | None = None
         self.exact = bool(exact)
         if device_online and exact:
@@ -338,7 +341,7 @@ class StreamingClusterEngine:
                 "mesh= shards the offline pass's O(L²) stage; exact=True "
                 "maintains the point-level MST incrementally and has none"
             )
-        self._flat = (
+        self._flat = (  # owner: ingest thread (workers read captured views)
             self.backend.make_flat(dim, mesh=self.mesh, mesh_axis=self.mesh_axis)
             if device_online else None
         )
@@ -347,9 +350,10 @@ class StreamingClusterEngine:
         self._host_table = SnapshotDeviceTable(self.tree)
         self._table = self._flat if device_online else self._host_table
         self.update_policy = update_policy if update_policy is not None else UpdatePolicy()
-        self._dyn = None
-        self._dyn_stale = True  # no incremental state until the first rebuild
-        self._pid2slot: dict[int, int] = {}
+        self._dyn = None  # owner: ingest thread (exact mode is synchronous)
+        # no incremental state until the first rebuild
+        self._dyn_stale = True  # owner: ingest thread
+        self._pid2slot: dict[int, int] = {}  # owner: ingest thread
         if self.exact:
             if self.async_offline:
                 raise ValueError(
@@ -367,7 +371,11 @@ class StreamingClusterEngine:
         self._query_engine = QueryEngine(
             self.backend, dim, cache=query_cache, scope=query_scope
         )
+        # unsynchronized: single-reference swap; readers take ONE read of
+        # the (key, payload) tuple (see labels()) so entries never mix
         self._labels_cache: tuple | None = None
+        # unsynchronized: best-effort observability counters (worker and
+        # ingest thread both increment; a lost count is acceptable)
         self.stats = {
             "inserts": 0,
             "deletes": 0,
@@ -447,7 +455,7 @@ class StreamingClusterEngine:
                             self._exact_apply_delete(chunk)
                     self.stats["deletes"] += done
                     if err is not None:
-                        raise err
+                        raise err from None
                 else:
                     self._exact_apply_delete(flat_pids)
                     self.stats["deletes"] += len(flat_pids)
@@ -594,7 +602,7 @@ class StreamingClusterEngine:
         n = self.tree.n_points
         if n < 2 or (n < self.policy.min_points and not force):
             return False
-        if self.tree.dirty_mass <= 0 and self._snapshot is not None and not force:
+        if self.tree.dirty_mass <= 0 and self.snapshot is not None and not force:
             return False
         t0 = time.perf_counter()
         dirty_captured = self.tree.dirty_mass
@@ -644,7 +652,7 @@ class StreamingClusterEngine:
         pending = self._inflight_consumed if busy else 0.0
         # an in-flight pass counts as "hierarchy coming": only mass it did
         # NOT capture argues for another trigger
-        have = self._snapshot is not None or busy
+        have = self.snapshot is not None or busy
         if not force and not self.policy.stale(self.tree, have, pending=pending):
             return False
         if self.tree.n_points < 2:
@@ -719,18 +727,24 @@ class StreamingClusterEngine:
         Publish only; dirty-mass settlement happens on the main thread
         (updates that raced this pass stay dirty for the next one)."""
         wall = time.perf_counter() - t0
-        self._version += 1
-        snap = ClusterSnapshot(
-            version=self._version,
-            n_points=int(n_points),
-            bubble_rep=rep,
-            bubble_n=n_b,
-            center=center,
-            result=res,
-            wall_seconds=wall,
-            dirty_consumed=float(dirty_captured),
-        )
+        # version bump + swap under ONE lock hold: checkpoint_state captures
+        # (version, snapshot) under the same lock, so a blocking save during
+        # an in-flight async pass can never record engine version N alongside
+        # a version-N+1 snapshot — after restore, the next publish would
+        # re-issue N+1 and collide with the stale entry in the version-keyed
+        # device cache (serving.query), serving old labels as fresh.
         with self._snapshot_lock:
+            self._version += 1
+            snap = ClusterSnapshot(
+                version=self._version,
+                n_points=int(n_points),
+                bubble_rep=rep,
+                bubble_n=n_b,
+                center=center,
+                result=res,
+                wall_seconds=wall,
+                dirty_consumed=float(dirty_captured),
+            )
             self._snapshot = snap
         self.stats["recluster_count"] += 1
         self.stats["offline_seconds_total"] += wall
@@ -743,11 +757,11 @@ class StreamingClusterEngine:
             self.poll()
         self.join()
         if self.tree.n_points >= 2 and (
-            self._snapshot is None or self.tree.dirty_mass > 0
+            self.snapshot is None or self.tree.dirty_mass > 0
         ):
             self.maybe_recluster(force=True)
             self.join()
-        return self._snapshot
+        return self.snapshot
 
     def join(self):
         if self._offline_thread is not None:
@@ -792,6 +806,12 @@ class StreamingClusterEngine:
 
         Call from the ingest thread (the tree's single writer), same as
         `poll()`."""
+        # ONE lock hold for (version, snapshot): an async publish between
+        # separate reads could pair version N with a version-N+1 snapshot,
+        # and the restored engine would re-issue N+1 (see _publish_snapshot)
+        with self._snapshot_lock:
+            version = self._version
+            snap = self._snapshot
         t = self.tree
         cap = t.LS.shape[0]
         ch_flat, ch_off = self._ragged_pack(t.children[:cap])
@@ -827,10 +847,9 @@ class StreamingClusterEngine:
             "tree/dirty_mass": np.float64(t.dirty_mass),
             "tree/mutations": np.int64(t.mutations),
             "tree/op_count": np.int64(t._op_count),
-            "eng/version": np.int64(self._version),
+            "eng/version": np.int64(version),
             "eng/settled_version": np.int64(self._settled_version),
         }
-        snap = self.snapshot
         state["snap/has"] = np.bool_(snap is not None)
         if snap is not None:
             state.update(
@@ -937,7 +956,6 @@ class StreamingClusterEngine:
         t.dirty_mass = float(d["tree/dirty_mass"])
         t.mutations = int(d["tree/mutations"])
         t._op_count = int(d["tree/op_count"])
-        self._version = int(d["eng/version"])
         self._settled_version = int(d["eng/settled_version"])
         self._inflight_consumed = 0.0
         self._offline_thread = None
@@ -970,6 +988,7 @@ class StreamingClusterEngine:
                 dirty_consumed=float(d["snap/dirty_consumed"]),
             )
         with self._snapshot_lock:
+            self._version = int(d["eng/version"])
             self._snapshot = snap
         if self._flat is not None:
             if bool(d["flat/has"]):

@@ -100,13 +100,11 @@ class TenantRouter:
         self.spatial_index = bool(spatial_index)
         self.engine_kw = dict(engine_kw)
         self.cache = SnapshotDeviceCache(keep=cache_keep, spatial=spatial_index)
-        self.batcher = QueryBatcher(
-            resolve=self.engine, max_batch=max_batch, poll_s=poll_s
-        )
+        self.batcher = QueryBatcher(resolve=self.engine, max_batch=max_batch, poll_s=poll_s)
         self.checkpoint_root = checkpoint_root
         self.keep = int(keep)
-        self._tenants: dict[str, StreamingClusterEngine] = {}
-        self._stores: dict[str, CheckpointStore] = {}
+        self._tenants: dict[str, StreamingClusterEngine] = {}  # guarded-by: _lock
+        self._stores: dict[str, CheckpointStore] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     # -- tenant lifecycle --------------------------------------------------
@@ -121,9 +119,7 @@ class TenantRouter:
         dim = int(kw.pop("dim", self.dim))
         kw.setdefault("backend", self.backend)
         kw.setdefault("spatial_index", self.spatial_index)
-        eng = StreamingClusterEngine(
-            dim, query_cache=self.cache, query_scope=name, **kw
-        )
+        eng = StreamingClusterEngine(dim, query_cache=self.cache, query_scope=name, **kw)
         with self._lock:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already exists")
@@ -177,9 +173,7 @@ class TenantRouter:
         """Drain one tenant's queue, or round-robin every tenant."""
         if name is not None:
             return self.engine(name).poll(max_blocks=max_blocks)
-        return sum(
-            self.engine(n).poll(max_blocks=max_blocks) for n in self.names()
-        )
+        return sum(self.engine(n).poll(max_blocks=max_blocks) for n in self.names())
 
     def flush(self, name: str | None = None):
         for n in [name] if name is not None else self.names():
@@ -201,9 +195,7 @@ class TenantRouter:
         with self._lock:
             store = self._stores.get(name)
             if store is None:
-                store = CheckpointStore(
-                    os.path.join(self.checkpoint_root, name), keep=self.keep
-                )
+                store = CheckpointStore(os.path.join(self.checkpoint_root, name), keep=self.keep)
                 self._stores[name] = store
         return store
 

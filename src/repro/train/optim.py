@@ -1,3 +1,4 @@
+# repro-lint: legacy-template — inherited LM-serving scaffold, kept only because tier-1 tests import it; excluded from rule stats
 """Optimizer substrate — AdamW (+ optional int8 gradient compression).
 
 Self-contained (no optax): state is a pytree mirroring params, sharded

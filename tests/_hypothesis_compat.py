@@ -52,7 +52,7 @@ except ModuleNotFoundError:
                     v = self.draw(rng)
                     if pred(v):
                         return v
-                raise AssertionError("filter predicate rejected every draw")
+                raise AssertionError("filter predicate rejected every draw") from None
 
             return _Strategy(draw)
 

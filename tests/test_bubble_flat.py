@@ -134,7 +134,7 @@ def test_flat_matches_tree_far_from_origin(rng):
     )
     centers = np.asarray([[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]]) + off
     pids = []
-    for rep in range(6):
+    for _rep in range(6):
         for c in centers:
             t = eng.submit_insert(rng.normal(size=(20, 2)) * 0.3 + c)
             eng.poll()

@@ -35,7 +35,7 @@ class TestCheckpoint:
         tree = {"w": jnp.zeros((8, 8))}
         store = CheckpointStore(str(tmp_path), keep=2)
         for s in (1, 2, 3, 4):
-            store.save(s, jax.tree.map(lambda x: x + s, tree), blocking=False)
+            store.save(s, jax.tree.map(lambda x, s=s: x + s, tree), blocking=False)
         store.wait()
         assert latest_step(str(tmp_path)) == 4
         kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))

@@ -23,10 +23,8 @@ def _random_tree(rng, n, weighted=False, tie_heavy=False):
     """Random spanning tree over n nodes with shuffled edge order."""
     parent = np.array([rng.integers(0, i) for i in range(1, n)], dtype=np.int64)
     child = np.arange(1, n, dtype=np.int64)
-    if tie_heavy:  # few distinct weights → lots of sort ties
-        w = rng.choice([0.5, 1.0, 2.0], size=n - 1)
-    else:
-        w = rng.uniform(0.1, 10.0, size=n - 1)
+    # tie_heavy: few distinct weights → lots of sort ties
+    w = rng.choice([0.5, 1.0, 2.0], size=n - 1) if tie_heavy else rng.uniform(0.1, 10.0, size=n - 1)
     perm = rng.permutation(n - 1)
     u, v, w = parent[perm], child[perm], w[perm]
     flip = rng.random(n - 1) < 0.5  # undirected: random endpoint order

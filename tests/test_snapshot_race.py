@@ -1,0 +1,114 @@
+"""Regression tests for the checkpoint/publish snapshot-version race
+(found by repro-lint RPL3xx, DESIGN.md §9/§11).
+
+The bug: `_publish_snapshot` bumped `_version` OUTSIDE `_snapshot_lock`
+and swapped `_snapshot` inside it, while `checkpoint_state` read the two
+in separate steps.  A blocking `save()` on the ingest thread during an
+in-flight async pass could capture engine version N alongside a
+version-N+1 snapshot; after restore, the next publish re-issues N+1 and
+collides with the stale entry in the version-keyed device cache
+(serving.query), silently serving old labels as fresh.
+"""
+
+import threading
+import time
+
+import numpy as np
+
+from repro.serving.stream import StreamingClusterEngine
+
+
+def _engine_with_snapshot(rng, n=64):
+    eng = StreamingClusterEngine(
+        dim=2, min_pts=4, backend="jnp", min_offline_points=8,
+    )
+    eng.ingest(rng.normal(size=(n, 2)))
+    eng.maybe_recluster(force=True)
+    eng.join()
+    assert eng.snapshot is not None
+    return eng
+
+
+def _republish(eng, snap):
+    """Re-publish the existing snapshot's payload (cheap: no device work)."""
+    eng._publish_snapshot(
+        snap.result, snap.bubble_rep, snap.bubble_n, snap.center,
+        snap.n_points, 0.0, time.perf_counter(),
+    )
+
+
+class TestPublishAtomicity:
+    def test_version_bump_happens_under_snapshot_lock(self, rng):
+        """While a reader holds `_snapshot_lock`, a concurrent publish must
+        not have bumped `_version` yet — the bump and the swap are one
+        atomic publication (pre-fix, the bump leaked out first)."""
+        eng = _engine_with_snapshot(rng)
+        snap = eng.snapshot
+        v0 = snap.version
+
+        eng._snapshot_lock.acquire()
+        try:
+            t = threading.Thread(target=_republish, args=(eng, snap))
+            t.start()
+            t.join(timeout=0.2)  # publisher must be parked on the lock
+            assert t.is_alive(), "publish completed despite held lock"
+            assert eng._version == v0, (
+                "version bumped outside _snapshot_lock: a checkpoint "
+                "holding the lock would pair it with the older snapshot"
+            )
+        finally:
+            eng._snapshot_lock.release()
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+        assert eng._version == v0 + 1
+        assert eng.snapshot.version == v0 + 1
+
+    def test_checkpoint_never_tears_version_and_snapshot(self, rng):
+        """Stress the actual failure mode: a publisher thread races
+        checkpoint_state; every captured state must satisfy
+        eng/version >= snap/version (pre-fix, the tear produced
+        eng/version == snap/version - 1)."""
+        eng = _engine_with_snapshot(rng)
+        snap = eng.snapshot
+        stop = threading.Event()
+
+        def publisher():
+            while not stop.is_set():
+                _republish(eng, snap)
+
+        t = threading.Thread(target=publisher)
+        t.start()
+        try:
+            deadline = time.monotonic() + 1.0
+            while time.monotonic() < deadline:
+                d = eng.checkpoint_state()
+                assert bool(d["snap/has"])
+                assert int(d["eng/version"]) >= int(d["snap/version"]), (
+                    "torn checkpoint: engine version older than the "
+                    "captured snapshot — restore would re-issue an "
+                    "already-published version"
+                )
+        finally:
+            stop.set()
+            t.join()
+
+    def test_restore_round_trip_preserves_version_monotonicity(self, rng):
+        """After restore, the next publish must advance past every version
+        the restored snapshot could have been served under."""
+        eng = _engine_with_snapshot(rng)
+        state = eng.checkpoint_state()
+
+        eng2 = StreamingClusterEngine(
+            dim=2, min_pts=4, backend="jnp", min_offline_points=8,
+        )
+        class _Store:  # duck-typed CheckpointStore: restore() only
+            def restore(self, step=None):
+                return 0, state
+
+        eng2.restore(_Store())
+        restored = eng2.snapshot
+        assert restored is not None
+        assert eng2._version == int(state["eng/version"])
+        snap = eng2.snapshot
+        _republish(eng2, snap)
+        assert eng2.snapshot.version > restored.version

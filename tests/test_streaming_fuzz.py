@@ -74,10 +74,8 @@ def test_interleaved_schedule_every_pass_matches_static(seed, use_ref, spatial):
     rng = np.random.default_rng(seed)
     # Pallas interpret mode is slow on CPU, and the grid legs recompile
     # the pruned programs per size bucket; nightly scales 10×
-    if spatial:
-        n_steps = (30 if use_ref else 15) * FUZZ_SCALE
-    else:
-        n_steps = (60 if use_ref else 25) * FUZZ_SCALE
+    per = (30 if use_ref else 15) if spatial else (60 if use_ref else 25)
+    n_steps = per * FUZZ_SCALE
     eng = StreamingClusterEngine(
         dim=2, min_pts=MIN_PTS, min_cluster_size=MCS, compression=0.12,
         epsilon=0.15, backend="jnp" if use_ref else "pallas",

@@ -1,0 +1,127 @@
+"""Baseline (grandfathered-findings) file handling.
+
+Format — one finding per line, ``#`` comments and blanks allowed:
+
+    path/to/file.py:123: RPL402: stripped source text of the line
+
+A current finding matches a baseline entry when (path, code, text) agree;
+the recorded line number is used for the drift check: if the named line no
+longer exists, or its stripped text no longer equals the recorded text,
+the entry is *stale* and the run fails with exit code 2 (CI's
+baseline-drift gate).  ``--update-baseline`` rewrites the file from the
+current findings, preserving the leading comment block.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass
+from pathlib import Path
+
+from tools.lint.framework import Finding
+
+ENTRY_RE = re.compile(r"^(?P<path>[^:]+):(?P<line>\d+):\s*(?P<code>RPL\d+):\s*(?P<text>.*)$")
+
+
+@dataclass(frozen=True)
+class BaselineEntry:
+    path: str
+    line: int
+    code: str
+    text: str
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.path, self.code, self.text)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code}: {self.text}"
+
+
+class BaselineError(Exception):
+    """Malformed baseline file or drifted entries — exit code 2."""
+
+
+def load(path: Path) -> list[BaselineEntry]:
+    if not path.exists():
+        return []
+    entries: list[BaselineEntry] = []
+    for i, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = ENTRY_RE.match(line)
+        if not m:
+            raise BaselineError(f"{path}:{i}: unparsable baseline entry: {raw!r}")
+        entries.append(
+            BaselineEntry(
+                path=m.group("path"),
+                line=int(m.group("line")),
+                code=m.group("code"),
+                text=m.group("text").strip(),
+            )
+        )
+    return entries
+
+
+def check_drift(entries: list[BaselineEntry], root: Path) -> list[str]:
+    """Return one error string per entry whose anchor line is gone."""
+    errors: list[str] = []
+    for e in entries:
+        f = root / e.path
+        if not f.exists():
+            errors.append(f"{e.render()} — file no longer exists")
+            continue
+        lines = f.read_text().splitlines()
+        if e.line > len(lines):
+            errors.append(f"{e.render()} — line {e.line} past EOF ({len(lines)} lines)")
+        elif lines[e.line - 1].strip() != e.text:
+            errors.append(f"{e.render()} — line {e.line} now reads: {lines[e.line - 1].strip()!r}")
+    return errors
+
+
+def partition(
+    findings: list[Finding], entries: list[BaselineEntry]
+) -> tuple[list[Finding], list[Finding], list[BaselineEntry]]:
+    """Split findings into (new, grandfathered) and report stale entries.
+
+    Matching is multiset-aware: two identical findings need two baseline
+    entries."""
+    budget = Counter(e.key for e in entries)
+    new: list[Finding] = []
+    old: list[Finding] = []
+    for f in sorted(findings):
+        key = (f.path, f.code, f.text)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    stale: list[BaselineEntry] = []
+    for e in entries:
+        if budget.get(e.key, 0) > 0:
+            budget[e.key] -= 1
+            stale.append(e)
+    return new, old, stale
+
+
+def write(path: Path, findings: list[Finding]) -> None:
+    header: list[str] = []
+    if path.exists():
+        for raw in path.read_text().splitlines():
+            if raw.startswith("#") or not raw.strip():
+                header.append(raw)
+            else:
+                break
+    if not header:
+        header = [
+            "# repro-lint baseline — grandfathered findings with justification.",
+            "# Each entry: path:line: CODE: stripped source text.",
+            "# Regenerate with: python -m tools.lint --update-baseline <paths>",
+            "",
+        ]
+    body = [
+        f"{f.path}:{f.line}: {f.code}: {f.text}" for f in sorted(findings)
+    ]
+    path.write_text("\n".join(header + body) + "\n")

@@ -1,0 +1,272 @@
+"""Core machinery for repro-lint: findings, file context, suppressions,
+and the jit-reachability index the RPL1xx/RPL2xx rules share.
+
+Stdlib only (``ast`` + ``re``) — the linter must run in every CI leg
+without installing anything.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Iterator
+
+SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9*,\s]+)")
+LEGACY_RE = re.compile(r"#\s*repro-lint:\s*legacy-template\b")
+
+# how many leading lines may carry the file-level legacy-template marker
+_LEGACY_SCAN_LINES = 15
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation, anchored to a source line.
+
+    ``text`` is the stripped source line — the baseline matches on
+    (path, code, text) so unrelated edits above a grandfathered finding
+    don't invalidate the whole file."""
+
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    code: str
+    message: str
+    text: str = ""
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class Rule:
+    """Base class for a lint rule.  Subclasses set ``code``/``name``/``doc``
+    and yield Findings from ``check``.  Rules are discovered from the
+    ``tools.lint.rules`` package: any module-level ``RULES`` list is
+    registered (see rules/__init__.py)."""
+
+    code: str = "RPL000"
+    name: str = "base"
+    doc: str = ""
+
+    def check(self, ctx: "FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def check_project(self, ctxs: list["FileContext"]) -> Iterable[Finding]:
+        """Cross-file pass, called once after every per-file ``check``.
+        Override for rules that need whole-project state (lock ordering)."""
+        return ()
+
+
+class FileContext:
+    """Parsed view of one source file handed to every rule."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)  # SyntaxError propagates; cli reports it
+        self.legacy = any(LEGACY_RE.search(line) for line in self.lines[:_LEGACY_SCAN_LINES])
+        self._suppress = _parse_suppressions(self.lines)
+        self._jit_index: JitIndex | None = None
+
+    # -- helpers for rules -------------------------------------------------
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, node: ast.AST | int, code: str, message: str) -> Finding:
+        line, col = (
+            (node, 0) if isinstance(node, int)
+            else (node.lineno, getattr(node, "col_offset", 0) + 1)
+        )
+        return Finding(
+            path=self.rel,
+            line=line,
+            col=col,
+            code=code,
+            message=message,
+            text=self.line_text(line),
+        )
+
+    def is_suppressed(self, f: Finding) -> bool:
+        """Same-line disable comment, or a standalone comment block
+        directly above the finding's line."""
+        lineno = f.line
+        codes = self._suppress.get(lineno, frozenset())
+        if "*" in codes or f.code in codes:
+            return True
+        probe = lineno - 1
+        while probe >= 1 and self.line_text(probe).startswith("#"):
+            codes = self._suppress.get(probe, frozenset())
+            if "*" in codes or f.code in codes:
+                return True
+            probe -= 1
+        return False
+
+    @property
+    def jit(self) -> "JitIndex":
+        if self._jit_index is None:
+            self._jit_index = JitIndex(self.tree)
+        return self._jit_index
+
+    def path_matches(self, pattern: str) -> bool:
+        return re.search(pattern, self.rel) is not None
+
+
+def _parse_suppressions(lines: list[str]) -> dict[int, frozenset[str]]:
+    out: dict[int, frozenset[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(line)
+        if m:
+            codes = frozenset(c.strip() for c in m.group(1).split(",") if c.strip())
+            out[i] = codes
+    return out
+
+
+# --------------------------------------------------------------------------
+# jit-reachability
+# --------------------------------------------------------------------------
+
+_FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# wrappers whose argument/decoratee body runs under tracing
+_JIT_WRAPPER_SUFFIXES = {"jit", "pjit", "shard_map", "pallas_call"}
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('jax.jit', 'np.asarray')."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    return bool(name) and name.rsplit(".", 1)[-1] in _JIT_WRAPPER_SUFFIXES
+
+
+def decorator_is_jit(dec: ast.AST) -> bool:
+    """jax.jit / jit / shard_map(...) / functools.partial(jax.jit, ...)."""
+    if _is_jit_expr(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jit_expr(dec.func):
+            return True
+        fn = dotted_name(dec.func)
+        if fn.rsplit(".", 1)[-1] == "partial" and dec.args:
+            return _is_jit_expr(dec.args[0])
+    return False
+
+
+def jit_static_param_names(func: _FuncDef) -> frozenset[str]:
+    """Parameter names marked static in the function's own jit decorator
+    (static_argnames=... literals; static_argnums resolved positionally)."""
+    out: set[str] = set()
+    params = [a.arg for a in func.args.posonlyargs + func.args.args]
+    for dec in func.decorator_list:
+        if not (isinstance(dec, ast.Call) and decorator_is_jit(dec)):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                        out.add(node.value)
+            elif kw.arg == "static_argnums":
+                for node in ast.walk(kw.value):
+                    if (isinstance(node, ast.Constant) and isinstance(node.value, int)
+                            and 0 <= node.value < len(params)):
+                        out.add(params[node.value])
+    return frozenset(out)
+
+
+class JitIndex:
+    """Which function defs in a module are reachable from a jit/shard_map
+    trace.  Seeds: jit-decorated defs and defs wrapped via
+    ``jax.jit(f)`` / ``shard_map(f, ...)`` / ``pl.pallas_call(f, ...)``.
+    Closure: a reachable function's same-module callees are reachable, as
+    is any local function passed as a call argument inside reachable code
+    (lax.scan bodies and friends run at trace time)."""
+
+    def __init__(self, tree: ast.Module):
+        self._defs: list[_FuncDef] = [
+            n for n in ast.walk(tree) if isinstance(n, _FuncDef)
+        ]
+        by_name: dict[str, list[_FuncDef]] = {}
+        for fn in self._defs:
+            by_name.setdefault(fn.name, []).append(fn)
+
+        reachable: set[_FuncDef] = set()
+        for fn in self._defs:
+            if any(decorator_is_jit(d) for d in fn.decorator_list):
+                reachable.add(fn)
+        # wrapped form: jax.jit(f) / shard_map(f, ...) anywhere in module
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_jit_expr(node.func):
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name):
+                        reachable.update(by_name.get(arg.id, ()))
+
+        # fixpoint over same-module calls + functions passed as arguments
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(reachable):
+                for node in ast.walk(fn):
+                    names: list[str] = []
+                    if isinstance(node, ast.Call):
+                        if isinstance(node.func, ast.Name):
+                            names.append(node.func.id)
+                        names.extend(a.id for a in node.args if isinstance(a, ast.Name))
+                    for name in names:
+                        for cand in by_name.get(name, ()):
+                            if cand not in reachable:
+                                reachable.add(cand)
+                                changed = True
+        self.reachable = reachable
+        self._intervals = [
+            (fn.lineno, fn.end_lineno or fn.lineno, fn) for fn in reachable
+        ]
+
+    def reachable_functions(self) -> Iterator[_FuncDef]:
+        return iter(self.reachable)
+
+    def covers(self, node: ast.AST) -> bool:
+        """True if ``node`` sits inside any jit-reachable function body."""
+        line = getattr(node, "lineno", None)
+        if line is None:
+            return False
+        return any(lo <= line <= hi for lo, hi, _ in self._intervals)
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def iter_py_files(paths: Iterable[Path], root: Path) -> Iterator[tuple[Path, str]]:
+    """Yield (absolute path, repo-relative posix string) for every .py file
+    under the given paths, skipping caches and VCS internals."""
+    skip_parts = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache"}
+    seen: set[Path] = set()
+    for p in paths:
+        p = p if p.is_absolute() else root / p
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            if f.suffix != ".py" or skip_parts & set(f.parts):
+                continue
+            f = f.resolve()
+            if f in seen:
+                continue
+            seen.add(f)
+            try:
+                rel = f.relative_to(root.resolve()).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            yield f, rel

@@ -1,0 +1,19 @@
+"""Rule plugin registry: every module in this package that exposes a
+module-level ``RULES`` list is auto-discovered.  Drop a new ``rpl*.py``
+file in here to add a family — no registration edits needed."""
+
+from __future__ import annotations
+
+import importlib
+import pkgutil
+
+from tools.lint.framework import Rule
+
+
+def all_rules() -> list[Rule]:
+    rules: list[Rule] = []
+    for mod_info in pkgutil.iter_modules(__path__):
+        mod = importlib.import_module(f"{__name__}.{mod_info.name}")
+        rules.extend(getattr(mod, "RULES", []))
+    rules.sort(key=lambda r: r.code)
+    return rules

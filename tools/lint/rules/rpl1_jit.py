@@ -1,0 +1,183 @@
+"""RPL1xx — jit-purity / recompile hazards (DESIGN.md §5, §6).
+
+Scope: device-path modules — ``kernels/*.py`` and ``core/*_jax.py``.
+
+RPL101  host-sync or host-compute call reachable from a jit/shard_map
+        trace: ``.item()`` / ``.tolist()``, ``jax.device_get``, and
+        ``np.*`` calls (except static metadata like ``np.iinfo`` and
+        dtype constructors), plus ``float()``/``bool()`` applied to an
+        array-valued expression.  Each of these either blocks on the
+        device or silently constant-folds a traced value.
+RPL102  non-power-of-two integer literal flowing into a bucket/padding
+        helper — pow-2 buckets are what keep the per-shape compile cache
+        finite (DESIGN §5).
+RPL103  mutable default argument on a jit-wrapped function — mutable
+        defaults are unhashable as static args and a shared-state trap
+        under tracing.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.lint.framework import (
+    FileContext,
+    Finding,
+    Rule,
+    decorator_is_jit,
+    dotted_name,
+    is_pow2,
+    jit_static_param_names,
+)
+
+DEVICE_PATH = r"(^|/)kernels/[^/]+\.py$|(^|/)core/[^/]+_jax\.py$"
+
+# np.<name> calls that are trace-time static metadata, not host compute
+# fmt: off
+_NP_STATIC_OK = {
+    "iinfo", "finfo", "dtype", "ndim", "shape",
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_",
+}
+
+_PAD_HELPER_NAMES = {
+    "_pad_rows", "_pad_feats", "_pow2_rows", "pad_rows", "pad_feats",
+    "pow2_rows", "round_up_pow2",
+}
+# fmt: on
+
+
+def _call_basename(node: ast.Call) -> str:
+    return dotted_name(node.func).rsplit(".", 1)[-1]
+
+
+def _np_root(node: ast.Call) -> str:
+    name = dotted_name(node.func)
+    return name.split(".", 1)[0] if "." in name else ""
+
+
+class JitHostSyncRule(Rule):
+    code = "RPL101"
+    name = "jit-host-sync"
+    doc = "host sync / host compute inside jit-reachable code"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.path_matches(DEVICE_PATH):
+            return
+        for fn in ctx.jit.reachable_functions():
+            static_names = jit_static_param_names(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                base = _call_basename(node)
+                full = dotted_name(node.func)
+                if base in {"item", "tolist"} and isinstance(node.func, ast.Attribute):
+                    yield ctx.finding(
+                        node,
+                        self.code,
+                        f"`.{base}()` forces a device sync inside jit-reachable "
+                        f"`{fn.name}` (DESIGN §5: no host sync in the fused path)",
+                    )
+                elif full == "jax.device_get":
+                    yield ctx.finding(
+                        node,
+                        self.code,
+                        f"`jax.device_get` inside jit-reachable `{fn.name}`",
+                    )
+                elif _np_root(node) in {"np", "numpy", "onp"}:
+                    if base in _NP_STATIC_OK:
+                        continue
+                    yield ctx.finding(
+                        node,
+                        self.code,
+                        f"host numpy call `{full}` inside jit-reachable "
+                        f"`{fn.name}` — use jnp/lax (or pure-Python static "
+                        f"math) so the trace stays on device",
+                    )
+                elif (
+                    base in {"float", "bool"}
+                    and isinstance(node.func, ast.Name)
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], (ast.Subscript, ast.Attribute, ast.Call))
+                    and not (
+                        isinstance(node.args[0], ast.Call)
+                        and _call_basename(node.args[0]) in {"int", "len", "float", "min", "max"}
+                    )
+                ):
+                    arg = node.args[0]
+                    root = arg
+                    while isinstance(root, (ast.Subscript, ast.Attribute)):
+                        root = root.value
+                    if isinstance(root, ast.Name) and root.id in static_names:
+                        continue
+                    yield ctx.finding(
+                        node,
+                        self.code,
+                        f"`{base}()` on an array-valued expression inside "
+                        f"jit-reachable `{fn.name}` concretizes a traced value",
+                    )
+
+
+class NonPow2BucketRule(Rule):
+    code = "RPL102"
+    name = "non-pow2-bucket"
+    doc = "non-power-of-two literal flowing into a bucket/padding helper"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.path_matches(DEVICE_PATH):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_basename(node) not in _PAD_HELPER_NAMES:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if (
+                    isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, int)
+                    and not isinstance(arg.value, bool)
+                    and not is_pow2(arg.value)
+                ):
+                    yield ctx.finding(
+                        arg,
+                        self.code,
+                        f"bucket/padding helper `{_call_basename(node)}` fed "
+                        f"non-pow-2 literal {arg.value} — every distinct shape "
+                        f"re-jits (DESIGN §5 pow-2 bucketing)",
+                    )
+
+
+class MutableJitDefaultRule(Rule):
+    code = "RPL103"
+    name = "mutable-jit-default"
+    doc = "mutable/unhashable default argument on a jit-wrapped function"
+
+    _MUTABLE_CTORS = {"list", "dict", "set", "bytearray"}
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.path_matches(DEVICE_PATH):
+            return
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not any(decorator_is_jit(d) for d in fn.decorator_list):
+                continue
+            defaults = list(fn.args.defaults) + [
+                d for d in fn.args.kw_defaults if d is not None
+            ]
+            for d in defaults:
+                bad = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(d, ast.Call)
+                    and _call_basename(d) in self._MUTABLE_CTORS
+                )
+                if bad:
+                    yield ctx.finding(
+                        d,
+                        self.code,
+                        f"mutable default on jit-wrapped `{fn.name}` — "
+                        f"unhashable as a static arg and shared across traces",
+                    )
+
+
+RULES = [JitHostSyncRule(), NonPow2BucketRule(), MutableJitDefaultRule()]

@@ -1,0 +1,400 @@
+"""RPL3xx — serve-plane lock/concurrency discipline (DESIGN.md §9–§11).
+
+Scope: ``serving/*.py``.  The serve plane runs an ingest thread, an async
+offline worker, and arbitrary query threads against shared engine state;
+these rules make the locking story *declared* and machine-checked.
+
+Annotation vocabulary (trailing comments):
+
+  ``# guarded-by: <lockattr>``   on a ``self.x = ...`` line in ``__init__``
+        (or a dataclass field line): every access outside ``__init__``
+        must hold ``self.<lockattr>``.
+  ``# holds: <lockattr>[, ...]`` on/above a ``def``: the method is only
+        called with those locks already held.
+  ``# owner: <thread>``          single-owner attr — one thread mutates,
+        no lock needed (document which thread).
+  ``# unsynchronized: <reason>`` documented benign race (e.g. GIL-atomic
+        monotonic counters).
+  ``# may-acquire: Cls.lock``    on a call line: the callee acquires that
+        lock (used where the callee's type is not statically resolvable).
+
+RPL301  shared mutable attribute with none of the annotations above.
+RPL302  access to a ``guarded-by`` attribute outside a ``with
+        self.<lock>:`` block in a method not annotated ``# holds:``.
+RPL303  lock acquisition order violates the declared total order
+        (``# lock-order: A.x -> B.y -> ...`` in ``serving/__init__.py``)
+        — deadlock-freedom by construction.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Iterable
+
+from tools.lint.framework import FileContext, Finding, Rule, dotted_name
+
+SERVING_PATH = r"(^|/)serving/[^/]+\.py$"
+
+GUARDED_RE = re.compile(r"#\s*guarded-by:\s*(\w+)")
+HOLDS_RE = re.compile(r"#\s*holds:\s*([\w,\s]+)")
+OWNER_RE = re.compile(r"#\s*owner:\s*(\S.*)")
+UNSYNC_RE = re.compile(r"#\s*unsynchronized:\s*(\S.*)")
+MAY_ACQUIRE_RE = re.compile(r"#\s*may-acquire:\s*([\w.,\s]+)")
+LOCK_ORDER_RE = re.compile(r"#\s*lock-order:\s*(.+)")
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+# fmt: off
+_MUTATORS = {
+    "append", "extend", "insert", "pop", "popleft", "appendleft", "remove",
+    "clear", "update", "add", "discard", "setdefault", "popitem", "sort",
+}
+# fmt: on
+_FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """'x' for expressions rooted at ``self.x``; None otherwise."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _line_annotation(ctx: FileContext, lineno: int, regex: re.Pattern) -> str | None:
+    """Trailing comment on the line itself, or a standalone comment block
+    directly above it.  A *trailing* comment on an earlier line never
+    applies (it belongs to that line's own statement)."""
+    m = regex.search(ctx.line_text(lineno))
+    if m:
+        return m.group(1).strip()
+    ln = lineno - 1
+    while ln >= 1 and ctx.line_text(ln).startswith("#"):
+        m = regex.search(ctx.line_text(ln))
+        if m:
+            return m.group(1).strip()
+        ln -= 1
+    return None
+
+
+def _def_annotation(ctx: FileContext, fn: ast.AST, regex: re.Pattern) -> str | None:
+    """Annotation on the def line, or any line between the decorator block
+    start and the def (covers a standalone comment above the def)."""
+    start = min([fn.lineno] + [d.lineno for d in fn.decorator_list])
+    for ln in range(start - 1, fn.lineno + 1):
+        m = regex.search(ctx.line_text(ln)) if ln >= 1 else None
+        if m:
+            return m.group(1).strip()
+    return None
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    ctx: FileContext
+    locks: set[str] = field(default_factory=set)
+    guarded: dict[str, str] = field(default_factory=dict)  # attr -> lock attr
+    annotated: set[str] = field(default_factory=set)  # owner/unsync/guarded attrs
+    init_lines: dict[str, int] = field(default_factory=dict)  # attr -> lineno
+    attr_types: dict[str, str] = field(default_factory=dict)  # attr -> class name
+    methods: dict[str, ast.AST] = field(default_factory=dict)
+
+
+def _collect_class(ctx: FileContext, node: ast.ClassDef) -> ClassInfo:
+    info = ClassInfo(name=node.name, node=node, ctx=ctx)
+    for item in node.body:
+        if isinstance(item, _FuncDef):
+            info.methods[item.name] = item
+        elif isinstance(item, ast.AnnAssign) and isinstance(item.target, ast.Name):
+            # dataclass field — annotations allowed on the field line
+            attr = item.target.id
+            info.init_lines.setdefault(attr, item.lineno)
+            _apply_line_annotations(ctx, info, attr, item.lineno)
+    init = info.methods.get("__init__")
+    if init is not None:
+        for stmt in ast.walk(init):
+            targets: list[ast.AST] = []
+            value = None
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = [stmt.target], stmt.value
+            for t in targets:
+                attr = _self_attr(t)
+                if attr is None:
+                    continue
+                info.init_lines.setdefault(attr, stmt.lineno)
+                if isinstance(value, ast.Call):
+                    base = dotted_name(value.func).rsplit(".", 1)[-1]
+                    if base in _LOCK_CTORS:
+                        info.locks.add(attr)
+                    elif base and base[0].isupper():
+                        info.attr_types[attr] = base
+                _apply_line_annotations(ctx, info, attr, stmt.lineno)
+    return info
+
+
+def _apply_line_annotations(ctx: FileContext, info: ClassInfo, attr: str, lineno: int):
+    g = _line_annotation(ctx, lineno, GUARDED_RE)
+    if g:
+        info.guarded[attr] = g
+        info.annotated.add(attr)
+    if _line_annotation(ctx, lineno, OWNER_RE) or _line_annotation(ctx, lineno, UNSYNC_RE):
+        info.annotated.add(attr)
+
+
+def _mutations_outside_init(info: ClassInfo) -> dict[str, int]:
+    """attr -> first line where it is rebound or container-mutated outside
+    ``__init__`` (the definition of 'shared mutable' for RPL301)."""
+    out: dict[str, int] = {}
+
+    def note(attr: str | None, lineno: int):
+        if attr and (attr not in out or lineno < out[attr]):
+            out[attr] = lineno
+
+    for name, fn in info.methods.items():
+        if name == "__init__":
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in targets:
+                    note(_self_attr(t), node.lineno)  # self.x = / self.x +=
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        note(_self_attr(t.value), node.lineno)  # self.x[k]= / self.x.y=
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    note(_self_attr(t), node.lineno)
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        note(_self_attr(t.value), node.lineno)
+            elif (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _MUTATORS):
+                note(_self_attr(node.func.value), node.lineno)
+    return out
+
+
+def _with_locks(node: ast.With) -> set[str]:
+    """Lock attr names acquired by ``with self.<lk>:`` items."""
+    out: set[str] = set()
+    for item in node.items:
+        attr = _self_attr(item.context_expr)
+        if attr:
+            out.add(attr)
+    return out
+
+
+class UnannotatedSharedAttrRule(Rule):
+    code = "RPL301"
+    name = "unannotated-shared-attr"
+    doc = "shared mutable attribute without guarded-by/owner/unsynchronized"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.path_matches(SERVING_PATH):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = _collect_class(ctx, node)
+            mutated = _mutations_outside_init(info)
+            for attr, mline in sorted(mutated.items()):
+                if attr in info.locks or attr in info.annotated:
+                    continue
+                anchor = info.init_lines.get(attr, mline)
+                yield ctx.finding(
+                    anchor,
+                    self.code,
+                    f"`{info.name}.{attr}` is mutated outside __init__ "
+                    f"(line {mline}) with no `# guarded-by:` / `# owner:` / "
+                    f"`# unsynchronized:` annotation — declare its "
+                    f"concurrency story (DESIGN §9–§11)",
+                )
+
+
+class GuardedAccessRule(Rule):
+    code = "RPL302"
+    name = "guarded-attr-access"
+    doc = "guarded attribute accessed without holding its declared lock"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.path_matches(SERVING_PATH):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = _collect_class(ctx, node)
+            if not info.guarded:
+                continue
+            for mname, fn in info.methods.items():
+                if mname == "__init__":
+                    continue
+                held0: set[str] = set()
+                holds = _def_annotation(ctx, fn, HOLDS_RE)
+                if holds:
+                    held0 = {h.strip() for h in holds.split(",") if h.strip()}
+                yield from self._walk(ctx, info, fn, fn, held0)
+
+    def _walk(self, ctx, info, fn, node, held) -> Iterable[Finding]:
+        for child in ast.iter_child_nodes(node):
+            child_held = held
+            if isinstance(child, ast.With):
+                child_held = held | _with_locks(child)
+            attr = _self_attr(child)
+            if attr is not None and attr in info.guarded:
+                lock = info.guarded[attr]
+                if lock not in held:
+                    yield ctx.finding(
+                        child,
+                        self.code,
+                        f"`self.{attr}` is `# guarded-by: {lock}` but "
+                        f"`{info.name}.{fn.name}` touches it without "
+                        f"`with self.{lock}:` (annotate `# holds: {lock}` "
+                        f"if the caller locks)",
+                    )
+                continue  # don't descend into self.<attr>.<...> twice
+            yield from self._walk(ctx, info, fn, child, child_held)
+
+
+class LockOrderRule(Rule):
+    code = "RPL303"
+    name = "lock-order"
+    doc = "lock acquisition order must follow the declared total order"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, ctxs: list[FileContext]) -> Iterable[Finding]:
+        serving = [c for c in ctxs if c.path_matches(SERVING_PATH)]
+        if not serving:
+            return
+        order, decl_ctx = self._declared_order(serving)
+        if not order:
+            return
+        classes: dict[str, ClassInfo] = {}
+        for c in serving:
+            for node in ast.walk(c.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes[node.name] = _collect_class(c, node)
+
+        closures = self._acquisition_closures(classes)
+        index = {tok: i for i, tok in enumerate(order)}
+
+        for info in classes.values():
+            for mname, fn in info.methods.items():
+                held0: set[str] = set()
+                holds = _def_annotation(info.ctx, fn, HOLDS_RE)
+                if holds:
+                    held0 = {
+                        f"{info.name}.{h.strip()}"
+                        for h in holds.split(",") if h.strip()
+                    }
+                yield from self._walk(info, fn, fn, held0, classes, closures, index)
+
+    # -- declaration -------------------------------------------------------
+
+    @staticmethod
+    def _declared_order(ctxs: list[FileContext]) -> tuple[list[str], FileContext | None]:
+        for c in ctxs:
+            if not c.rel.endswith("__init__.py"):
+                continue
+            for line in c.lines:
+                m = LOCK_ORDER_RE.search(line)
+                if m:
+                    toks = re.split(r"->|→", m.group(1))
+                    return [t.strip() for t in toks if t.strip()], c
+        return [], None
+
+    # -- per-method acquisition closures ----------------------------------
+
+    def _acquisition_closures(self, classes: dict[str, ClassInfo]) -> dict[str, set[str]]:
+        """'Cls.method' -> set of 'Cls.lock' tokens the call may acquire,
+        via fixpoint over with-blocks, self-calls, typed-attr calls, and
+        `# may-acquire:` annotations."""
+        clo: dict[str, set[str]] = {
+            f"{info.name}.{m}": set()
+            for info in classes.values() for m in info.methods
+        }
+        changed = True
+        while changed:
+            changed = False
+            for info in classes.values():
+                for mname, fn in info.methods.items():
+                    key = f"{info.name}.{mname}"
+                    acq = set(clo[key])
+                    for node in ast.walk(fn):
+                        acq |= self._node_acquisitions(info, node, classes, clo)
+                    if acq != clo[key]:
+                        clo[key] = acq
+                        changed = True
+        return clo
+
+    def _node_acquisitions(self, info, node, classes, clo) -> set[str]:
+        out: set[str] = set()
+        if isinstance(node, ast.With):
+            for lk in _with_locks(node):
+                if lk in info.locks:
+                    out.add(f"{info.name}.{lk}")
+        elif isinstance(node, ast.Call):
+            out |= self._call_acquisitions(info, node, classes, clo)
+        return out
+
+    def _call_acquisitions(self, info, call, classes, clo) -> set[str]:
+        ann = _line_annotation(info.ctx, call.lineno, MAY_ACQUIRE_RE)
+        if ann:
+            return {t.strip() for t in ann.split(",") if t.strip()}
+        if not isinstance(call.func, ast.Attribute):
+            return set()
+        owner = call.func.value
+        attr = _self_attr(owner)
+        if attr is None and isinstance(owner, ast.Name) and owner.id == "self":
+            # self.method(...)
+            return set(clo.get(f"{info.name}.{call.func.attr}", ()))
+        if attr is not None:
+            # self.<attr>.method(...) on a constructor-typed attribute
+            tname = info.attr_types.get(attr)
+            if tname in classes:
+                return set(clo.get(f"{tname}.{call.func.attr}", ()))
+        return set()
+
+    # -- ordered traversal -------------------------------------------------
+
+    def _walk(self, info, fn, node, held, classes, closures, index) -> Iterable[Finding]:
+        for child in ast.iter_child_nodes(node):
+            child_held = held
+            acquired: set[str] = set()
+            if isinstance(child, ast.With):
+                acquired = {
+                    f"{info.name}.{lk}"
+                    for lk in _with_locks(child) if lk in info.locks
+                }
+                child_held = held | acquired
+            elif isinstance(child, ast.Call):
+                acquired = self._call_acquisitions(info, child, classes, closures)
+            for a in sorted(acquired):
+                for h in sorted(held):
+                    if h == a:
+                        continue
+                    if h in index and a in index and index[h] >= index[a]:
+                        yield info.ctx.finding(
+                            child,
+                            self.code,
+                            f"`{info.name}.{fn.name}` acquires `{a}` while "
+                            f"holding `{h}` — violates declared lock-order "
+                            f"({' -> '.join(index)})",
+                        )
+                    elif h in index and a not in index:
+                        yield info.ctx.finding(
+                            child,
+                            self.code,
+                            f"`{info.name}.{fn.name}` acquires undeclared "
+                            f"lock `{a}` while holding `{h}` — add it to the "
+                            f"`# lock-order:` declaration in serving/__init__.py",
+                        )
+            yield from self._walk(info, fn, child, child_held, classes, closures, index)
+
+
+RULES = [UnannotatedSharedAttrRule(), GuardedAccessRule(), LockOrderRule()]

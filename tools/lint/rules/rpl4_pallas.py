@@ -1,0 +1,187 @@
+"""RPL4xx — Pallas / kernel hygiene (DESIGN.md §2, §6, §12).
+
+RPL401  integer literal in a ``pl.BlockSpec`` block shape that is not a
+        power of two — padded bucket dims are pow-2 (DESIGN §5), so any
+        non-pow-2 literal cannot divide them and silently degrades to
+        masked ragged tiles.
+RPL402  dense L×L materialization outside the documented dense-reference
+        surface: calls to ``pairwise_sqdist``/``pairwise_dist`` outside
+        ``kernels/ref.py`` (``pairwise_dist_pinned`` is the documented
+        shard-stable exception, DESIGN §12), and same-name ``(L, L)``
+        array allocation outside the documented dense entry points.
+        Scope: ``src/`` only — tests/benchmarks exercising the oracles
+        are the oracles' job.
+RPL403  non-integer expression in a ``pallas_call`` grid — grid sizes
+        must be Python ints at trace time or every call re-specializes.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.lint.framework import FileContext, Finding, Rule, dotted_name, is_pow2
+
+REF_PATH = r"(^|/)kernels/ref\.py$"
+SRC_PATH = r"(^|/)src/"
+# the host f64 oracles are O(n²)-dense *by design* (DESIGN §2) — the
+# no-L×L contract is about the device path
+HOST_ORACLE_PATH = r"(^|/)core/(bubble_tree|hdbscan|dynamic)\.py$"
+
+# dense-reference entry points documented in DESIGN.md — allowed to call
+# the pairwise helpers / build the full matrix outside kernels/ref.py
+_DOC_DENSE_FUNCS = {
+    "bubble_mutual_reachability",  # DESIGN §6 documented dense path
+    "state_mutual_reach_dense",    # dynamic host oracle
+    "_dense_dists",
+}
+_DENSE_CALL_NAMES = {"pairwise_sqdist", "pairwise_dist"}
+_ALLOC_NAMES = {"zeros", "ones", "full", "empty"}
+
+
+def _basename(node: ast.AST) -> str:
+    return dotted_name(node).rsplit(".", 1)[-1]
+
+
+def _enclosing_funcs(tree: ast.Module) -> list[tuple[int, int, str]]:
+    return [
+        (n.lineno, n.end_lineno or n.lineno, n.name)
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+
+
+def _in_documented_dense(funcs, lineno: int) -> bool:
+    return any(lo <= lineno <= hi and name in _DOC_DENSE_FUNCS for lo, hi, name in funcs)
+
+
+class BlockSpecPow2Rule(Rule):
+    code = "RPL401"
+    name = "blockspec-pow2"
+    doc = "BlockSpec literal block dims must be pow-2 (divide padded buckets)"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and _basename(node.func) == "BlockSpec"):
+                continue
+            shapes = [a for a in node.args if isinstance(a, (ast.Tuple, ast.List))]
+            shapes += [
+                kw.value for kw in node.keywords
+                if kw.arg == "block_shape" and isinstance(kw.value, (ast.Tuple, ast.List))
+            ]
+            for shape in shapes:
+                for elt in shape.elts:
+                    if (
+                        isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, int)
+                        and not isinstance(elt.value, bool)
+                        and not is_pow2(elt.value)
+                    ):
+                        yield ctx.finding(
+                            elt,
+                            self.code,
+                            f"BlockSpec literal dim {elt.value} is not a "
+                            f"power of two — it cannot divide the pow-2 "
+                            f"padded bucket dims (DESIGN §5/§6)",
+                        )
+
+
+class DenseMaterializationRule(Rule):
+    code = "RPL402"
+    name = "dense-materialization"
+    doc = "L×L HBM materialization outside the documented dense-reference surface"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if (
+            ctx.path_matches(REF_PATH)
+            or ctx.path_matches(HOST_ORACLE_PATH)
+            or not ctx.path_matches(SRC_PATH)
+        ):
+            return
+        funcs = _enclosing_funcs(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            base = _basename(node.func)
+            if base in _DENSE_CALL_NAMES:
+                if _in_documented_dense(funcs, node.lineno):
+                    continue
+                # a dispatcher/backend method of the same name delegating
+                # to the kernel or ref implementation is not a new
+                # materialization site
+                if any(lo <= node.lineno <= hi and name == base for lo, hi, name in funcs):
+                    continue
+                yield ctx.finding(
+                    node,
+                    self.code,
+                    f"`{base}` builds the full L×L matrix outside "
+                    f"kernels/ref.py — route through the strip/spatial "
+                    f"kernels or a documented dense entry point (DESIGN §6)",
+                )
+            elif base in _ALLOC_NAMES:
+                if _in_documented_dense(funcs, node.lineno):
+                    continue
+                for arg in node.args[:1]:
+                    if (
+                        isinstance(arg, ast.Tuple)
+                        and len(arg.elts) == 2
+                        and isinstance(arg.elts[0], ast.Name)
+                        and isinstance(arg.elts[1], ast.Name)
+                        and arg.elts[0].id == arg.elts[1].id
+                    ):
+                        yield ctx.finding(
+                            arg,
+                            self.code,
+                            f"square ({arg.elts[0].id}, {arg.elts[0].id}) "
+                            f"allocation outside the documented dense surface "
+                            f"— L×L HBM is what the strip kernels exist to "
+                            f"avoid (DESIGN §6)",
+                        )
+
+
+class GridIntRule(Rule):
+    code = "RPL403"
+    name = "grid-python-int"
+    doc = "pallas_call grid entries must be Python ints"
+
+    _OK_CALLS = {"int", "len", "cdiv", "min", "max"}
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and _basename(node.func) == "pallas_call"):
+                continue
+            for kw in node.keywords:
+                if kw.arg != "grid":
+                    continue
+                elts = (
+                    kw.value.elts
+                    if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value]
+                )
+                for elt in elts:
+                    if not self._int_like(elt):
+                        yield ctx.finding(
+                            elt,
+                            self.code,
+                            "pallas_call grid entry is not a Python-int "
+                            "expression — traced or float grid sizes "
+                            "re-specialize the kernel every call (DESIGN §6)",
+                        )
+
+    def _int_like(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, int) and not isinstance(node.value, bool)
+        if isinstance(node, ast.Name):
+            return True
+        if isinstance(node, ast.BinOp):
+            return self._int_like(node.left) and self._int_like(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self._int_like(node.operand)
+        if isinstance(node, ast.Call):
+            return _basename(node.func) in self._OK_CALLS
+        if isinstance(node, ast.Attribute):
+            return True  # e.g. module-level constant; give names the benefit
+        return False
+
+
+RULES = [BlockSpecPow2Rule(), DenseMaterializationRule(), GridIntRule()]
