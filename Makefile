@@ -7,11 +7,11 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 # ruff-format adoption list: files here are kept black-clean; the
 # pre-existing tree is linted (ruff check) but not reflowed wholesale.
-FORMAT_PATHS ?= scripts/check_bench_regression.py tools/lint \
-  src/repro/serving/tenants.py
+FORMAT_PATHS ?= scripts/check_bench_regression.py tools/lint tools/audit \
+  src/repro/serving/tenants.py src/repro/core/device_table.py
 
 .PHONY: test test-multidevice bench-smoke bench-gate docs-links lint \
-  lint-deep check
+  lint-deep audit check
 
 test:
 	$(PYTHON) -m pytest $(PYTEST_FLAGS)
@@ -48,4 +48,11 @@ lint:
 lint-deep:
 	$(PYTHON) -m tools.lint src tests benchmarks scripts
 
-check: docs-links lint lint-deep test
+# jaxpr-audit (tools/audit): abstract-trace contract analysis over every
+# registered jit entry point (DESIGN.md §14) — f64/callback/pow-2/dense
+# rules (RPL50x), recompile-churn gate, golden lowering digests.
+# Regenerate goldens deliberately: python -m tools.audit --update-golden
+audit:
+	$(PYTHON) -m tools.audit
+
+check: docs-links lint lint-deep audit test

@@ -82,6 +82,27 @@ def dig(obj, path):
     return float(obj)
 
 
+def read_metric(dirpath, fname, path):
+    """Return ``(value, None)`` or ``(None, reason)``.
+
+    The reason names the file AND the metric path, so a key missing from
+    one run (baseline vs fresh) is attributable from the job log alone.
+    """
+    fpath = os.path.join(dirpath, fname)
+    dotted = ".".join(str(p) for p in path)
+    try:
+        with open(fpath) as f:
+            doc = json.load(f)
+    except OSError as e:
+        return None, f"{fpath}: {e.strerror or e}"
+    except json.JSONDecodeError as e:
+        return None, f"{fpath}: unparsable JSON ({e})"
+    try:
+        return dig(doc, path), None
+    except (KeyError, IndexError, TypeError, ValueError) as e:
+        return None, f"{fpath}: metric {dotted!r} missing ({type(e).__name__}: {e})"
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default="bench_out")
@@ -95,16 +116,16 @@ def main(argv=None):
 
     failures = []
     rows = []
+    missing = []
     for fname, path, kind in METRICS:
         label = f"{fname}:{'.'.join(str(p) for p in path)}"
-        try:
-            with open(os.path.join(args.baseline, fname)) as f:
-                base = dig(json.load(f), path)
-            with open(os.path.join(args.fresh, fname)) as f:
-                new = dig(json.load(f), path)
-        except (OSError, KeyError, IndexError, ValueError) as e:
+        base, base_err = read_metric(args.baseline, fname, path)
+        new, fresh_err = read_metric(args.fresh, fname, path)
+        if base_err or fresh_err:
+            which = "both" if base_err and fresh_err else ("baseline" if base_err else "fresh")
             failures.append(label)
-            rows.append((label, "?", "?", f"MISSING ({e})"))
+            rows.append((label, "?", "?", f"MISSING ({which})"))
+            missing.extend(e for e in (base_err, fresh_err) if e)
             continue
         if kind == "ms" and base < MIN_BASELINE_MS:
             rows.append((label, base, new, "skipped (tiny baseline)"))
@@ -127,6 +148,8 @@ def main(argv=None):
         fb = f"{base:.3f}" if isinstance(base, float) else base
         fn = f"{new:.3f}" if isinstance(new, float) else new
         print(f"{label:<{width}} {fb:>12} {fn:>12}  {verdict}")
+    for msg in missing:
+        print(f"missing metric: {msg}", file=sys.stderr)
     if failures:
         print(f"\n{len(failures)} regression(s) beyond {args.tolerance}x tolerance")
         return 1

@@ -61,6 +61,7 @@ def _kahan_add(hi, err, delta):
     return t, err
 
 
+# trace-contract: flat_insert rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("hp", "use_ref", "spatial"))
 def _flat_insert(LS, LSe, SS, SSe, N, alive, Xc, valid, cap, hp, use_ref,
                  spatial=False):
@@ -99,6 +100,7 @@ def _flat_insert(LS, LSe, SS, SSe, N, alive, Xc, valid, cap, hp, use_ref,
     return LS, LSe, SS, SSe, N, a, over
 
 
+# trace-contract: flat_patch rules=f32,no-callbacks,pow2
 @jax.jit
 def _flat_patch(LS, LSe, SS, SSe, N, alive, idx, LSr, SSr, Nr, al):
     """Structural row patch: overwrite the given slots from host truth
@@ -116,6 +118,7 @@ def _flat_patch(LS, LSe, SS, SSe, N, alive, idx, LSr, SSr, Nr, al):
     )
 
 
+# trace-contract: flat_delete rules=f32,no-callbacks,pow2
 @jax.jit
 def _flat_delete(LS, LSe, SS, SSe, N, alive, slots, Xc, valid, m):
     """Fixed-shape delete program: per-victim leaf slots are known to the

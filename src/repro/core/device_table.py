@@ -76,16 +76,15 @@ class HostTableCapture:
     SS: np.ndarray
     N: np.ndarray
 
-    def recluster(self, backend, *, min_pts: int, min_cluster_size: float,
-                  mesh=None, mesh_axis: str = "data"):
+    def recluster(
+        self, backend, *, min_pts: int, min_cluster_size: float, mesh=None, mesh_axis: str = "data"
+    ):
         from repro.kernels import ops
 
-        rep, extent, n_b, center = ops.bubble_table(
-            self.LS, self.SS, self.N, self.ids)
+        rep, extent, n_b, center = ops.bubble_table(self.LS, self.SS, self.N, self.ids)
         kw = {} if mesh is None else {"mesh": mesh, "mesh_axis": mesh_axis}
         res = backend.offline_recluster_from_table(
-            rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size,
-            **kw,
+            rep, n_b, extent, min_pts, min_cluster_size=min_cluster_size, **kw
         )
         return res, rep, n_b, center
 
@@ -105,15 +104,15 @@ class FlatTableCapture:
     mesh: Any = None
     mesh_axis: str = "data"
 
-    def recluster(self, backend, *, min_pts: int, min_cluster_size: float,
-                  mesh=None, mesh_axis: str = "data"):
+    def recluster(
+        self, backend, *, min_pts: int, min_cluster_size: float, mesh=None, mesh_axis: str = "data"
+    ):
         if mesh is None:
             mesh, mesh_axis = self.mesh, self.mesh_axis
         mp = max(1, min(int(min_pts), int(self.n_points)))
         kw = {} if mesh is None else {"mesh": mesh, "mesh_axis": mesh_axis}
         return backend.offline_recluster_from_device_table(
-            *self.view, self.origin, mp,
-            min_cluster_size=min_cluster_size, **kw,
+            *self.view, self.origin, mp, min_cluster_size=min_cluster_size, **kw
         )
 
 
@@ -127,15 +126,15 @@ class DynamicStateCapture:
     state: Any
     dim: int
 
-    def recluster(self, backend, *, min_pts: int, min_cluster_size: float,
-                  mesh=None, mesh_axis: str = "data"):
+    def recluster(
+        self, backend, *, min_pts: int, min_cluster_size: float, mesh=None, mesh_axis: str = "data"
+    ):
         if mesh is not None:
             raise ValueError(
                 "the exact-dynamic path maintains the point-level MST "
                 "incrementally — there is no O(L²) stage for mesh= to shard"
             )
-        res, _, rep32 = backend.incremental_recluster(
-            self.state, float(min_cluster_size))
+        res, _, rep32 = backend.incremental_recluster(self.state, float(min_cluster_size))
         rep = np.asarray(rep32, dtype=np.float64)
         n_b = np.ones(rep.shape[0], dtype=np.float64)
         center = rep.mean(axis=0) if rep.size else np.zeros(self.dim)
@@ -162,5 +161,4 @@ class SnapshotDeviceTable:
         ids, LS, SS, N = self.tree.leaf_cf_buffers()
         # advanced indexing allocates fresh arrays — that IS the
         # isolation copy an async pass needs
-        return HostTableCapture(
-            ids=np.arange(len(ids)), LS=LS[ids], SS=SS[ids], N=N[ids])
+        return HostTableCapture(ids=np.arange(len(ids)), LS=LS[ids], SS=SS[ids], N=N[ids])

@@ -157,6 +157,7 @@ def _scatter_rows(A: jax.Array, tgt: jax.Array, rows_new: jax.Array) -> jax.Arra
 # batched insertion (Algorithm 5 / Eq. 11)
 # --------------------------------------------------------------------------
 
+# trace-contract: dyn_insert_batch rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("min_pts", "rk_cap"))
 def insert_batch(state: DynState, P, slots, valid, *, min_pts: int,
                  rk_cap: int) -> DynState:
@@ -195,7 +196,7 @@ def insert_batch(state: DynState, P, slots, valid, *, min_pts: int,
     horizon = state.knn_dst[:, K - 1]
     dmin = jnp.min(jnp.where(valid[:, None], D_new, jnp.inf), axis=0)
     M = alive_old & (dmin < horizon)
-    rk_n = jnp.sum(M.astype(jnp.int32))
+    rk_n = jnp.sum(M, dtype=jnp.int32)
     ok = state.ok & (rk_n <= rk_cap)
     (rids,) = jnp.nonzero(M, size=rk_cap, fill_value=0)
     rids = rids.astype(jnp.int32)
@@ -244,7 +245,7 @@ def insert_batch(state: DynState, P, slots, valid, *, min_pts: int,
         mst_v=jnp.where(pay_ok, mv, 0),
         mst_raw=jnp.where(pay_ok, mraw, 0.0),
         mst_valid=pay_ok,
-        n_alive=state.n_alive + jnp.sum(valid.astype(jnp.int32)),
+        n_alive=state.n_alive + jnp.sum(valid, dtype=jnp.int32),
         ok=ok,
     )
 
@@ -253,6 +254,7 @@ def insert_batch(state: DynState, P, slots, valid, *, min_pts: int,
 # batched deletion (Algorithm 6 / Eq. 12)
 # --------------------------------------------------------------------------
 
+# trace-contract: dyn_delete_batch rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("min_pts", "rk_cap", "s_cap"))
 def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
                  s_cap: int) -> DynState:
@@ -269,12 +271,12 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
         tgt
     ].set(True)[:Np]
     alive = state.alive & ~del_flag
-    n_del = jnp.sum((valid & state.alive[jnp.minimum(slots, Np - 1)]).astype(jnp.int32))
+    n_del = jnp.sum(valid & state.alive[jnp.minimum(slots, Np - 1)], dtype=jnp.int32)
 
     # RkNN: alive rows listing any retired slot — recompute from a strip
     safe_idx = jnp.minimum(jnp.maximum(state.knn_idx, 0), Np - 1)
     lists = alive & (del_flag[safe_idx] & (state.knn_idx >= 0)).any(axis=1)
-    rk_n = jnp.sum(lists.astype(jnp.int32))
+    rk_n = jnp.sum(lists, dtype=jnp.int32)
     ok = state.ok & (rk_n <= rk_cap)
     (rids,) = jnp.nonzero(lists, size=rk_cap, fill_value=0)
     rids = rids.astype(jnp.int32)
@@ -297,7 +299,11 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
     touched = lists | del_flag
     keep = state.mst_valid & ~(touched[state.mst_u] | touched[state.mst_v])
     _, _, labels_f = boruvka_edges_jax(
-        state.mst_u, state.mst_v, jnp.where(keep, 0.0, jnp.inf), keep, Np
+        state.mst_u,
+        state.mst_v,
+        jnp.where(keep, jnp.asarray(0.0, jnp.float32), jnp.asarray(jnp.inf, jnp.float32)),
+        keep,
+        Np
     )
     # compact component ids over ALIVE nodes (dead singletons excluded)
     rep_alive = jnp.where(alive, labels_f, Np)
@@ -310,7 +316,7 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
     )[:Kc]
     biggest = jnp.argmax(cnt).astype(jnp.int32)
     s_mask = alive & (cid != biggest)
-    s_n = jnp.sum(s_mask.astype(jnp.int32))
+    s_n = jnp.sum(s_mask, dtype=jnp.int32)
     ok = ok & (s_n <= s_cap) & (jnp.sum(present) <= Kc)
     (sids,) = jnp.nonzero(s_mask, size=s_cap, fill_value=0)
     sids = sids.astype(jnp.int32)
@@ -329,7 +335,7 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
     w_big = jnp.where(to_big, WS, jnp.inf)
     row_min = jnp.min(w_big, axis=1)  # (s_cap,)
     row_arg = jnp.argmin(w_big, axis=1).astype(jnp.int32)
-    comp_big_w = jnp.full((Kc + 1,), jnp.inf).at[jnp.minimum(rowc, Kc)].min(
+    comp_big_w = jnp.full((Kc + 1,), jnp.inf, WS.dtype).at[jnp.minimum(rowc, Kc)].min(
         jnp.where(svalid, row_min, jnp.inf)
     )[:Kc]
     hit_r = svalid & (row_min == comp_big_w[jnp.minimum(rowc, Kc - 1)])
@@ -347,7 +353,7 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
     pair = jnp.where(cross, rowc[:, None] * Kc + colc[None, :], Kc * Kc)
     pair_f = pair.reshape(-1)
     flat_w = jnp.where(cross, WSS, jnp.inf).reshape(-1)
-    Wc = jnp.full((Kc * Kc + 1,), jnp.inf).at[pair_f].min(flat_w)[:-1]
+    Wc = jnp.full((Kc * Kc + 1,), jnp.inf, WS.dtype).at[pair_f].min(flat_w)[:-1]
     hit = cross.reshape(-1) & (flat_w == Wc[jnp.minimum(pair_f, Kc * Kc - 1)])
     # witness indices flattened into the FULL strip: row r, column sids[c]
     full_flat = (
@@ -377,7 +383,7 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
 
     # assemble the new tree: kept survivor edges, then completion edges
     krank = jnp.cumsum(keep.astype(jnp.int32)) - 1
-    n_keep = jnp.sum(keep.astype(jnp.int32))
+    n_keep = jnp.sum(keep, dtype=jnp.int32)
     tgt_k = jnp.where(keep, krank, Np)
     nu = jnp.zeros((Np + 1,), jnp.int32).at[tgt_k].set(state.mst_u)
     nv = jnp.zeros((Np + 1,), jnp.int32).at[tgt_k].set(state.mst_v)
@@ -403,6 +409,7 @@ def delete_batch(state: DynState, slots, valid, *, min_pts: int, rk_cap: int,
     )
 
 
+# trace-contract: dyn_rebuild rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("min_pts",))
 def rebuild(state: DynState, *, min_pts: int) -> DynState:
     """From-scratch device build from X/alive only: dense d → kNN tables
@@ -415,7 +422,7 @@ def rebuild(state: DynState, *, min_pts: int) -> DynState:
     Np, K = state.knn_idx.shape
     iota = jnp.arange(Np, dtype=jnp.int32)
     alive = state.alive
-    n = jnp.sum(alive.astype(jnp.int32))
+    n = jnp.sum(alive, dtype=jnp.int32)
     D = _dense_dists(state.X)
     live2 = alive[:, None] & alive[None, :]
     D = jnp.where(live2 & (iota[:, None] != iota[None, :]), D, jnp.inf)

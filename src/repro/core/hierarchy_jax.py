@@ -148,7 +148,10 @@ def single_linkage_fixed(eu, ev, ew, valid, n_valid, weights) -> SingleLinkageAr
     is_pad = (~valid) & (pad_leaf < Lp)
     u_e = jnp.where(valid, eu, jnp.where(is_pad, pad_leaf, 0))
     v_e = jnp.where(valid, ev, 0)
-    w_e = jnp.where(valid, ew, jnp.where(is_pad, PAD_DIST, jnp.inf))
+    pad_w = jnp.where(
+        is_pad, jnp.asarray(PAD_DIST, ew.dtype), jnp.asarray(jnp.inf, ew.dtype)
+    )
+    w_e = jnp.where(valid, ew, pad_w)
 
     order = jnp.argsort(w_e, stable=True)
     u_s, v_s, w_s = u_e[order], v_e[order], w_e[order]
@@ -190,7 +193,7 @@ def single_linkage_fixed(eu, ev, ew, valid, n_valid, weights) -> SingleLinkageAr
     # scan+unroll over fori_loop: amortizes the per-iteration while-loop
     # dispatch that dominates these O(1)-body loops on CPU
     state, _ = jax.lax.scan(
-        lambda s, k: (body(k, s), None), state, jnp.arange(M), unroll=2
+        lambda s, k: (body(k, s), None), state, jnp.arange(M, dtype=jnp.int32), unroll=2
     )
     _, _, node_weight, ml, mr, md, mw = state
     return SingleLinkageArrays(ml[:M], mr[:M], md[:M], mw[:M], node_weight)
@@ -379,6 +382,7 @@ def extract_fixed(
     )
 
 
+# trace-contract: hierarchy_fixed rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("method", "allow_single_cluster"))
 def hierarchy_fixed(
     eu, ev, ew, valid, n_valid, weights, min_cluster_size,

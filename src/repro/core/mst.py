@@ -257,7 +257,7 @@ def _boruvka_round_tail(labels, row_w, row_eid, row_j, row_has,
     ev = ev.at[slot].set(comp_v)
     ew = ew.at[slot].set(comp_wt)
     valid = valid.at[slot].set(keep)
-    n_new = jnp.sum(keep.astype(jnp.int32))
+    n_new = jnp.sum(keep, dtype=jnp.int32)
     return new_labels, eu, ev, ew, valid, n_edges + n_new
 
 
@@ -519,7 +519,7 @@ def boruvka_grid_jax(grid, cd, max_rounds: int | None = None,
     # rounds (the grid is static); compute once outside the scan
     views = _block_views(grid, bn)
     valid_orig = jnp.zeros((n,), bool).at[grid.orig].set(grid.valid)
-    total_valid = jnp.sum(grid.valid.astype(jnp.int32))
+    total_valid = jnp.sum(grid.valid, dtype=jnp.int32)
 
     def round_fn(state, _):
         labels, eu, ev, ew, valid, n_edges = state
@@ -602,7 +602,7 @@ def boruvka_grid_shard_jax(grid, cd, axis: str, k: int,
         shard * NBk + jnp.arange(NBk, dtype=jnp.int32), NB - 1)
     views_l = jax.tree_util.tree_map(lambda a: a[blk_ids], views)
     valid_orig = jnp.zeros((n,), bool).at[grid.orig].set(grid.valid)
-    total_valid = jnp.sum(grid.valid.astype(jnp.int32))
+    total_valid = jnp.sum(grid.valid, dtype=jnp.int32)
 
     def round_fn(state, _):
         labels, eu, ev, ew, valid, n_edges = state
@@ -715,7 +715,7 @@ def boruvka_edges_jax(eu, ev, ew, valid, n: int):
         slot = jnp.where(keep, jnp.minimum(slot, n - 1), n)  # n = trash
         out_idx = out_idx.at[slot].set(e)
         out_valid = out_valid.at[slot].set(keep)
-        return (labels, out_idx, out_valid, n_edges + jnp.sum(keep.astype(jnp.int32))), None
+        return (labels, out_idx, out_valid, n_edges + jnp.sum(keep, dtype=jnp.int32)), None
 
     state = (
         iota,
@@ -840,7 +840,7 @@ def boruvka_strip_jax(eu, ev, ew, evalid, sids, SW, smask, n: int):
         slot = jnp.where(keep, jnp.minimum(slot, n - 1), n)
         out_pay = out_pay.at[slot].set(pay)
         out_ok = out_ok.at[slot].set(keep)
-        return (lab, out_pay, out_ok, n_edges + jnp.sum(keep.astype(jnp.int32))), None
+        return (lab, out_pay, out_ok, n_edges + jnp.sum(keep, dtype=jnp.int32)), None
 
     state = (
         iota,

@@ -175,7 +175,7 @@ def build_grid(pts, valid, tile: int = DEFAULT_TILE) -> GridIndex:
     return GridIndex(
         pts=pts_s, sq=sq, orig=perm, valid=valid_s,
         tile_lo=tlo, tile_hi=thi, lo=vlo, inv_w=inv_w, gdims=gdims,
-        r2=r2, n_valid=jnp.sum(valid.astype(jnp.int32)),
+        r2=r2, n_valid=jnp.sum(valid, dtype=jnp.int32),
     )
 
 
@@ -211,7 +211,7 @@ def _tile_slices(grid: GridIndex, tl, T: int):
     no scatter/gather of scattered rows, the blocking-invariance of the
     distance dot product only holds for contiguous row runs)."""
     d = grid.pts.shape[1]
-    ys = jax.lax.dynamic_slice(grid.pts, (tl * T, 0), (T, d))
+    ys = jax.lax.dynamic_slice(grid.pts, (tl * T, jnp.zeros((), tl.dtype)), (T, d))
     yy = jax.lax.dynamic_slice(grid.sq, (tl * T,), (T,))
     yv = jax.lax.dynamic_slice(grid.valid, (tl * T,), (T,))
     yo = jax.lax.dynamic_slice(grid.orig, (tl * T,), (T,))

@@ -487,6 +487,7 @@ def _sharded_mst_stage(rep, n_b, extent, n_valid, min_pts: int, mesh,
     static_argnames=(
         "min_pts", "use_ref", "method", "allow_single", "spatial", "with_w",
         "mesh", "mesh_axis",
+# trace-contract: offline_pipeline rules=f32,no-callbacks,pow2,no-dense
     ),
 )
 def _offline_pipeline(
@@ -744,6 +745,7 @@ def _unwrap_result(out, L: int, mcs: float, weights: np.ndarray) -> OfflineClust
     static_argnames=(
         "min_pts", "use_ref", "method", "allow_single", "spatial",
         "mesh", "mesh_axis",
+# trace-contract: device_table_pipeline rules=f32,no-callbacks,pow2,no-dense
     ),
 )
 def _device_table_pipeline(
@@ -774,7 +776,7 @@ def _device_table_pipeline(
         )
     Lp = LS.shape[0]
     ok = alive & (N > 0)
-    n_valid = jnp.sum(ok.astype(jnp.int32))
+    n_valid = jnp.sum(ok, dtype=jnp.int32)
     perm = jnp.argsort(jnp.where(ok, 0, 1), stable=True)
     LSs = (LS - LSe)[perm]
     SSs = (SS - SSe)[perm]
@@ -885,6 +887,7 @@ def incremental_update(
     )
 
 
+# trace-contract: incremental_pipeline rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("method", "allow_single"))
 def _incremental_pipeline(
     X, mst_u, mst_v, mst_raw, mst_valid, cd, alive, n_alive, mcs,

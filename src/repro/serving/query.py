@@ -119,6 +119,7 @@ def validate_query(X, dim: int) -> np.ndarray:
     return X
 
 
+# trace-contract: fused_query rules=f32,no-callbacks,pow2
 @functools.partial(jax.jit, static_argnames=("use_ref",))
 def _fused_query(xc, reps, labels, lam, lam_max, use_ref: bool):
     """assign → label gather → membership strength, one compiled program
@@ -135,6 +136,7 @@ def _fused_query(xc, reps, labels, lam, lam_max, use_ref: bool):
     return idx, lbl, dist, strength
 
 
+# trace-contract: fused_query_grid rules=f32,no-callbacks,pow2,no-dense
 @jax.jit
 def _fused_query_grid(xc, grid, labels, lam, lam_max):
     """Spatial-index variant of `_fused_query`: the snapshot entry carries

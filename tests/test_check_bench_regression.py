@@ -1,0 +1,117 @@
+"""scripts/check_bench_regression.py gate behavior (ISSUE 10 satellite).
+
+The CI failure mode being pinned down: a metric key missing from ONE of
+the two runs must (a) exit nonzero and (b) say which file and which
+metric, not dump an anonymous KeyError — a renamed benchmark field
+otherwise burns a debugging round-trip on a runner.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+_spec = importlib.util.spec_from_file_location(
+    "check_bench_regression", ROOT / "scripts" / "check_bench_regression.py"
+)
+cbr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cbr)
+
+# a value that satisfies every gate kind in METRICS: above MIN_BASELINE_MS,
+# above every floor (≤ 2.0), below every ceiling (≥ 4.0)
+OK_VALUE = 3.0
+
+
+def _set(doc, path, value):
+    node = doc
+    for i, key in enumerate(path[:-1]):
+        nxt = path[i + 1]
+        if isinstance(key, int):
+            while len(node) <= key:
+                node.append([] if isinstance(nxt, int) else {})
+            node = node[key]
+        else:
+            node = node.setdefault(key, [] if isinstance(nxt, int) else {})
+    last = path[-1]
+    if isinstance(last, int):
+        while len(node) <= last:
+            node.append(None)
+        node[last] = value
+    else:
+        node[last] = value
+
+
+def write_run(dirpath, value=OK_VALUE, mutate=None):
+    """A complete benchmark directory derived from METRICS itself."""
+    docs = {}
+    for fname, path, _kind in cbr.METRICS:
+        _set(docs.setdefault(fname, {}), path, value)
+    if mutate:
+        mutate(docs)
+    dirpath.mkdir(exist_ok=True)
+    for fname, doc in docs.items():
+        (dirpath / fname).write_text(json.dumps(doc))
+    return dirpath
+
+
+def run_gate(tmp_path, base_mutate=None, fresh_mutate=None, fresh_value=OK_VALUE):
+    base = write_run(tmp_path / "base", mutate=base_mutate)
+    fresh = write_run(tmp_path / "fresh", value=fresh_value, mutate=fresh_mutate)
+    return cbr.main(
+        ["--baseline", str(base), "--fresh", str(fresh), "--tolerance", "1.5"]
+    )
+
+
+class TestGate:
+    def test_identical_runs_pass(self, tmp_path, capsys):
+        assert run_gate(tmp_path) == 0
+        assert "all within" in capsys.readouterr().out
+
+    def test_regression_fails(self, tmp_path, capsys):
+        assert run_gate(tmp_path, fresh_value=100.0) == 1
+        assert "REGRESSION" in capsys.readouterr().out
+
+
+class TestMissingMetric:
+    def test_missing_key_names_metric_and_file(self, tmp_path, capsys):
+        def drop(docs):
+            del docs["fig3_dynamic.json"]["offline_recluster_ms"]
+
+        rc = run_gate(tmp_path, fresh_mutate=drop)
+        out = capsys.readouterr()
+        assert rc == 1
+        assert "MISSING (fresh)" in out.out
+        # stderr names the offending file AND the dotted metric path
+        assert "fresh" in out.err and "fig3_dynamic.json" in out.err
+        assert "'offline_recluster_ms'" in out.err
+
+    def test_missing_file_names_side(self, tmp_path, capsys):
+        def drop_file(docs):
+            del docs["fig9_service.json"]
+
+        rc = run_gate(tmp_path, base_mutate=drop_file)
+        out = capsys.readouterr()
+        assert rc == 1
+        assert "MISSING (baseline)" in out.out
+        assert "base" in out.err and "fig9_service.json" in out.err
+
+    def test_dig_into_scalar_is_reported_not_raised(self, tmp_path, capsys):
+        # a benchmark refactor turned the "query" subtree into a scalar:
+        # dig() raises TypeError, which must surface as a finding
+        def flatten(docs):
+            docs["fig5_latency.json"]["query"] = 5.0
+
+        rc = run_gate(tmp_path, fresh_mutate=flatten)
+        out = capsys.readouterr()
+        assert rc == 1
+        assert "MISSING (fresh)" in out.out
+        assert "TypeError" in out.err or "missing" in out.err
+
+    def test_unparsable_json_is_reported(self, tmp_path, capsys):
+        base = write_run(tmp_path / "base")
+        fresh = write_run(tmp_path / "fresh")
+        (fresh / "fig8_streaming.json").write_text("{not json")
+        rc = cbr.main(["--baseline", str(base), "--fresh", str(fresh)])
+        out = capsys.readouterr()
+        assert rc == 1
+        assert "unparsable JSON" in out.err

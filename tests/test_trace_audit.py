@@ -1,0 +1,248 @@
+"""jaxpr-audit gate (tools/audit) — ISSUE 10 acceptance.
+
+The load-bearing assertions: a deliberately seeded f64 cast, a dense
+(L, L) intermediate on a pruned lattice point, an unpadded raw size, and
+an extra recompile signature must each FAIL the gate; the shipped tree's
+own registry must pass it.  Seeded entries run through the real
+``run_audit`` driver against a scratch repo root that carries their
+``# trace-contract:`` declarations, so finding anchoring, rule
+dispatch, and exit codes are all exercised end-to-end.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from tools.audit import contracts
+from tools.audit import digest as digest_mod
+from tools.audit.cli import render_json, run_audit
+from tools.audit.registry import AUDITED_MODULES, EntrySpec, LatticePoint, build_registry
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# scratch-root declarations: one line per seeded entry (line numbers
+# matter — findings must anchor to them)
+SEEDED_DECLS = """\
+# trace-contract: seeded_f64 rules=f32,no-callbacks
+# trace-contract: seeded_dense rules=no-dense
+# trace-contract: seeded_churn rules=pow2
+# trace-contract: seeded_leak rules=pow2
+# trace-contract: seeded_clean rules=f32,no-callbacks,pow2
+"""
+
+
+@pytest.fixture
+def seeded_root(tmp_path):
+    """A scratch repo root carrying every audited module path, with the
+    seeded declarations in the first one."""
+    for rel in AUDITED_MODULES:
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("")
+    (tmp_path / AUDITED_MODULES[0]).write_text(SEEDED_DECLS)
+    return tmp_path
+
+
+def _spec(name, *points):
+    return EntrySpec(name=name, module=AUDITED_MODULES[0], points=tuple(points))
+
+
+def _audit(root, spec, **kw):
+    kw.setdefault("golden_dir", None)
+    kw.setdefault("baseline_path", None)
+    return run_audit([spec], root=root, **kw)
+
+
+def _point(fn, arg, *, label="L64", key=(64,), **kw):
+    return LatticePoint(
+        label=label, statics_key=key, build=lambda: jax.make_jaxpr(fn)(arg), **kw
+    )
+
+
+class TestSeededViolations:
+    def test_f64_cast_fails_the_gate(self, seeded_root):
+        # invisible under the shipped x64-off config — the scoped-x64
+        # probe must surface it
+        def fn(x):
+            return x.astype(jnp.float64).sum()
+
+        spec = _spec(
+            "seeded_f64", _point(fn, jnp.ones((64,), jnp.float32), x64=True)
+        )
+        res = _audit(seeded_root, spec)
+        assert res.exit_code == 1
+        (f,) = [f for f in res.new if f.code == "RPL501"]
+        assert "float64" in f.message
+        # anchored to the declaration line in the audited module
+        assert f.path == AUDITED_MODULES[0] and f.line == 1
+
+    def test_dense_LL_intermediate_fails_the_gate(self, seeded_root):
+        def fn(x):
+            return (x[:, None] - x[None, :]).sum()  # materializes (64, 64)
+
+        spec = _spec(
+            "seeded_dense",
+            _point(fn, jnp.ones((64,), jnp.float32), dense_dim=64),
+        )
+        res = _audit(seeded_root, spec)
+        assert res.exit_code == 1
+        (f,) = [f for f in res.new if f.code == "RPL504"]
+        assert "dense (L, L)" in f.message and f.line == 2
+
+    def test_extra_recompile_signature_fails_the_gate(self, seeded_root):
+        # two raw sizes claim the same bucket but were never padded:
+        # distinct jaxprs under one statics_key = recompile churn
+        def mk(n):
+            return _point(
+                lambda x: (x * 2.0).sum(),
+                jnp.ones((n,), jnp.float32),
+                label=f"raw{n}",
+                key=("bucket64",),
+            )
+
+        res = _audit(seeded_root, _spec("seeded_churn", mk(48), mk(64)))
+        assert res.exit_code == 1
+        (f,) = [f for f in res.new if f.code == "RPL505"]
+        assert "recompile churn" in f.message
+        assert "raw48" in f.message and "raw64" in f.message
+
+    def test_unpadded_raw_size_fails_the_gate(self, seeded_root):
+        spec = _spec(
+            "seeded_leak",
+            _point(
+                lambda x: x + 1.0,
+                jnp.ones((48,), jnp.float32),
+                label="raw48",
+                banned_dims=(48,),
+            ),
+        )
+        res = _audit(seeded_root, spec)
+        assert res.exit_code == 1
+        (f,) = [f for f in res.new if f.code == "RPL503"]
+        assert "raw size 48" in f.message
+
+    def test_clean_entry_passes(self, seeded_root):
+        spec = _spec(
+            "seeded_clean",
+            _point(lambda x: (x + 1.0).sum(), jnp.ones((64,), jnp.float32), x64=True),
+        )
+        res = _audit(seeded_root, spec)
+        assert res.new == [] and res.errors == [] and res.exit_code == 0
+
+    def test_unregistered_declaration_is_an_error(self, seeded_root):
+        # spec name with no # trace-contract: anywhere → exit 2
+        spec = _spec("nonexistent_entry", _point(lambda x: x, jnp.ones(4)))
+        res = _audit(seeded_root, spec)
+        assert res.exit_code == 2
+        assert any("nonexistent_entry" in e for e in res.errors)
+
+
+class TestRegistryRoundTrip:
+    def test_registry_matches_declarations_exactly(self):
+        decls, _ctxs, errors = contracts.collect(REPO_ROOT, AUDITED_MODULES)
+        assert errors == []
+        specs = build_registry()
+        assert {s.name for s in specs} == set(decls)
+        for s in specs:
+            assert decls[s.name].path == s.module
+            assert s.points, f"{s.name}: empty lattice"
+
+    def test_every_entry_declares_core_rules(self):
+        decls, _, _ = contracts.collect(REPO_ROOT, AUDITED_MODULES)
+        for name, d in decls.items():
+            assert d.has("f32") and d.has("no-callbacks") and d.has("pow2"), name
+
+    def test_malformed_rule_is_a_contract_error(self, tmp_path):
+        p = tmp_path / "m.py"
+        p.write_text("# trace-contract: broken rules=f32,warp-speed\n")
+        with pytest.raises(contracts.ContractError, match="warp-speed"):
+            contracts.parse_file(p, "m.py")
+
+
+class TestGoldenDigests:
+    DIG = {"e": {"p1": {"primitives": {"add": 2}, "outputs": ["float32[64]"]}}}
+
+    def test_round_trip_no_drift(self, tmp_path):
+        digest_mod.write_all(tmp_path, self.DIG, "0.0-test")
+        drift, _notes = digest_mod.compare_all(tmp_path, self.DIG, "0.0-test")
+        assert drift == []
+
+    def test_histogram_change_is_drift(self, tmp_path):
+        digest_mod.write_all(tmp_path, self.DIG, "0.0-test")
+        mutated = {"e": {"p1": {"primitives": {"add": 3}, "outputs": ["float32[64]"]}}}
+        drift, _ = digest_mod.compare_all(tmp_path, mutated, "0.0-test")
+        assert drift and "e" in drift[0] and "add" in "".join(drift)
+
+    def test_version_mismatch_skips_strict_compare(self, tmp_path):
+        digest_mod.write_all(tmp_path, self.DIG, "0.0-test")
+        mutated = {"e": {"p1": {"primitives": {"mul": 1}, "outputs": []}}}
+        drift, notes = digest_mod.compare_all(tmp_path, mutated, "9.9-other")
+        assert drift == []
+        assert any("9.9-other" in n or "jax" in n for n in notes)
+
+    def test_drift_surfaces_as_rpl507_finding(self, seeded_root, tmp_path):
+        gdir = tmp_path / "golden"
+
+        def spec_with(fn):
+            return _spec("seeded_clean", _point(fn, jnp.ones((64,), jnp.float32)))
+
+        res = _audit(
+            seeded_root, spec_with(lambda x: (x + 1.0).sum()),
+            golden_dir=gdir, update_golden=True,
+        )
+        assert res.exit_code == 0
+        # same entry, different lowering → digest drift, not silence
+        res2 = _audit(
+            seeded_root, spec_with(lambda x: (x * x + 1.0).sum()), golden_dir=gdir
+        )
+        assert res2.exit_code == 1
+        (f,) = [f for f in res2.new if f.code == "RPL507"]
+        assert "digest drift" in f.message
+
+
+class TestJsonFormat:
+    def test_schema(self, seeded_root):
+        def fn(x):
+            return x.astype(jnp.float64).sum()
+
+        res = _audit(
+            seeded_root,
+            _spec("seeded_f64", _point(fn, jnp.ones((64,), jnp.float32), x64=True)),
+        )
+        doc = json.loads(render_json(res))
+        assert doc["tool"] == "jaxpr-audit"
+        assert doc["exit_code"] == 1
+        f = doc["findings"][0]
+        assert {"path", "line", "col", "code", "message", "text", "status"} <= set(f)
+        assert f["status"] == "new"
+        assert doc["summary"]["entries"] == 1 and doc["summary"]["new"] == 1
+
+
+class TestLiveTree:
+    def test_shipped_entries_are_clean(self):
+        # cheap subset in-process (mesh points need 8 devices → CLI/slow
+        # test below covers them); goldens + baseline must both hold
+        res = run_audit(root=REPO_ROOT, select={"fused_query", "flat_insert"})
+        assert res.errors == []
+        assert res.new == [], [f.render() for f in res.new]
+        assert res.exit_code == 0
+
+    @pytest.mark.slow
+    def test_cli_full_audit_clean_json(self):
+        env = dict(os.environ, PYTHONPATH="src")
+        env.pop("XLA_FLAGS", None)  # the CLI forces its own 8-device flag
+        r = subprocess.run(
+            [sys.executable, "-m", "tools.audit", "--format=json"],
+            capture_output=True, text=True, timeout=600, cwd=REPO_ROOT, env=env,
+        )
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        doc = json.loads(r.stdout)
+        assert doc["summary"]["new"] == 0 and doc["errors"] == []
+        # the whole point of the CLI device flag: mesh 1/2/8 all trace
+        assert doc["summary"]["skipped_points"] == 0

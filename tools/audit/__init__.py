@@ -1,0 +1,71 @@
+"""jaxpr-audit: abstract-trace contract analysis over the jit pipelines.
+
+Where ``tools/lint`` checks DESIGN.md contracts at the *source-text*
+level, this package checks what actually binds: the jaxprs.  Every
+registered jit entry point (``tools/audit/registry.py``) is abstractly
+traced — ``jax.make_jaxpr`` over ``ShapeDtypeStruct``-shaped inputs, no
+data execution, CPU-only — across its declared (L-bucket × batch-bucket
+× backend × mesh-shape) lattice, and RPL5xx rule families run over the
+resulting equations:
+
+  RPL500  registry / ``# trace-contract:`` declaration mismatch, or an
+          entry point that fails to trace at a declared lattice point
+  RPL501  float64 / complex128 avals inside a device trace (probed under
+          scoped ``enable_x64`` so silently-canonicalized f64 requests
+          become visible)
+  RPL502  host-callback / transfer primitives (``pure_callback``,
+          ``debug_callback``, ``io_callback``, ``device_put``, …) inside
+          jitted code
+  RPL503  non-pow-2 intermediate dims where the contract declares padded
+          pow-2 buckets (``+1`` sentinel slots and ``M = Lp - 1`` merge
+          rounds are tolerated)
+  RPL504  dense-intermediate budget: an ``(L, L)`` aval inside a trace
+          whose lattice point is spatial / pruned / sharded
+  RPL505  recompile churn: distinct trace signatures across the lattice
+          must equal the declared bucket count (raw sizes that bucket to
+          the same padded shape must produce byte-identical jaxprs)
+  RPL506  shard_map / mesh divisibility: sharded entries must trace at
+          mesh shapes 1, 2 and 8
+  RPL507  golden lowering-digest drift vs ``tools/audit/golden/``
+
+Findings anchor to the entry point's ``# trace-contract:`` declaration
+line, and reuse repro-lint's finding / suppression / baseline machinery
+(``tools/lint/framework.py``): the usual ``# repro-lint: disable=RPL50x``
+comments and ``tools/audit/baseline.txt`` grandfathering apply.
+
+Declaring a trace contract
+--------------------------
+
+Each registered entry point carries a one-line declaration in a comment
+directly above (or on) its ``def`` line::
+
+    # trace-contract: offline_pipeline rules=f32,no-callbacks,pow2
+    @functools.partial(jax.jit, static_argnames=(...))
+    def _offline_pipeline(...):
+
+The name must match a ``tools/audit/registry.py`` entry (the registry
+holds the lattice and the argument builders — things a comment cannot
+express); ``rules=`` lists the contract families the entry opts into:
+
+  ``f32``           RPL501 applies
+  ``no-callbacks``  RPL502 applies
+  ``pow2``          RPL503 applies (entry pads to pow-2 buckets)
+  ``no-dense``      RPL504 applies to spatial / sharded lattice points
+
+RPL505 (churn) and RPL506 (mesh) always apply when the registry declares
+multiple raw sizes per bucket or mesh axes.  A registered entry with no
+declaration — or a declaration with no registry entry — is RPL500.
+
+Golden digests
+--------------
+
+``tools/audit/golden/<entry>.json`` records, per lattice point, the
+primitive histogram and output-shape signature of the trace (not raw
+HLO).  Regenerate after a *reviewed* lowering change with::
+
+    python -m tools.audit --update-golden
+
+Digest comparison is strict only when the running jax version matches
+``golden/_meta.json``; on a version mismatch the comparison downgrades
+to a stderr note (regenerate goldens when bumping jax).
+"""

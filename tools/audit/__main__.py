@@ -1,0 +1,5 @@
+import sys
+
+from tools.audit.cli import main
+
+sys.exit(main())

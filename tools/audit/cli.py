@@ -1,0 +1,298 @@
+"""Command-line driver: ``python -m tools.audit``.
+
+Exit codes mirror ``tools.lint``:
+  0  clean (no findings beyond the committed baseline)
+  1  new findings (including RPL507 golden-digest drift)
+  2  usage / registry / declaration errors, or baseline drift
+
+The driver forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+*before* importing jax so the mesh-1/2/8 lattice points trace on a
+CPU-only box.  When embedded in a process that already imported jax
+with fewer devices (the test suite), mesh points above the device count
+are skipped and reported in the summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+DEFAULT_BASELINE = "tools/audit/baseline.txt"
+DEFAULT_GOLDEN = "tools/audit/golden"
+_DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+
+
+@dataclass
+class AuditResult:
+    new: list = field(default_factory=list)  # Finding
+    grandfathered: list = field(default_factory=list)  # Finding
+    stale: list = field(default_factory=list)  # BaselineEntry
+    errors: list[str] = field(default_factory=list)
+    notes: list[str] = field(default_factory=list)
+    n_entries: int = 0
+    n_traces: int = 0
+    n_skipped: int = 0
+    elapsed: float = 0.0
+    digests: dict[str, dict] = field(default_factory=dict)
+
+    @property
+    def exit_code(self) -> int:
+        if self.errors or self.stale:
+            return 2
+        return 1 if self.new else 0
+
+
+def run_audit(
+    specs=None,
+    *,
+    root: str | Path = ".",
+    golden_dir: str | Path | None = DEFAULT_GOLDEN,
+    update_golden: bool = False,
+    baseline_path: str | Path | None = DEFAULT_BASELINE,
+    update_baseline: bool = False,
+    select: set[str] | None = None,
+) -> AuditResult:
+    """Trace every entry's lattice, run the RPL5xx rules, gate digests.
+
+    ``specs=None`` audits the full registry (and enables the orphan
+    golden check); an explicit subset skips it.  Importable and callable
+    in-process — the seeded-violation tests feed hand-built EntrySpecs.
+    """
+    src_dir = (Path(root) / "src").resolve()
+    if src_dir.exists() and str(src_dir) not in sys.path:
+        sys.path.insert(0, str(src_dir))
+
+    import jax
+
+    from tools.audit import contracts, digest as digest_mod, rules
+    from tools.audit.registry import AUDITED_MODULES, build_registry
+    from tools.audit.tracing import probe_x64, trace_point
+    from tools.lint import baseline as baseline_mod
+
+    t0 = time.time()
+    root = Path(root)
+    result = AuditResult()
+    full_registry = specs is None
+    if full_registry:
+        specs = build_registry()
+    if select:
+        specs = [s for s in specs if s.name in select]
+        full_registry = False
+
+    decls, ctxs, errors = contracts.collect(root, AUDITED_MODULES)
+    result.errors.extend(errors)
+    registered = {s.name for s in specs}
+    if full_registry:
+        for name in sorted(set(decls) - registered):
+            d = decls[name]
+            result.errors.append(
+                f"{d.path}:{d.line}: RPL500 trace-contract {name!r} has no "
+                f"tools/audit/registry.py entry"
+            )
+    for spec in specs:
+        if spec.name not in decls:
+            result.errors.append(
+                f"{spec.module}: RPL500 registry entry {spec.name!r} has no "
+                f"# trace-contract: declaration"
+            )
+    if result.errors:
+        result.elapsed = time.time() - t0
+        return result
+
+    n_devices = len(jax.devices())
+    findings = []
+    for spec in specs:
+        decl = decls[spec.name]
+        results = []
+        x64_results: dict[str, list | str] = {}
+        for point in spec.points:
+            if point.min_devices > n_devices:
+                result.n_skipped += 1
+                result.notes.append(
+                    f"{spec.name}[{point.label}] skipped: needs "
+                    f"{point.min_devices} devices, have {n_devices}"
+                )
+                continue
+            result.n_traces += 1
+            res = trace_point(
+                point.build,
+                label=point.label,
+                statics_key=point.statics_key,
+                dense_dim=point.dense_dim,
+                banned_dims=point.banned_dims,
+            )
+            results.append(res)
+            if point.x64 and decl.has("f32") and not res.error:
+                result.n_traces += 1
+                x64_results[point.label] = probe_x64(point.build, label=point.label)
+        result.n_entries += 1
+        findings.extend(rules.run_rules(spec, decl, results, x64_results))
+        result.digests[spec.name] = digest_mod.digest_entry(results)
+
+    if golden_dir is not None:
+        gdir = Path(golden_dir) if Path(golden_dir).is_absolute() else root / golden_dir
+        if update_golden:
+            digest_mod.write_all(gdir, result.digests, jax.__version__)
+            result.notes.append(
+                f"golden digests regenerated for {len(result.digests)} entr"
+                f"{'y' if len(result.digests) == 1 else 'ies'} (jax {jax.__version__})"
+            )
+        else:
+            digests = dict(result.digests)
+            if not full_registry:
+                # subset run: only compare entries we actually traced
+                digests = {
+                    k: v for k, v in digests.items() if digest_mod.golden_path(gdir, k).exists()
+                }
+            drift, notes = digest_mod.compare_all(gdir, digests, jax.__version__)
+            result.notes.extend(notes)
+            if not full_registry:
+                drift = [d for d in drift if "no longer registered" not in d]
+            for line in drift:
+                entry = line.split("[", 1)[0].split(":", 1)[0]
+                spec = next((s for s in specs if s.name == entry), None)
+                decl = decls.get(entry)
+                if decl is not None:
+                    from tools.lint.framework import Finding
+
+                    findings.append(
+                        Finding(
+                            path=decl.path,
+                            line=decl.line,
+                            col=1,
+                            code="RPL507",
+                            message=f"golden lowering-digest drift: {line}",
+                            text=decl.text,
+                        )
+                    )
+                else:
+                    result.errors.append(f"RPL507 golden digest drift: {line}")
+
+    # suppression comments next to the declarations
+    kept = []
+    for f in findings:
+        ctx = ctxs.get(f.path)
+        if ctx is not None and ctx.is_suppressed(f):
+            continue
+        kept.append(f)
+
+    if baseline_path is None:
+        result.new = sorted(kept)
+        result.elapsed = time.time() - t0
+        return result
+    bpath = Path(baseline_path) if Path(baseline_path).is_absolute() else root / baseline_path
+    if update_baseline:
+        baseline_mod.write(bpath, kept)
+        result.grandfathered = sorted(kept)
+        result.elapsed = time.time() - t0
+        return result
+    try:
+        entries = baseline_mod.load(bpath)
+    except baseline_mod.BaselineError as e:
+        result.errors.append(str(e))
+        result.elapsed = time.time() - t0
+        return result
+    result.errors.extend(baseline_mod.check_drift(entries, root))
+    result.new, result.grandfathered, result.stale = baseline_mod.partition(kept, entries)
+    result.elapsed = time.time() - t0
+    return result
+
+
+def render_json(result: AuditResult) -> str:
+    """Shared CI-artifact schema (same shape as ``tools.lint --format=json``)."""
+    findings = [dict(dataclasses.asdict(f), status="new") for f in result.new]
+    findings += [dict(dataclasses.asdict(f), status="baselined") for f in result.grandfathered]
+    return json.dumps(
+        {
+            "tool": "jaxpr-audit",
+            "findings": findings,
+            "errors": result.errors,
+            "stale_baseline": [dataclasses.asdict(e) for e in result.stale],
+            "summary": {
+                "entries": result.n_entries,
+                "traces": result.n_traces,
+                "skipped_points": result.n_skipped,
+                "new": len(result.new),
+                "baselined": len(result.grandfathered),
+                "elapsed_s": round(result.elapsed, 2),
+            },
+            "exit_code": result.exit_code,
+        },
+        indent=1,
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.audit",
+        description="jaxpr-audit: abstract-trace contract analysis over the jit pipelines",
+    )
+    ap.add_argument("--root", default=".", help="repo root")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--golden", default=DEFAULT_GOLDEN)
+    ap.add_argument("--no-golden", action="store_true", help="skip digest comparison")
+    ap.add_argument(
+        "--update-golden",
+        action="store_true",
+        help="regenerate tools/audit/golden/ from the current lowerings",
+    )
+    ap.add_argument("--entries", default=None, help="comma-separated entry names")
+    ap.add_argument("--list-entries", action="store_true")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    args = ap.parse_args(argv)
+
+    # must precede the first jax import for the mesh-8 lattice points
+    os.environ.setdefault("XLA_FLAGS", _DEVICE_FLAG)
+    if _DEVICE_FLAG not in os.environ["XLA_FLAGS"]:
+        os.environ["XLA_FLAGS"] += f" {_DEVICE_FLAG}"
+
+    if args.list_entries:
+        from tools.audit.registry import build_registry
+
+        for spec in build_registry():
+            points = ", ".join(p.label for p in spec.points)
+            print(f"{spec.name:24s} {spec.module}  [{points}]")
+        return 0
+
+    select = None
+    if args.entries:
+        select = {e.strip() for e in args.entries.split(",") if e.strip()}
+    result = run_audit(
+        root=args.root,
+        golden_dir=None if args.no_golden else args.golden,
+        update_golden=args.update_golden,
+        baseline_path=None if args.no_baseline else args.baseline,
+        update_baseline=args.update_baseline,
+        select=select,
+    )
+
+    if args.format == "json":
+        print(render_json(result))
+    else:
+        for f in result.new:
+            print(f.render())
+    for err in result.errors:
+        print(f"error: {err}", file=sys.stderr)
+    for e in result.stale:
+        print(f"stale baseline entry (drifted or fixed): {e.render()}", file=sys.stderr)
+    for note in result.notes:
+        print(f"note: {note}", file=sys.stderr)
+    print(
+        f"{result.n_entries} entries, {result.n_traces} traces "
+        f"({result.n_skipped} points skipped), {len(result.new)} new finding(s), "
+        f"{len(result.grandfathered)} baselined, {result.elapsed:.1f}s",
+        file=sys.stderr,
+    )
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

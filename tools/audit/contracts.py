@@ -1,0 +1,101 @@
+"""``# trace-contract:`` declaration parsing.
+
+Declarations are one-line comments next to each registered jit entry
+point (see the package docstring for the format).  The audit anchors
+every RPL5xx finding to the declaration line, which is what makes
+repro-lint's suppression comments and baseline matching work unchanged.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from tools.lint.framework import FileContext
+
+CONTRACT_RE = re.compile(r"#\s*trace-contract:\s*(?P<name>[A-Za-z0-9_.-]+)(?P<rest>[^#]*)")
+_KV_RE = re.compile(r"(?P<key>[A-Za-z0-9_-]+)=(?P<val>[A-Za-z0-9_,.-]+)")
+
+KNOWN_RULES = frozenset({"f32", "no-callbacks", "pow2", "no-dense"})
+
+
+@dataclass(frozen=True)
+class Declaration:
+    """One ``# trace-contract:`` line, parsed."""
+
+    name: str
+    path: str  # repo-relative posix path
+    line: int
+    text: str  # stripped source line (baseline anchor)
+    rules: frozenset[str] = field(default_factory=frozenset)
+
+    def has(self, rule: str) -> bool:
+        return rule in self.rules
+
+
+class ContractError(Exception):
+    """Malformed declaration — reported as RPL500 by the driver."""
+
+
+def parse_file(path: Path, rel: str) -> tuple[list[Declaration], FileContext]:
+    """Return declarations plus the FileContext used for suppressions."""
+    ctx = FileContext(path, rel, path.read_text())
+    decls: list[Declaration] = []
+    for lineno, raw in enumerate(ctx.lines, start=1):
+        m = CONTRACT_RE.search(raw)
+        if not m:
+            continue
+        rules: frozenset[str] = frozenset()
+        for kv in _KV_RE.finditer(m.group("rest")):
+            key, val = kv.group("key"), kv.group("val")
+            if key == "rules":
+                got = frozenset(v for v in val.split(",") if v)
+                unknown = got - KNOWN_RULES
+                if unknown:
+                    raise ContractError(
+                        f"{rel}:{lineno}: unknown trace-contract rule(s): "
+                        f"{', '.join(sorted(unknown))}"
+                    )
+                rules = got
+            else:
+                raise ContractError(f"{rel}:{lineno}: unknown trace-contract key: {key!r}")
+        decls.append(
+            Declaration(
+                name=m.group("name"),
+                path=rel,
+                line=lineno,
+                text=raw.strip(),
+                rules=rules,
+            )
+        )
+    return decls, ctx
+
+
+def collect(
+    root: Path, rels: list[str]
+) -> tuple[dict[str, Declaration], dict[str, FileContext], list[str]]:
+    """Parse every audited module; return (name → decl, rel → ctx, errors)."""
+    decls: dict[str, Declaration] = {}
+    ctxs: dict[str, FileContext] = {}
+    errors: list[str] = []
+    for rel in rels:
+        path = root / rel
+        if not path.exists():
+            errors.append(f"{rel}: audited module missing")
+            continue
+        try:
+            found, ctx = parse_file(path, rel)
+        except ContractError as e:
+            errors.append(str(e))
+            continue
+        ctxs[rel] = ctx
+        for d in found:
+            if d.name in decls:
+                errors.append(
+                    f"{rel}:{d.line}: duplicate trace-contract name {d.name!r} "
+                    f"(first declared at {decls[d.name].path}:{decls[d.name].line})"
+                )
+                continue
+            decls[d.name] = d
+    return decls, ctxs, errors

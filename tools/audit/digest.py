@@ -1,0 +1,110 @@
+"""Golden lowering digests: primitive histogram + shape signature.
+
+One JSON file per audited entry under ``tools/audit/golden/``, plus
+``_meta.json`` recording the jax version the goldens were generated
+with.  Digests are deliberately *coarser* than raw HLO — a reviewable
+diff of "what primitives, how many, what comes out" — so formatting or
+var-naming churn never trips the gate, but a segment-sum silently
+lowering to per-element scatters does.
+
+Comparison is strict only when the running jax version matches the
+recorded one; across versions the lowering legitimately shifts, so the
+gate downgrades to a note and the goldens should be regenerated in the
+same change that bumps jax.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.audit.tracing import TraceResult
+
+META_NAME = "_meta.json"
+
+
+def digest_entry(results: list[TraceResult]) -> dict:
+    return {
+        r.label: r.digest()
+        for r in sorted(results, key=lambda r: r.label)
+        if not r.error and not r.skipped
+    }
+
+
+def golden_path(golden_dir: Path, entry: str) -> Path:
+    return golden_dir / f"{entry}.json"
+
+
+def load_meta(golden_dir: Path) -> dict:
+    p = golden_dir / META_NAME
+    if not p.exists():
+        return {}
+    return json.loads(p.read_text())
+
+
+def write_all(golden_dir: Path, digests: dict[str, dict], jax_version: str) -> None:
+    golden_dir.mkdir(parents=True, exist_ok=True)
+    for entry, digest in digests.items():
+        golden_path(golden_dir, entry).write_text(
+            json.dumps(digest, indent=1, sort_keys=True) + "\n"
+        )
+    (golden_dir / META_NAME).write_text(json.dumps({"jax_version": jax_version}, indent=1) + "\n")
+
+
+def _diff_hist(old: dict[str, int], new: dict[str, int]) -> list[str]:
+    out = []
+    for prim in sorted(set(old) | set(new)):
+        a, b = old.get(prim, 0), new.get(prim, 0)
+        if a != b:
+            out.append(f"{prim}: {a} → {b}")
+    return out
+
+
+def compare_entry(entry: str, golden: dict, current: dict) -> list[str]:
+    """Human-readable drift lines (empty = no drift)."""
+    drift: list[str] = []
+    for label in sorted(set(golden) | set(current)):
+        if label not in current:
+            drift.append(f"{entry}[{label}]: lattice point no longer traced")
+            continue
+        if label not in golden:
+            drift.append(f"{entry}[{label}]: new lattice point (regenerate goldens)")
+            continue
+        g, c = golden[label], current[label]
+        hist = _diff_hist(g.get("primitives", {}), c.get("primitives", {}))
+        if hist:
+            drift.append(f"{entry}[{label}]: primitive histogram drift — " + "; ".join(hist[:8]))
+        if g.get("outputs") != c.get("outputs"):
+            drift.append(
+                f"{entry}[{label}]: output shape signature drift — "
+                f"{g.get('outputs')} → {c.get('outputs')}"
+            )
+    return drift
+
+
+def compare_all(
+    golden_dir: Path, digests: dict[str, dict], jax_version: str
+) -> tuple[list[str], list[str]]:
+    """Return (drift, notes).  Drift is gating; notes are stderr-only."""
+    meta = load_meta(golden_dir)
+    if not meta:
+        return [], [
+            f"no golden digests at {golden_dir} — run `python -m tools.audit --update-golden`"
+        ]
+    if meta.get("jax_version") != jax_version:
+        return [], [
+            f"golden digests were generated with jax {meta.get('jax_version')}, "
+            f"running {jax_version}: digest comparison skipped (regenerate goldens "
+            f"alongside the jax bump)"
+        ]
+    drift: list[str] = []
+    for entry, current in sorted(digests.items()):
+        p = golden_path(golden_dir, entry)
+        if not p.exists():
+            drift.append(f"{entry}: no golden digest file ({p.name}) — regenerate goldens")
+            continue
+        drift.extend(compare_entry(entry, json.loads(p.read_text()), current))
+    known = {p.stem for p in golden_dir.glob("*.json")} - {Path(META_NAME).stem}
+    for orphan in sorted(known - set(digests)):
+        drift.append(f"{orphan}: golden digest exists but entry is no longer registered")
+    return drift, []

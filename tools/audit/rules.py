@@ -1,0 +1,192 @@
+"""RPL5xx rule families over per-entry trace results.
+
+Every finding anchors to the entry's ``# trace-contract:`` declaration
+line so repro-lint suppressions and the audit baseline apply; the
+message carries the lattice-point label and the offending primitive /
+shape / source location.
+"""
+
+from __future__ import annotations
+
+from tools.audit.contracts import Declaration
+from tools.audit.registry import EntrySpec
+from tools.audit.tracing import AvalHit, TraceResult, dim_ok_pow2
+
+# (L, L) avals sourced from the dense reference kernels are the
+# grandfathered comparison path (DESIGN.md's bit-exactness oracle), not
+# a pruned-pipeline leak
+DENSE_GRANDFATHERED = ("kernels/ref.py",)
+
+_MAX_DETAIL = 3  # offending sites quoted per finding message
+
+
+def _finding(decl: Declaration, code: str, message: str):
+    from tools.lint.framework import Finding
+
+    return Finding(
+        path=decl.path, line=decl.line, col=1, code=code, message=message, text=decl.text
+    )
+
+
+def _sites(hits: list[AvalHit]) -> str:
+    parts = [f"{h.primitive} {h.dtype}{list(h.shape)} @ {h.where}" for h in hits[:_MAX_DETAIL]]
+    extra = len(hits) - _MAX_DETAIL
+    if extra > 0:
+        parts.append(f"+{extra} more")
+    return "; ".join(parts)
+
+
+def check_trace_errors(spec: EntrySpec, decl: Declaration, results: list[TraceResult]):
+    for res in results:
+        if res.error:
+            yield _finding(
+                decl,
+                "RPL500",
+                f"{spec.name}[{res.label}] failed to trace: {res.error}",
+            )
+
+
+def check_f64(spec: EntrySpec, decl: Declaration, x64_results: dict[str, list[AvalHit] | str]):
+    if not decl.has("f32"):
+        return
+    for label, probe in sorted(x64_results.items()):
+        if isinstance(probe, str):
+            yield _finding(
+                decl,
+                "RPL501",
+                f"{spec.name}[{label}] does not trace under scoped x64 "
+                f"(int/f64 dtype mix baked into the program): {probe}",
+            )
+        elif probe:
+            yield _finding(
+                decl,
+                "RPL501",
+                f"{spec.name}[{label}] emits float64 avals under scoped x64 "
+                f"(an f64 request the shipped x64-off config silently casts): {_sites(probe)}",
+            )
+
+
+def check_callbacks(spec: EntrySpec, decl: Declaration, results: list[TraceResult]):
+    if not decl.has("no-callbacks"):
+        return
+    for res in results:
+        if res.callback_hits:
+            yield _finding(
+                decl,
+                "RPL502",
+                f"{spec.name}[{res.label}] traces host-callback/transfer "
+                f"primitives: {_sites(res.callback_hits)}",
+            )
+
+
+def check_pow2(spec: EntrySpec, decl: Declaration, results: list[TraceResult]):
+    if not decl.has("pow2"):
+        return
+    seen: set[int] = set()
+    for res in results:
+        leaks = []
+        for d in res.banned_dims:
+            if d in res.dims and d not in seen:
+                seen.add(d)
+                leaks.append(f"raw size {d} appears as a traced dim @ {res.dims[d]}")
+        if leaks:
+            detail = "; ".join(leaks[:_MAX_DETAIL])
+            yield _finding(
+                decl,
+                "RPL503",
+                f"{spec.name}[{res.label}] leaks an unpadded raw size into "
+                f"the traced shapes (bucket helper bypassed): {detail}",
+            )
+        bad = []
+        for dim, where in sorted(res.dims.items()):
+            if not dim_ok_pow2(dim, spec.pow2_floor) and dim not in seen:
+                seen.add(dim)
+                bad.append(f"dim {dim} @ {where}")
+        if bad:
+            detail = "; ".join(bad[:_MAX_DETAIL])
+            yield _finding(
+                decl,
+                "RPL503",
+                f"{spec.name}[{res.label}] has non-pow-2 bucket-scale "
+                f"intermediate dims (contract declares padded pow-2 buckets): {detail}",
+            )
+
+
+def check_dense(spec: EntrySpec, decl: Declaration, results: list[TraceResult]):
+    if not decl.has("no-dense"):
+        return
+    for res in results:
+        hits = [
+            h
+            for h in res.dense_hits
+            if not any(g in h.where for g in DENSE_GRANDFATHERED)
+        ]
+        if hits:
+            yield _finding(
+                decl,
+                "RPL504",
+                f"{spec.name}[{res.label}] materializes dense (L, L) "
+                f"intermediates on a pruned/sharded lattice point: {_sites(hits)}",
+            )
+
+
+def check_churn(spec: EntrySpec, decl: Declaration, results: list[TraceResult]):
+    ok = [r for r in results if not r.error and not r.skipped]
+    by_bucket: dict[tuple, dict[str, list[str]]] = {}
+    for res in ok:
+        by_bucket.setdefault(res.statics_key, {}).setdefault(res.signature, []).append(res.label)
+    for key, sigs in sorted(by_bucket.items()):
+        if len(sigs) > 1:
+            detail = "; ".join(
+                f"signature {sig} ← {', '.join(labels)}" for sig, labels in sorted(sigs.items())
+            )
+            yield _finding(
+                decl,
+                "RPL505",
+                f"{spec.name} recompile churn: lattice points bucketed "
+                f"together {list(key)} trace to {len(sigs)} distinct programs "
+                f"(raw size is leaking into the traced shapes): {detail}",
+            )
+    declared = len(by_bucket)
+    distinct = len({sig for sigs in by_bucket.values() for sig in sigs})
+    if distinct != declared and all(len(s) == 1 for s in by_bucket.values()):
+        # fewer programs than buckets: two buckets collapsed — the
+        # lattice declares a static axis that no longer changes the trace
+        yield _finding(
+            decl,
+            "RPL505",
+            f"{spec.name} recompile-churn gate: {distinct} distinct trace "
+            f"signatures across the lattice, but {declared} buckets declared",
+        )
+
+
+def check_mesh(spec: EntrySpec, decl: Declaration, results: list[TraceResult]):
+    for res in results:
+        if res.error and "mesh" in res.label:
+            yield _finding(
+                decl,
+                "RPL506",
+                f"{spec.name}[{res.label}] fails to trace at its declared "
+                f"mesh shape (shard_map aval divisibility): {res.error}",
+            )
+
+
+def run_rules(
+    spec: EntrySpec,
+    decl: Declaration,
+    results: list[TraceResult],
+    x64_results: dict[str, list[AvalHit] | str],
+):
+    mesh_errors = {r.label for r in results if r.error and "mesh" in r.label}
+    yield from (
+        f
+        for f in check_trace_errors(spec, decl, results)
+        # mesh-shape trace failures are RPL506, not generic RPL500
+        if not any(lbl in f.message for lbl in mesh_errors)
+    )
+    yield from check_f64(spec, decl, x64_results)
+    yield from check_callbacks(spec, decl, results)
+    yield from check_pow2(spec, decl, results)
+    yield from check_dense(spec, decl, results)
+    yield from check_churn(spec, decl, results)
+    yield from check_mesh(spec, decl, results)

@@ -9,6 +9,8 @@ Exit codes:
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -96,6 +98,29 @@ def lint_paths(
     return result
 
 
+def render_json(res: LintResult) -> str:
+    """Machine-readable findings document (shared schema with
+    ``tools.audit``) — the CI artifact format."""
+    findings = [dict(dataclasses.asdict(f), status="new") for f in res.new]
+    findings += [dict(dataclasses.asdict(f), status="baselined") for f in res.grandfathered]
+    return json.dumps(
+        {
+            "tool": "repro-lint",
+            "findings": findings,
+            "errors": res.errors,
+            "stale_baseline": [dataclasses.asdict(e) for e in res.stale],
+            "summary": {
+                "files": res.n_files,
+                "legacy_quarantined": res.n_legacy,
+                "new": len(res.new),
+                "baselined": len(res.grandfathered),
+            },
+            "exit_code": res.exit_code,
+        },
+        indent=1,
+    )
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m tools.lint",
@@ -120,6 +145,12 @@ def main(argv: list[str] | None = None) -> int:
         help="comma-separated rule codes to run (e.g. RPL101,RPL302)",
     )
     ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="json emits the machine-readable findings document CI archives",
+    )
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -137,12 +168,15 @@ def main(argv: list[str] | None = None) -> int:
         update_baseline=args.update_baseline,
         select=select,
     )
+    if args.format == "json":
+        print(render_json(res))
+    else:
+        for f in res.new:
+            print(f.render())
     for err in res.errors:
         print(f"error: {err}", file=sys.stderr)
     for e in res.stale:
         print(f"stale baseline entry (drifted or fixed): {e.render()}", file=sys.stderr)
-    for f in res.new:
-        print(f.render())
     if args.update_baseline:
         print(f"baseline updated: {len(res.grandfathered)} entr"
               f"{'y' if len(res.grandfathered) == 1 else 'ies'}")
